@@ -1,0 +1,42 @@
+"""Fig. 4: MoE attention (Q/K/V/O as experts) vs the MoE-FFN baseline.
+
+Paper claims: MoE attention *hurts* quality / is unstable; k top-1
+prototyping partially mitigates; deeper models with fewer experts behave
+better but still trail the baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_config, save_result, train_run, variant
+
+
+def run(steps=160, batch=16, seq=64):
+    base = bench_config(layers=2, d_model=96, d_ff=192, experts=8, vocab=512)
+    runs = {
+        "moe_ffn_baseline": base.replace_moe(top_k=1),
+        "moe_attention_top1": base.replace_moe(top_k=1, moe_attention=True),
+        "moe_attention_2top1": variant(base, "prototype", 2).replace_moe(
+            moe_attention=True),
+    }
+    # deeper, fewer experts (paper's right plot)
+    deep = bench_config(layers=4, d_model=96, d_ff=192, experts=4, vocab=512)
+    runs["deep_moe_attention_top1"] = deep.replace_moe(top_k=1, moe_attention=True)
+    runs["deep_moe_ffn_baseline"] = deep.replace_moe(top_k=1)
+    return {name: train_run(cfg, steps, batch, seq, lr=5e-3, log_every=20)
+            for name, cfg in runs.items()}
+
+
+def main():
+    out = run()
+    print("fig4,run,final_ce,diverged")
+    summary = {}
+    for name, logs in out.items():
+        ce = logs[-1]["ce"]
+        diverged = any(r["ce"] != r["ce"] or r["ce"] > 1e3 for r in logs)
+        summary[name] = {"final_ce": ce, "diverged": diverged}
+        print(f"fig4,{name},{ce:.4f},{diverged}")
+    save_result("fig4_moe_attention", {"curves": out, "summary": summary})
+    return summary
+
+
+if __name__ == "__main__":
+    main()

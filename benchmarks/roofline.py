@@ -1,0 +1,39 @@
+"""Roofline report: reads experiments/dryrun.json (written by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) three-term
+table for EXPERIMENTS.md S Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+
+
+def main(path=None):
+    path = path or os.path.join(RESULTS_DIR, "dryrun.json")
+    if not os.path.exists(path):
+        print("roofline,SKIPPED (run `python -m repro.launch.dryrun` first)")
+        return {}
+    with open(path) as f:
+        results = json.load(f)
+    print("roofline,cell,chips,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "dominant,model/hlo_flops,mfu_bound,mem_gb_per_dev,fits_16gb")
+    for key in sorted(results):
+        v = results[key]
+        if v.get("status") != "ok":
+            print(f"roofline,{key},ERROR,{v.get('error', '')[:80]}")
+            continue
+        rl = v["roofline"]
+        mem = v["memory"]["peak_bytes_per_device"] / 1e9
+        ratio = rl.get("useful_flops_ratio")
+        mfu = rl.get("mfu_bound")
+        print(f"roofline,{key},{v['chips']},{rl['t_compute']*1e3:.2f},"
+              f"{rl['t_memory']*1e3:.2f},{rl['t_collective']*1e3:.2f},"
+              f"{rl['dominant']},{0 if not ratio else round(ratio, 3)},"
+              f"{0 if not mfu else round(mfu, 3)},{mem:.2f},"
+              f"{v['memory']['fits_16gb']}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Run every paper-table/figure benchmark.  Prints ``name,key,value`` CSV
+lines and writes JSON artifacts to experiments/.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table2     # one
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = ["table1", "table2", "fig1", "fig3", "fig4", "fig6", "roofline"]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name in BENCHES:
+        if only and name != only:
+            continue
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        if name == "table1":
+            from benchmarks import table1_flops as m
+        elif name == "table2":
+            from benchmarks import table2_speed as m
+        elif name == "fig1":
+            from benchmarks import fig1_load_balance as m
+        elif name == "fig3":
+            from benchmarks import fig3_quality as m
+        elif name == "fig4":
+            from benchmarks import fig4_moe_attention as m
+        elif name == "fig6":
+            from benchmarks import fig6_scaling as m
+        else:
+            from benchmarks import roofline as m
+        m.main()
+        print(f"=== {name} done in {time.time() - t0:.1f}s ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table 1: FLOPs of top-k vs k top-1 routing at Capacity kx and 1x.
+
+Paper claim: with limited (1x) capacity, all strategies have ~equal
+compute FLOPs; with kx capacity, FLOPs grow with k.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_config, save_result, train_flops, variant
+
+STRATEGIES = [("topk", 1, "Top-1"), ("topk", 2, "Top-2"), ("topk", 4, "Top-4"),
+              ("prototype", 2, "2 Top-1"), ("prototype", 4, "4 Top-1")]
+
+
+def run(batch=4, seq=128):
+    base = bench_config()
+    rows = {}
+    for cap_mode, cap_name in [("k", "Capacity kx"), ("one", "Capacity 1x")]:
+        row = {}
+        for routing, k, label in STRATEGIES:
+            cfg = variant(base, routing, k, capacity_mode=cap_mode)
+            row[label] = train_flops(cfg, batch, seq) / 1e9
+        rows[cap_name] = row
+    return rows
+
+
+def main():
+    rows = run()
+    print("table1,strategy,gflops")
+    for cap, row in rows.items():
+        for label, g in row.items():
+            print(f"table1,{cap}|{label},{g:.3f}")
+    top1 = rows["Capacity kx"]["Top-1"]
+    # paper claims: kx capacity FLOPs grow with k ...
+    assert rows["Capacity kx"]["Top-4"] > 1.5 * top1
+    # ... and 1x capacity keeps all strategies within ~15% of Top-1
+    for label, g in rows["Capacity 1x"].items():
+        assert g < 1.4 * top1, (label, g, top1)
+    save_result("table1_flops", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: build an M6-T expert-prototyping MoE LM, train it on the
+synthetic clustered-bigram task, and sample from it.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig, TrainConfig
+from repro.data.pipeline import make_pipeline
+from repro.models.registry import get_family
+from repro.nn import count_params, init
+from repro.optim import make_optimizer, warmup_constant
+from repro.serving.engine import ServingEngine
+from repro.train.state import init_train_state
+from repro.train.trainer import make_train_step
+
+
+def main():
+    # an MoE LM with the paper's k top-1 expert prototyping: 8 experts in
+    # 2 prototypes, each routed top-1 -> quality of top-2, speed of top-1
+    cfg = ModelConfig(
+        name="quickstart", num_layers=2, d_model=96, num_heads=4,
+        num_kv_heads=4, d_ff=192, vocab_size=512, dtype="float32",
+        moe=MoEConfig(num_experts=8, routing="prototype", num_prototypes=2,
+                      group_size=256, capacity_factor=1.25),
+    )
+    fam = get_family(cfg)
+    print(f"params: {count_params(fam.specs(cfg)):,}")
+
+    tc = TrainConfig(optimizer="adamw", learning_rate=5e-3, warmup_steps=20)
+    params = init(fam.specs(cfg), jax.random.PRNGKey(0))
+    opt = make_optimizer(tc, warmup_constant(tc.learning_rate, tc.warmup_steps))
+    state = init_train_state(params, opt, tc.grad_compression)
+    step = jax.jit(make_train_step(cfg, tc, opt))
+    pipe = make_pipeline(cfg, batch=16, seq_len=64)
+
+    for i in range(100):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        state, m = step(state, batch)
+        if i % 20 == 0 or i == 99:
+            print(f"step {i:3d}  loss {float(m['loss']):.4f}  "
+                  f"c_v {float(jnp.mean(m['moe_cv'])):.3f}  "
+                  f"dropped {float(jnp.mean(m['moe_dropped_fraction'])):.3f}")
+
+    engine = ServingEngine(cfg, state.params, max_len=96)
+    prompts = jnp.asarray(pipe.batch_at(999)["tokens"][:2, :16])
+    toks, stats = engine.generate(prompts, num_tokens=16)
+    print("generated:", jnp.asarray(toks)[0].tolist())
+    print(f"decode: {stats['decode_tokens_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Config dataclasses shared by every architecture.
+
+A single :class:`ModelConfig` covers all assigned families; family-specific
+fields are ignored by families that do not use them.  Configs are plain
+frozen dataclasses so they hash/compare cleanly and can key jit caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts + expert-prototyping (M6-T) configuration."""
+
+    num_experts: int = 0                 # 0 => dense FFN
+    # Routing mode: "topk" (GShard/Switch sequential top-k, looping argmax)
+    # or "prototype" (M6-T k top-1 expert prototyping).
+    routing: str = "topk"
+    top_k: int = 1                       # k for topk routing
+    num_prototypes: int = 1              # Z for prototype routing
+    prototype_top_k: int = 1             # k' inside each prototype (paper: 1)
+    # Capacity convention (M6-T 3.2): "k" => C = k*T/N*gamma ; "one" => C = 1*T/N*gamma
+    capacity_mode: str = "k"
+    capacity_factor: float = 1.25        # gamma (paper Table 5)
+    aux_loss_coef: float = 0.01          # 0 disables the balancing loss
+    router_z_loss_coef: float = 0.0      # beyond-paper stability option
+    router_dtype: str = "float32"        # routers always f32 (stability)
+    normalize_gates: bool = False        # Fig. 8 uses raw softmax gates
+    group_size: int = 2048               # tokens per routing group (GShard "d")
+    combine_dtype: str = "auto"          # "auto": activation dtype (mesh-tf bf16)
+    # Execution path: "einsum" (paper-faithful GShard one-hot einsums),
+    # "gather" (optimized gather/scatter), "pallas" (grouped-GEMM kernel).
+    impl: str = "einsum"
+    moe_attention: bool = False          # M6-T 3.4 (negative result)
+    expert_axis: str = "model"           # mesh axis experts are sharded over
+
+    @property
+    def active_k(self) -> int:
+        if self.num_experts == 0:
+            return 0
+        if self.routing == "prototype":
+            return self.num_prototypes * self.prototype_top_k
+        return self.top_k
+
+    @property
+    def experts_per_prototype(self) -> int:
+        if self.routing != "prototype":
+            return self.num_experts
+        assert self.num_experts % self.num_prototypes == 0, (
+            f"num_experts={self.num_experts} not divisible by "
+            f"num_prototypes={self.num_prototypes}"
+        )
+        return self.num_experts // self.num_prototypes
+
+    def capacity(self, tokens_per_shard: int) -> int:
+        """Per-expert capacity C = k*T/N*gamma (Eq. 2), or 1x variant."""
+        k_eff = 1 if self.capacity_mode == "one" else max(self.active_k, 1)
+        c = int(k_eff * tokens_per_shard / max(self.num_experts, 1) * self.capacity_factor)
+        return max(c, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "decoder_lm"   # decoder_lm | encdec | xlstm | zamba | vlm | m6
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0            # 0 => d_model // num_heads
+    d_ff: int = 512              # dense FFN hidden (or per-expert hidden for MoE)
+    vocab_size: int = 1024
+    max_seq_len: int = 8192
+    # attention details
+    qk_norm: bool = False        # qwen3-style per-head RMSNorm on q,k
+    qkv_bias: bool = False       # qwen2.5-style bias on QKV
+    pos_embed: str = "rope"      # rope | learned (M6/BERT style)
+    rope_theta: float = 1e6
+    attn_logit_softcap: float = 0.0
+    # "auto": chunked online-softmax when S*T is large (O(S*block) memory),
+    # reference otherwise; "reference"/"chunked" force a path.
+    attention_impl: str = "auto"
+    attention_block: int = 512
+    # FFN
+    ffn_activation: str = "swiglu"   # swiglu | gelu | relu
+    # norms / embeddings
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # MoE
+    moe: MoEConfig = dataclasses.field(default_factory=MoEConfig)
+    moe_layer_period: int = 1    # apply MoE FFN every k-th layer (1 = all)
+    # enc-dec
+    num_encoder_layers: int = 0
+    # xLSTM
+    xlstm_slstm_period: int = 0  # every k-th block is sLSTM (0 = none/all-mLSTM)
+    # SSM / Mamba2 (zamba)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    zamba_shared_period: int = 6  # shared attn block applied every k mamba layers
+    # VLM / multimodal stubs
+    num_image_tokens: int = 0    # image/audio prefix embeddings (precomputed)
+    # numerics
+    dtype: str = "bfloat16"      # activation/compute dtype
+    param_dtype: str = "float32"
+    initializer_range: float = 0.02   # M6-T Table 5 (0.002 for 1T)
+    # distribution
+    remat: bool = True
+    scan_layers: bool = True
+    fsdp: bool = False           # shard params over data axis too (ZeRO-3 style)
+    # training details
+    dropout: float = 0.0         # paper uses 0.1; synthetic runs use 0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def weight_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def replace_moe(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, moe=dataclasses.replace(self.moe, **kw))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: what gets lowered and at what size."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 8e-5      # paper: AdamW 8e-5
+    optimizer: str = "adamw"         # adamw | adafactor (paper 1T: adafactor @5e-3)
+    warmup_steps: int = 500          # paper Table 5
+    weight_decay: float = 0.01
+    grad_clip_norm: float = 1.0
+    zero1: bool = True               # shard optimizer state over DP axis
+    grad_compression: str = "none"   # none | bf16 | int8
+    microbatches: int = 1            # grad accumulation
+    seed: int = 0

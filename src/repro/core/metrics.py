@@ -1,0 +1,31 @@
+"""Aggregation of per-layer MoE load-balance metrics (paper 3.1, Fig. 1)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+
+def merge_aux(aux_list: List[Dict]) -> Dict:
+    """Combine per-layer aux dicts: losses summed, metrics stacked."""
+    if not aux_list:
+        return {"moe_aux_loss": jnp.zeros((), jnp.float32),
+                "moe_z_loss": jnp.zeros((), jnp.float32)}
+    out: Dict = {}
+    keys = aux_list[0].keys()
+    for k in keys:
+        vals = [a[k] for a in aux_list]
+        if k.endswith("_loss"):
+            out[k] = sum(vals)
+        else:
+            out[k] = jnp.stack(vals)  # per-layer trace (e.g. cv per layer)
+    return out
+
+
+def empty_aux() -> Dict:
+    return {
+        "moe_aux_loss": jnp.zeros((), jnp.float32),
+        "moe_z_loss": jnp.zeros((), jnp.float32),
+        "moe_cv": jnp.zeros((), jnp.float32),
+        "moe_dropped_fraction": jnp.zeros((), jnp.float32),
+    }

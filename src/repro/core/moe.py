@@ -1,0 +1,177 @@
+"""The MoE FFN layer (paper Fig. 7) with three numerically-equivalent
+execution paths:
+
+* ``impl="einsum"``  — paper-faithful GShard one-hot einsum dispatch/combine
+  (`dispatch[GTEC] x tokens[GTM] -> [EGCM]`, expert FFN, combine back).
+  Under pjit the expert axis sharding induces the all-to-alls of Fig. 7.
+* ``impl="gather"``  — beyond-paper optimized path: scatter/gather token
+  movement, O(k*T*M) instead of O(T*E*C*M); same outputs.
+* ``impl="pallas"``  — gather dispatch + Pallas grouped-GEMM expert FFN
+  (`repro.kernels.moe_ffn`) for the compute hot-spot (the paper's appendix
+  attributes ~98% of MoE-layer forward FLOPs to the two expert matmuls).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.routing import RoutingResult, route
+from repro.distributed.sharding import shard
+from repro.nn import ParamSpec, truncated_normal_init
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def moe_ffn_specs(cfg: ModelConfig, d_model: Optional[int] = None):
+    m = cfg.moe
+    d = d_model or cfg.d_model
+    dff = cfg.d_ff
+    wdt = jnp.dtype(cfg.param_dtype)
+    init = truncated_normal_init(cfg.initializer_range)
+    if m.routing == "prototype":
+        router = ParamSpec(
+            (d, m.num_prototypes, m.experts_per_prototype),
+            jnp.float32, ("embed", None, "expert"), init,
+        )
+    else:
+        router = ParamSpec((d, m.num_experts), jnp.float32, ("embed", "expert"), init)
+    specs = {
+        "router": router,
+        "up": ParamSpec((m.num_experts, d, dff), wdt, ("expert", "embed", "mlp"), init),
+        "down": ParamSpec((m.num_experts, dff, d), wdt, ("expert", "mlp", "embed"), init),
+    }
+    if cfg.ffn_activation in ("swiglu", "geglu"):
+        specs["gate"] = ParamSpec((m.num_experts, d, dff), wdt, ("expert", "embed", "mlp"), init)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Grouping
+# ---------------------------------------------------------------------------
+
+def group_tokens(x: jax.Array, m: MoEConfig) -> Tuple[jax.Array, int]:
+    """(B,S,M) -> (G,T,M).  Group count is a divisor of B*S close to
+    B*S/group_size so capacity semantics stay per-group (GShard)."""
+    B, S, M = x.shape
+    total = B * S
+    target_groups = max(total // m.group_size, 1)
+    g = _largest_divisor_leq(total, target_groups)
+    return x.reshape(g, total // g, M), g
+
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    k = min(max(k, 1), n)
+    for g in range(k, 0, -1):
+        if n % g == 0:
+            return g
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN on dispatched buffers
+# ---------------------------------------------------------------------------
+
+def _expert_ffn(params, dispatched: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """dispatched: (E, X, M) -> (E, X, M) through each expert's FFN."""
+    dt = cfg.activation_dtype
+    up_w = params["up"].astype(dt)
+    down_w = params["down"].astype(dt)
+    if cfg.moe.impl == "pallas":
+        from repro.kernels.moe_ffn import ops as moe_ops
+
+        gate_w = params["gate"].astype(dt) if "gate" in params else None
+        return moe_ops.moe_ffn(dispatched, up_w, gate_w, down_w, cfg.ffn_activation)
+    h = jnp.einsum("exm,emi->exi", dispatched, up_w)
+    if "gate" in params:
+        g = jnp.einsum("exm,emi->exi", dispatched, params["gate"].astype(dt))
+        h = jax.nn.silu(g) * h if cfg.ffn_activation == "swiglu" else jax.nn.gelu(g) * h
+    elif cfg.ffn_activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return jnp.einsum("exi,eim->exm", h, down_w)
+
+
+# ---------------------------------------------------------------------------
+# Execution paths
+# ---------------------------------------------------------------------------
+
+def _einsum_path(params, xg, routing: RoutingResult, cfg: ModelConfig) -> jax.Array:
+    """Paper-faithful Fig. 7: one-hot einsum dispatch -> expert FFN -> combine."""
+    dt = cfg.activation_dtype
+    G, T, E, C = routing.combine.shape
+    dispatch = routing.dispatch.astype(dt)                     # (G,T,E,C)
+    # 'dTZFC,dTZM->ZFdCM' in the paper == 'gtec,gtm->egcm' with E=Z*F.
+    dispatched = jnp.einsum("gtec,gtm->egcm", dispatch, xg)
+    dispatched = shard(dispatched, "expert", "groups", None, None)
+    out = _expert_ffn(params, dispatched.reshape(E, G * C, cfg.d_model), cfg)
+    out = out.reshape(E, G, C, cfg.d_model)
+    out = shard(out, "expert", "groups", None, None)
+    # 'dTEC,EdCM->dTM' == 'gtec,egcm->gtm'
+    y = jnp.einsum("gtec,egcm->gtm", routing.combine.astype(dt), out)
+    return y
+
+
+def _gather_path(params, xg, routing: RoutingResult, cfg: ModelConfig) -> jax.Array:
+    """Optimized: scatter tokens into expert buffers, gather back.
+
+    Same (E,C) buffer layout and capacity semantics as the einsum path, so
+    outputs are bit-comparable (up to reduction order).
+    """
+    dt = cfg.activation_dtype
+    G, T, E, C = routing.combine.shape
+    M = xg.shape[-1]
+    # slot id per (g, t, e, c) is e*C + c; each token occupies at most
+    # active_k slots.  Recover (slot -> token) via a scatter-add of x
+    # weighted by the dispatch mask: since each (e,c) slot holds at most
+    # one token, the sum places exactly that token (or zeros).
+    dispatch = routing.dispatch.astype(dt)
+    buf = jnp.einsum("gtec,gtm->gecm", dispatch, xg)  # fallback when T small
+    # For larger T, use true gather/scatter:
+    if T > 64:
+        # token index occupying each (e,c) slot (or -1)
+        tok_idx = jnp.argmax(routing.dispatch, axis=1)            # (G,E,C)
+        occupied = jnp.any(routing.dispatch, axis=1)              # (G,E,C)
+        gathered = jnp.take_along_axis(
+            xg[:, :, None, :], tok_idx.reshape(G, -1, 1, 1).astype(jnp.int32), axis=1
+        )
+        gathered = gathered.reshape(G, E, C, M)
+        buf = jnp.where(occupied[..., None], gathered, 0.0).astype(dt)
+    buf = jnp.transpose(buf, (1, 0, 2, 3))                        # (E,G,C,M)
+    buf = shard(buf, "expert", "groups", None, None)
+    out = _expert_ffn(params, buf.reshape(E, G * C, M), cfg).reshape(E, G, C, M)
+    out = jnp.transpose(out, (1, 0, 2, 3))                        # (G,E,C,M)
+    # combine: for each token sum over its (e,c) slots with gate weights
+    y = jnp.einsum("gtec,gecm->gtm", routing.combine.astype(dt), out)
+    return y
+
+
+def moe_ffn_apply(params, x, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x: (B, S, M) -> (y, aux) where aux carries losses + load metrics."""
+    m = cfg.moe
+    B, S, M = x.shape
+    xg, G = group_tokens(x, m)
+    T = xg.shape[1]
+    capacity = m.capacity(T)
+    xg = shard(xg, "groups", None, None)
+
+    routing = route(xg, params["router"].astype(jnp.float32), m, capacity)
+
+    if m.impl in ("gather",):
+        y = _gather_path(params, xg, routing, cfg)
+    else:  # "einsum" (faithful) and "pallas" (einsum dispatch + kernel FFN)
+        y = _einsum_path(params, xg, routing, cfg)
+
+    y = y.reshape(B, S, M).astype(x.dtype)
+    aux = {
+        "moe_aux_loss": routing.aux_loss,
+        "moe_z_loss": routing.z_loss,
+        "moe_cv": routing.metrics["cv"],
+        "moe_dropped_fraction": routing.metrics["dropped_fraction"],
+    }
+    return y, aux

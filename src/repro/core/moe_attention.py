@@ -1,0 +1,101 @@
+"""MoE attention (paper 3.4): Q/K/V/O projections as mixtures of experts.
+
+The paper replaces the four attention linear maps with MoE layers and
+finds a *negative* result (worse quality, divergence) that expert
+prototyping partially mitigates.  We reproduce the mechanism: one router
+decision per token per layer; each expert owns a full {Wq,Wk,Wv,Wo} set.
+Tokens are dispatched once, projected by their experts' Q/K/V weights,
+combined back, attention proper is computed densely, and the output
+projection is again dispatched/combined through the same routing.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.moe import group_tokens
+from repro.core.routing import route
+from repro.distributed.sharding import shard
+from repro.models.attention import _sdpa, causal_mask
+from repro.models.layers import apply_rope, rope
+from repro.nn import ParamSpec, truncated_normal_init
+
+
+def moe_attention_specs(cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    wdt = jnp.dtype(cfg.param_dtype)
+    init = truncated_normal_init(cfg.initializer_range)
+    E = m.num_experts
+    if m.routing == "prototype":
+        router = ParamSpec((d, m.num_prototypes, m.experts_per_prototype),
+                           jnp.float32, ("embed", None, "expert"), init)
+    else:
+        router = ParamSpec((d, E), jnp.float32, ("embed", "expert"), init)
+    return {
+        "router": router,
+        "wq": ParamSpec((E, d, cfg.num_heads * hd), wdt, ("expert", "embed", "heads"), init),
+        "wk": ParamSpec((E, d, cfg.num_kv_heads * hd), wdt, ("expert", "embed", "kv_heads"), init),
+        "wv": ParamSpec((E, d, cfg.num_kv_heads * hd), wdt, ("expert", "embed", "kv_heads"), init),
+        "wo": ParamSpec((E, cfg.num_heads * hd, d), wdt, ("expert", "heads", "embed"), init),
+    }
+
+
+def _moe_project(w, dispatched, dt):
+    """(E,G,C,M) x (E,M,O) -> (E,G,C,O)."""
+    return jnp.einsum("egcm,emo->egco", dispatched, w.astype(dt))
+
+
+def moe_attention_apply(params, x, cfg: ModelConfig, *, positions,
+                        causal: bool = True) -> Tuple[jax.Array, dict]:
+    m = cfg.moe
+    dt = cfg.activation_dtype
+    B, S, M = x.shape
+    hd = cfg.resolved_head_dim
+
+    xg, G = group_tokens(x, m)
+    T = xg.shape[1]
+    capacity = m.capacity(T)
+    routing = route(xg, params["router"].astype(jnp.float32), m, capacity)
+    E, C = m.num_experts, capacity
+
+    disp = routing.dispatch.astype(dt)
+    dispatched = jnp.einsum("gtec,gtm->egcm", disp, xg)
+    dispatched = shard(dispatched, "expert", "groups", None, None)
+    combine = routing.combine.astype(dt)
+
+    def back(y_egco, out_dim):
+        y = jnp.einsum("gtec,egco->gto", combine, y_egco)
+        return y.reshape(B, S, out_dim)
+
+    q = back(_moe_project(params["wq"], dispatched, dt), cfg.num_heads * hd)
+    k = back(_moe_project(params["wk"], dispatched, dt), cfg.num_kv_heads * hd)
+    v = back(_moe_project(params["wv"], dispatched, dt), cfg.num_kv_heads * hd)
+
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    sin, cos = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    mask = causal_mask(S, S) if causal else None
+    attn = _sdpa(q, k, v, cfg, mask,
+                 causal_offset=0 if causal else None).reshape(B, S, cfg.num_heads * hd)
+
+    # Output projection through the same routing decision.
+    ag, _ = group_tokens(attn, m)
+    disp_a = jnp.einsum("gtec,gtm->egcm", disp, ag)
+    y = back(_moe_project(params["wo"], disp_a, dt), M)
+
+    aux = {
+        "moe_aux_loss": routing.aux_loss,
+        "moe_z_loss": routing.z_loss,
+        "moe_cv": routing.metrics["cv"],
+        "moe_dropped_fraction": routing.metrics["dropped_fraction"],
+    }
+    return y.astype(x.dtype), aux

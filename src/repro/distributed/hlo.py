@@ -1,0 +1,144 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic — exactly,
+including loop trip counts.
+
+`compiled.cost_analysis()` does not report collective bytes, and (worse)
+XLA's HloCostAnalysis counts a while-loop body ONCE, so anything inside a
+`lax.scan` (our layer stack) is undercounted by the trip count.  This
+parser fixes both for collectives:
+
+  1. split the HLO module into computations,
+  2. walk from ENTRY, multiplying by `known_trip_count` at every `while`
+     (scan bodies carry `backend_config={"known_trip_count":{"n": L}}`),
+  3. sum each collective instruction's *result* bytes x its multiplier.
+
+Result bytes equal operand bytes for all-reduce / all-to-all /
+collective-permute, the gathered size for all-gather, the scattered size
+for reduce-scatter (we scale by group size to recover input bytes).
+Effective wire bytes: all-reduce counts 2x (ring = reduce-scatter +
+all-gather).  Async `-start`/`-done` pairs count once at `-start`.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s*\b(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+_COMP_START_RE = re.compile(r"^\s*(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(r"\bwhile\(.*?body=(%[\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?(?:to_apply|calls)=(%[\w.\-]+)")
+_COND_RE = re.compile(r"\bconditional\(.*?branch_computations=\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, List[str]], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    current = None
+    for line in text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps, entry
+
+
+def _collect(comps: Dict[str, List[str]], name: str, mult: float,
+             raw: Dict[str, float], counts: Dict[str, int],
+             effective: List[float], seen_stack: Tuple[str, ...] = ()):
+    if name not in comps or name in seen_stack:
+        return
+    for line in comps[name]:
+        cm = _COLL_RE.search(line)
+        if cm and "-done(" not in line:
+            lhs, kind = cm.group(1), cm.group(2)
+            nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+            raw[kind] += nbytes * mult
+            counts[kind] += 1
+            if kind == "all-reduce":
+                effective[0] += 2.0 * nbytes * mult
+            elif kind == "reduce-scatter":
+                g = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+                n = len(g.group(1).split(",")) if g else 1
+                effective[0] += float(nbytes) * n * mult
+            else:
+                effective[0] += float(nbytes) * mult
+        wm = _WHILE_RE.search(line)
+        if wm:
+            tm = _TRIP_RE.search(line)
+            trip = float(tm.group(1)) if tm else 1.0
+            _collect(comps, wm.group(1), mult * trip, raw, counts, effective,
+                     seen_stack + (name,))
+            continue
+        callm = _CALL_RE.search(line)
+        if callm:
+            _collect(comps, callm.group(1), mult, raw, counts, effective,
+                     seen_stack + (name,))
+        condm = _COND_RE.search(line)
+        if condm:
+            for branch in condm.group(1).split(","):
+                _collect(comps, branch.strip(), mult, raw, counts, effective,
+                         seen_stack + (name,))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind result bytes (trip-count weighted), op counts (static),
+    and effective wire bytes under "total"."""
+    comps, entry = _split_computations(hlo_text)
+    raw: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    effective = [0.0]
+    if entry is not None:
+        _collect(comps, entry, 1.0, raw, counts, effective)
+    out: Dict[str, float] = {k: float(v) for k, v in raw.items()}
+    out["total"] = effective[0]
+    out["count"] = float(sum(counts.values()))
+    for k, v in counts.items():
+        out[f"n_{k}"] = float(v)
+    return out
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    return [int(n) for n in _TRIP_RE.findall(hlo_text)]
+
+
+def op_histogram(hlo_text: str, top: int = 25) -> Dict[str, int]:
+    """Instruction-kind histogram — spot remat recompute & layout churn."""
+    hist: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z0-9_-]+)\(", line)
+        if m:
+            hist[m.group(1)] += 1
+    return dict(sorted(hist.items(), key=lambda kv: -kv[1])[:top])

@@ -1,0 +1,87 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+  t_compute    = HLO_FLOPs  / (chips * 197e12)   bf16 peak / chip
+  t_memory     = HLO_bytes  / (chips * 819e9)    HBM bandwidth / chip
+  t_collective = coll_bytes / (chips * 50e9)     per-link ICI bandwidth
+
+Inputs come from the dry-run: ``compiled.cost_analysis()`` (flops, bytes
+accessed) and the HLO collective parser.  MODEL_FLOPS = 6*N_active*D
+(dense: N_active = N) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip (v5e)
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+    model_flops: Optional[float] = None   # 6 * N_active * tokens
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Upper bound on model-FLOPs utilisation implied by the terms:
+        useful FLOPs / (chips * peak * bound_time)."""
+        if not self.model_flops or self.bound_time == 0:
+            return None
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.bound_time)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """6*N*D for a train step (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_forward(n_params_active: float, tokens: float) -> float:
+    return 2.0 * n_params_active * tokens

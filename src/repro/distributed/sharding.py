@@ -1,0 +1,238 @@
+"""Logical-axis sharding rules -> PartitionSpecs / sharding constraints.
+
+Parameters and activations carry *logical* axis names ("embed", "mlp",
+"heads", "expert", "batch", "groups", ...).  A :class:`Rules` object maps
+them to mesh axes for a given (config, mesh) pair, with automatic
+fallback to replication when a dimension is not divisible by the mesh
+axis size (e.g. granite's 40 experts or 24 heads on a 16-way model axis).
+
+``shard(x, *logical_axes)`` applies a ``with_sharding_constraint`` when a
+Rules context is active and is a no-op otherwise, so model code is
+written once and runs both on a laptop and on the production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_ctx = threading.local()
+
+
+class Rules:
+    """Logical->mesh axis maps for parameters and activations."""
+
+    def __init__(self, mesh: Mesh, params: Mapping[str, MeshAxes], acts: Mapping[str, MeshAxes]):
+        self.mesh = mesh
+        self.params = dict(params)
+        self.acts = dict(acts)
+
+    def axis_size(self, axes: MeshAxes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def make_rules(cfg, mesh: Mesh, *, expert_axis: Optional[str] = None) -> Rules:
+    """Build rules for a ModelConfig on a mesh.
+
+    Mesh axes: optional "pod" (extra DP), "data" (DP), "model" (TP/EP).
+    """
+    axes = mesh.axis_names
+    has_pod = "pod" in axes
+    dp: MeshAxes = ("pod", "data") if has_pod else ("data",)
+    tp = "model" if "model" in axes else None
+    if expert_axis == "dp":
+        # pure data parallelism: fold the model axis into DP (right call
+        # for small models whose experts/heads don't divide the model
+        # axis — kills the per-layer TP activation all-reduces)
+        dp = dp + (tp,) if tp else dp
+        tp = None
+        expert_axis = None
+    model_size = mesh.shape[tp] if tp else 1
+
+    def div(n: int, ax: MeshAxes) -> MeshAxes:
+        if ax is None:
+            return None
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        return ax if n % size == 0 else None
+
+    m = cfg.moe
+    e_ax = expert_axis or (m.expert_axis if m.num_experts else "model")
+    hd = cfg.resolved_head_dim
+
+    params = {
+        "embed": dp if cfg.fsdp and cfg.d_model % _size(mesh, dp) == 0 else None,
+        "mlp": div(cfg.d_ff, tp) if cfg.d_ff else tp,
+        "heads": div(cfg.num_heads * hd, tp),
+        "kv_heads": div(cfg.num_kv_heads * hd, tp) if cfg.num_kv_heads % model_size == 0 else None,
+        "vocab": tp,  # vocab is padded to a multiple of 256, always divisible
+        "expert": div(m.num_experts, e_ax) if m.num_experts else None,
+        "layers": None,
+        "ssm_inner": div(cfg.ssm_expand * cfg.d_model, tp) if cfg.ssm_state else None,
+    }
+    # If experts can't shard (e.g. granite's 40 on 16), keep TP on the
+    # per-expert mlp dim instead (expert-TP fallback).
+    if m.num_experts and params["expert"] is None:
+        params["mlp"] = div(cfg.d_ff, tp)
+    elif m.num_experts:
+        # experts consume the model axis; per-expert mlp stays unsharded
+        params["mlp"] = None if e_ax == tp else div(cfg.d_ff, tp)
+
+    acts = {
+        "batch": dp,
+        "groups": dp,
+        "seq": None,
+        "embed": None,
+        "mlp": params["mlp"],
+        "heads": params["heads"],
+        "kv_heads": params["kv_heads"],
+        "vocab": params["vocab"],
+        "expert": params["expert"],
+        "cache_seq": None,
+    }
+    return Rules(mesh, params, acts)
+
+
+def _size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def active_rules() -> Optional[Rules]:
+    return getattr(_ctx, "rules", None)
+
+
+def logical_to_pspec(logical_axes: Sequence[Optional[str]], table: Mapping[str, MeshAxes],
+                     shape: Optional[Sequence[int]] = None, mesh: Optional[Mesh] = None) -> P:
+    spec = []
+    used = set()
+    for i, name in enumerate(logical_axes):
+        ax = table.get(name) if name is not None else None
+        if ax is not None:
+            flat = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in flat):
+                ax = None
+            elif shape is not None and mesh is not None:
+                size = 1
+                for a in flat:
+                    size *= mesh.shape[a]
+                if shape[i] % size != 0:
+                    ax = None
+            if ax is not None:
+                used.update(flat)
+        spec.append(ax)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain activation sharding if a Rules context is active."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axes for rank-{x.ndim} array")
+    spec = logical_to_pspec(logical_axes, rules.acts, x.shape, rules.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def param_pspecs(spec_tree, rules: Rules):
+    """ParamSpec tree -> PartitionSpec tree under `rules.params`."""
+    from repro.nn import map_specs
+
+    return map_specs(
+        lambda s: logical_to_pspec(s.logical_axes, rules.params, s.shape, rules.mesh),
+        spec_tree,
+    )
+
+
+def activation_shardings(tree, cfg, global_batch: int, seq_len: int, rules: Rules):
+    """Heuristic NamedShardings for decode-state / batch pytrees.
+
+    Per leaf: the first dim equal to ``global_batch`` shards over DP; a
+    dim matching a known head count (kv heads, q heads, ssm heads) shards
+    over the model axis; if no batch dim shards (e.g. batch=1 long-context
+    decode), the dim equal to ``seq_len`` takes DP instead (sequence
+    sharding).  Divisibility is always checked; fallback is replication.
+    """
+    mesh = rules.mesh
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = "model" if "model" in mesh.axis_names else None
+    dp_size = _size(mesh, dp)
+    tp_size = mesh.shape[tp] if tp else 1
+    hd = cfg.resolved_head_dim
+    head_like = {cfg.num_kv_heads, cfg.num_heads, cfg.ssm_heads or -1,
+                 cfg.num_kv_heads * hd, cfg.num_heads * hd}
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", None)
+        if shape is None or len(shape) == 0:
+            return NamedSharding(mesh, P())
+        entries = [None] * len(shape)
+        batch_done = False
+        for i, d in enumerate(shape):
+            if not batch_done and d == global_batch and d % dp_size == 0 and d > 1:
+                entries[i] = dp if len(dp) > 1 else dp[0]
+                batch_done = True
+                break
+        tp_done = False
+        for i, d in enumerate(shape):
+            if entries[i] is None and tp and not tp_done and d in head_like and d % tp_size == 0:
+                entries[i] = tp
+                tp_done = True
+        if not tp_done and tp and len(shape) >= 3:
+            # heads can't shard (e.g. kv=8 on a 16-way model axis):
+            # sequence-shard the KV cache over the model axis instead
+            for i, d in enumerate(shape):
+                if entries[i] is None and d == seq_len and d % tp_size == 0 and d > 1:
+                    entries[i] = tp
+                    tp_done = True
+                    break
+        if not batch_done:
+            for i, d in enumerate(shape):
+                if entries[i] is None and d == seq_len and d % dp_size == 0 and d > 1:
+                    entries[i] = dp if len(dp) > 1 else dp[0]
+                    break
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def param_shardings(spec_tree, rules: Rules):
+    ps = param_pspecs(spec_tree, rules)
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(rules.mesh, p), ps,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+Decode is bandwidth-bound: the whole valid cache streams HBM->VMEM once
+per step.  Grid (B, Hkv, T/bkv), KV innermost ("arbitrary") with online-
+softmax scratch; all G grouped q-heads for a kv head are processed
+together so the streamed K/V block is reused G times (the GQA bandwidth
+win).  Valid-length masking comes from a (B, 1) lengths operand.
+
+VMEM per step (bf16, bkv=1024, D=128, G=8): k/v 0.5MB, q (G,D) tiny,
+f32 acc (G,D) tiny — far under VMEM; bandwidth is the limit by design.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, bkv, n_kv):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    # skip whole blocks past the valid prefix
+    @pl.when(t * bkv < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bkv, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G,bkv)
+        cols = t * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, lengths, *, block_kv: int = 1024,
+                            interpret: bool = False):
+    """q: (B, Hkv, G, D); k/v: (B, Hkv, T, D); lengths: (B, 1) int32.
+    Returns (B, Hkv, G, D)."""
+    B, Hkv, G, D = q.shape
+    T = k.shape[2]
+    bkv = min(block_kv, T)
+    while T % bkv:
+        bkv //= 2
+    n_kv = T // bkv
+    grid = (B, Hkv, n_kv)
+
+    kernel = functools.partial(_kernel, scale=D ** -0.5, bkv=bkv, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, t: (b, 0)),          # lengths
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, t: (b, h, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k, v)

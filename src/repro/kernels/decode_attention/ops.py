@@ -1,0 +1,32 @@
+"""jit'd wrapper: standard (B, Hq, D) query / (B, T, Hkv, D) cache layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_kv",))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, block_kv: int = 1024) -> jax.Array:
+    """q: (B, Hq, D); k/v: (B, T, Hkv, D); lengths: (B,). -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    kt = jnp.transpose(k, (0, 2, 1, 3))     # (B, Hkv, T, D)
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = decode_attention_kernel(qg, kt, vt, lengths.reshape(B, 1).astype(jnp.int32),
+                                  block_kv=block_kv, interpret=_interpret())
+    return out.reshape(B, Hq, D)
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B, Hq, D) one query per sequence; k/v: (B, T, Hkv, D) cache;
+    lengths: (B,) valid prefix per sequence.  Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * (D ** -0.5)
+    valid = jnp.arange(T)[None, :] < lengths[:, None]            # (B,T)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

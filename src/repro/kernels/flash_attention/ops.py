@@ -1,0 +1,37 @@
+"""jit'd wrapper: (B,S,H,D) layout in, kernel in (B,H,S,D), GQA-aware."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 512,
+                    block_kv: int = 512) -> jax.Array:
+    """q: (B, S, Hq, D); k/v: (B, S, Hkv, D) -> (B, S, Hq, D)."""
+    B, S, Hq, D = q.shape
+    bq = min(block_q, S)
+    bkv = min(block_kv, S)
+    while S % bq:
+        bq //= 2
+    while S % bkv:
+        bkv //= 2
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    o = flash_attention_kernel(qt, kt, vt, causal=causal, block_q=bq,
+                               block_kv=bkv, interpret=_interpret())
+    return jnp.transpose(o, (0, 2, 1, 3))
+
+
+__all__ = ["flash_attention", "attention_ref"]

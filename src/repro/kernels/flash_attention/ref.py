@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for blocked causal (flash) attention with GQA."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, S, Hq, D); k/v: (B, S, Hkv, D); Hq % Hkv == 0."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)

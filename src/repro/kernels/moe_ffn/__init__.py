@@ -1,0 +1,3 @@
+from repro.kernels.moe_ffn import ops
+from repro.kernels.moe_ffn.ops import moe_ffn
+from repro.kernels.moe_ffn.ref import moe_ffn_ref

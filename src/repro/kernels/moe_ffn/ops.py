@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the grouped expert-FFN kernel.
+
+On non-TPU backends the kernel runs in interpret mode (Python semantics,
+used for CI correctness); on TPU it lowers to Mosaic.  Shapes that do not
+tile evenly are padded on the row dimension (padded rows compute garbage
+that is sliced away — they never touch real rows).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_ffn.kernel import moe_ffn_kernel
+from repro.kernels.moe_ffn.ref import moe_ffn_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("activation", "block_x", "block_i"))
+def moe_ffn(x: jax.Array, w_up: jax.Array, w_gate: Optional[jax.Array],
+            w_down: jax.Array, activation: str = "swiglu",
+            block_x: int = 128, block_i: int = 512) -> jax.Array:
+    E, X, M = x.shape
+    I = w_up.shape[-1]
+    bx = min(block_x, max(8, X))
+    bi = min(block_i, I)
+    while I % bi:
+        bi //= 2
+    pad_x = (-X) % bx
+    xp = jnp.pad(x, ((0, 0), (0, pad_x), (0, 0))) if pad_x else x
+    y = moe_ffn_kernel(xp, w_up, w_gate, w_down, activation,
+                       block_x=bx, block_i=bi, interpret=_interpret())
+    return y[:, :X] if pad_x else y
+
+
+__all__ = ["moe_ffn", "moe_ffn_ref"]

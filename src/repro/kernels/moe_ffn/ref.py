@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the grouped expert FFN kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(x: jax.Array, w_up: jax.Array, w_gate: Optional[jax.Array],
+                w_down: jax.Array, activation: str = "swiglu") -> jax.Array:
+    """x: (E, X, M); w_up: (E, M, I); w_gate: (E, M, I) or None;
+    w_down: (E, I, M).  Per-expert FFN, f32 accumulation."""
+    x32 = x.astype(jnp.float32)
+    h = jnp.einsum("exm,emi->exi", x32, w_up.astype(jnp.float32))
+    if w_gate is not None:
+        g = jnp.einsum("exm,emi->exi", x32, w_gate.astype(jnp.float32))
+        if activation == "swiglu":
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(g) * h
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    y = jnp.einsum("exi,eim->exm", h, w_down.astype(jnp.float32))
+    return y.astype(x.dtype)

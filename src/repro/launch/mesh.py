@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod),
+axes (data, model).  Multi-pod: 2 pods = 512 chips, axes (pod, data,
+model) — the "pod" axis is extra data parallelism whose collectives cross
+the inter-pod (DCI) links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    # CI/test hook: scale the mesh down (e.g. REPRO_MESH_SINGLE=2,4).
+    import os
+
+    env = os.environ.get("REPRO_MESH_MULTI" if multi_pod else "REPRO_MESH_SINGLE")
+    if env:
+        shape = tuple(int(x) for x in env.split(","))
+        assert len(shape) == len(axes), (shape, axes)
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices this process has."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,64 @@
+"""Serving driver: load (or init) a model and serve batched requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.registry import ALL_IDS, get_config, get_smoke_config
+from repro.models.registry import get_family
+from repro.nn import abstract, init as init_params
+from repro.serving.engine import ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b", choices=ALL_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    fam = get_family(cfg)
+    specs = fam.specs(cfg)
+    params = init_params(specs, jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir:
+        # restore params from a train.py checkpoint (TrainState layout,
+        # default AdamW) — elastic across device topologies
+        from repro.configs.base import TrainConfig
+        from repro.optim import make_optimizer, warmup_constant
+        from repro.train.state import init_train_state
+
+        tc = TrainConfig()
+        opt = make_optimizer(tc, warmup_constant(tc.learning_rate))
+        template = jax.eval_shape(
+            lambda p: init_train_state(p, opt, tc.grad_compression), abstract(specs))
+        ckpt = Checkpointer(args.ckpt_dir)
+        state, step = ckpt.restore_latest(template)
+        if state is not None:
+            params = state.params
+            print(f"restored checkpoint step {step}")
+
+    max_len = args.prompt_len + args.gen + 1
+    engine = ServingEngine(cfg, params, max_len=max_len)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
+                                 0, cfg.vocab_size)
+    toks, stats = engine.generate(prompts, args.gen, temperature=args.temperature,
+                                  seed=args.seed)
+    print("generated:", np.asarray(toks)[:, :16])
+    print({k: round(v, 4) for k, v in stats.items()})
+
+
+if __name__ == "__main__":
+    main()

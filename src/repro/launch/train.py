@@ -1,0 +1,151 @@
+"""End-to-end training driver.
+
+Runs any registered arch (full or smoke config) on the local devices with
+the full production stack: sharded params (pjit), ZeRO-1 optimizer state,
+checkpoint/restart (atomic + async), straggler watchdog, seekable data.
+
+  PYTHONPATH=src python -m repro.launch.train --arch m6-base --smoke \
+      --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt --routing prototype
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ALL_IDS, get_config, get_smoke_config
+from repro.data.pipeline import make_pipeline
+from repro.distributed.fault import StepWatchdog, run_with_restarts
+from repro.distributed.sharding import make_rules, param_shardings, use_rules
+from repro.launch.mesh import make_debug_mesh
+from repro.models.registry import get_family
+from repro.nn import init as init_params
+from repro.optim import make_optimizer, warmup_constant
+from repro.train.state import TrainState, init_train_state
+from repro.train.trainer import make_train_step
+
+
+def build(args):
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.routing and cfg.moe.num_experts:
+        if args.routing == "prototype":
+            cfg = cfg.replace_moe(routing="prototype",
+                                  num_prototypes=args.k)
+        else:
+            cfg = cfg.replace_moe(routing="topk", top_k=args.k)
+    if args.capacity:
+        cfg = cfg.replace_moe(capacity_mode=args.capacity)
+    if args.moe_impl and cfg.moe.num_experts:
+        cfg = cfg.replace_moe(impl=args.moe_impl)
+    if args.aux_loss_coef is not None:
+        cfg = cfg.replace_moe(aux_loss_coef=args.aux_loss_coef)
+    return cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="m6-base", choices=ALL_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--optimizer", default=None, choices=[None, "adamw", "adafactor"])
+    ap.add_argument("--routing", default=None, choices=[None, "topk", "prototype"])
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--capacity", default=None, choices=[None, "k", "one"])
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--aux-loss-coef", type=float, default=None)
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-file", default=None)
+    ap.add_argument("--data", default=1, type=int, help="data mesh axis")
+    ap.add_argument("--model", default=1, type=int, help="model mesh axis")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    cfg = build(args)
+    fam = get_family(cfg)
+    tc = TrainConfig(
+        optimizer=args.optimizer or ("adafactor" if cfg.name == "m6-1t" else "adamw"),
+        learning_rate=args.lr or (5e-3 if args.optimizer == "adafactor" else 8e-5),
+        grad_compression=args.grad_compression,
+        microbatches=args.microbatches,
+        warmup_steps=min(500, args.steps // 4 + 1),
+    )
+    mesh = make_debug_mesh(args.data, args.model)
+    rules = make_rules(cfg, mesh)
+
+    specs = fam.specs(cfg)
+    opt = make_optimizer(tc, warmup_constant(tc.learning_rate, tc.warmup_steps))
+    step_fn = make_train_step(cfg, tc, opt)
+
+    def wrapped(state, batch):
+        with use_rules(rules):
+            return step_fn(state, batch)
+
+    p_shard = param_shardings(specs, rules)
+    jit_step = jax.jit(wrapped, donate_argnums=(0,))
+
+    pipeline = make_pipeline(cfg, args.batch, args.seq, seed=args.seed)
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    watchdog = StepWatchdog()
+    logs = []
+
+    def fresh_state():
+        params = init_params(specs, jax.random.PRNGKey(args.seed))
+        params = jax.device_put(params, p_shard)
+        return init_train_state(params, opt, tc.grad_compression)
+
+    def resume_step():
+        if ckpt is None or ckpt.latest_step() is None:
+            return 0
+        return ckpt.latest_step()
+
+    def loop(start_step: int) -> int:
+        state = fresh_state()
+        if ckpt is not None and start_step > 0:
+            state = ckpt.restore(start_step, jax.eval_shape(lambda: state))
+        t_tokens = args.batch * args.seq
+        for step in range(start_step, args.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in pipeline.batch_at(step).items()}
+            state, metrics = jit_step(state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = {k: float(np.mean(jax.device_get(v))) for k, v in metrics.items()}
+                dt = time.time() - t0
+                watchdog.observe(dt)
+                m.update(step=step, step_time_s=round(dt, 3),
+                         tokens_per_s=round(t_tokens / dt, 1))
+                logs.append(m)
+                print(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                      f"cv {m.get('moe_cv', 0):.3f} drop {m.get('moe_dropped_fraction', 0):.3f} "
+                      f"({m['tokens_per_s']:.0f} tok/s)", flush=True)
+            if ckpt is not None and step > 0 and step % args.ckpt_every == 0:
+                ckpt.save_async(step, state)
+        if ckpt is not None:
+            ckpt.wait()
+            ckpt.save(args.steps, state)
+        return args.steps
+
+    with mesh:
+        run_with_restarts(loop, resume_step, max_restarts=args.max_restarts)
+
+    if args.log_file:
+        with open(args.log_file, "w") as f:
+            json.dump(logs, f, indent=1)
+    return logs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Chunked online-softmax attention in pure XLA (jnp) with a flash-style
+custom VJP — the TPU-adaptation of FlashAttention semantics for paths the
+Pallas kernel does not cover (CPU compile, dry-run, grad).
+
+Memory is O(S * block) instead of O(S^2): forward scans KV blocks with
+running (max, denom, acc); backward saves only (q, k, v, out, lse) and
+recomputes probabilities per block (dq in the scan carry; dk/dv as
+per-block outputs).  Numerics match the reference within fp tolerance
+(tests/test_attention.py, including grads).
+
+Layout: grouped-query form q (B, S, Hkv, G, D); k/v (B, T, Hkv, D).
+``q_offset`` supports the KV-cache path (queries start at cache length).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _blocks(T: int, target: int) -> int:
+    b = min(target, T)
+    while T % b:
+        b -= 1
+    return b
+
+
+def _scores(qg, kb, softcap: float):
+    # qg: (B,S,H,G,D) f32 pre-scaled; kb: (B,bkv,H,D)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, kb)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    return s  # (B,H,G,S,bkv)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def chunked_attention(qg, k, v, causal: bool, q_offset_static: Optional[int],
+                      block: int = 512, softcap: float = 0.0,
+                      q_offset: Optional[jax.Array] = None):
+    out, _ = _fwd_impl(qg, k, v, causal, q_offset_static, block, softcap, q_offset)
+    return out
+
+
+def _offset(q_offset_static, q_offset):
+    if q_offset is not None:
+        return q_offset
+    return jnp.asarray(q_offset_static or 0, jnp.int32)
+
+
+def _fwd_impl(qg, k, v, causal, q_offset_static, block, softcap, q_offset):
+    B, S, H, G, D = qg.shape
+    T = k.shape[1]
+    bkv = _blocks(T, block)
+    n = T // bkv
+    off = _offset(q_offset_static, q_offset)
+    q32 = qg.astype(jnp.float32) * (D ** -0.5)
+    rows = off + jnp.arange(S)                                   # (S,)
+
+    kb = k.astype(jnp.float32).reshape(B, n, bkv, H, D).transpose(1, 0, 2, 3, 4)
+    vb = v.astype(jnp.float32).reshape(B, n, bkv, H, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, idx = xs
+        s = _scores(q32, kblk, softcap)                          # (B,H,G,S,bkv)
+        if causal:
+            cols = idx * bkv + jnp.arange(bkv)
+            mask = cols[None, :] <= rows[:, None]                # (S,bkv)
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhgst,bthd->bhgsd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, G, S), jnp.float32)
+    a0 = jnp.zeros((B, H, G, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(n)))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).transpose(0, 3, 1, 2, 4)          # (B,S,H,G,D)
+    lse = m + jnp.log(l)                                         # (B,H,G,S)
+    return out.astype(qg.dtype), lse
+
+
+def _fwd_vjp(qg, k, v, causal, q_offset_static, block, softcap, q_offset):
+    out, lse = _fwd_impl(qg, k, v, causal, q_offset_static, block, softcap, q_offset)
+    return out, (qg, k, v, out, lse, q_offset)
+
+
+def _bwd_vjp(causal, q_offset_static, block, softcap, res, dout):
+    qg, k, v, out, lse, q_offset = res
+    B, S, H, G, D = qg.shape
+    T = k.shape[1]
+    bkv = _blocks(T, block)
+    n = T // bkv
+    off = _offset(q_offset_static, q_offset)
+    scale = D ** -0.5
+    q32 = qg.astype(jnp.float32) * scale
+    do32 = dout.astype(jnp.float32)
+    o32 = out.astype(jnp.float32)
+    delta = jnp.sum(do32 * o32, axis=-1).transpose(0, 2, 3, 1)   # (B,H,G,S)
+    rows = off + jnp.arange(S)
+
+    kb = k.astype(jnp.float32).reshape(B, n, bkv, H, D).transpose(1, 0, 2, 3, 4)
+    vb = v.astype(jnp.float32).reshape(B, n, bkv, H, D).transpose(1, 0, 2, 3, 4)
+    doh = do32.transpose(0, 2, 3, 1, 4)                          # (B,H,G,S,D)
+
+    def body(dq, xs):
+        kblk, vblk, idx = xs
+        s = _scores(q32, kblk, 0.0)
+        if softcap > 0:
+            t = jnp.tanh(s / softcap)
+            s_capped = t * softcap
+            dcap = 1.0 - jnp.square(t)                           # d(capped)/d(s)
+        else:
+            s_capped = s
+            dcap = None
+        if causal:
+            cols = idx * bkv + jnp.arange(bkv)
+            mask = cols[None, :] <= rows[:, None]
+            s_capped = jnp.where(mask, s_capped, NEG_INF)
+        p = jnp.exp(s_capped - lse[..., None])                   # (B,H,G,S,bkv)
+        dv_blk = jnp.einsum("bhgst,bhgsd->bthd", p, doh)
+        dp = jnp.einsum("bhgsd,bthd->bhgst", doh, vblk)
+        ds = p * (dp - delta[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        dq_blk = jnp.einsum("bhgst,bthd->bshgd", ds, kblk) * scale
+        dk_blk = jnp.einsum("bhgst,bshgd->bthd", ds, q32)
+        return dq + dq_blk, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, S, H, G, D), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(n)))
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, T, H, D)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, T, H, D)
+    return (dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None)
+
+
+chunked_attention.defvjp(_fwd_vjp, _bwd_vjp)

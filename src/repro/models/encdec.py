@@ -1,0 +1,181 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech/audio frontend is a STUB per the assignment: ``encode`` takes
+precomputed frame embeddings (B, S_src, d_model).  The decoder is a
+standard causal transformer with cross-attention; decode uses a KV cache
+for self-attention plus precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.metrics import empty_aux
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.attention import (
+    KVCache,
+    abstract_cache,
+    attention_apply,
+    attention_specs,
+    init_cache,
+    project_kv,
+)
+from repro.nn.spec import stack_specs
+
+
+class EncDecState(NamedTuple):
+    self_cache: KVCache     # stacked (L_dec, ...)
+    cross_k: jax.Array      # (L_dec, B, S_src, H_kv, D)
+    cross_v: jax.Array
+
+
+def enc_block_specs(cfg: ModelConfig):
+    return {
+        "ln_attn": L.norm_specs(cfg),
+        "attn": attention_specs(cfg),
+        "ln_ffn": L.norm_specs(cfg),
+        "ffn": L.ffn_specs(cfg),
+    }
+
+
+def dec_block_specs(cfg: ModelConfig):
+    return {
+        "ln_self": L.norm_specs(cfg),
+        "self_attn": attention_specs(cfg),
+        "ln_cross": L.norm_specs(cfg),
+        "cross_attn": attention_specs(cfg),
+        "ln_ffn": L.norm_specs(cfg),
+        "ffn": L.ffn_specs(cfg),
+    }
+
+
+def encdec_specs(cfg: ModelConfig):
+    n_enc = cfg.num_encoder_layers or cfg.num_layers
+    return {
+        "embed": L.embedding_specs(cfg),
+        "encoder": stack_specs(enc_block_specs(cfg), n_enc),
+        "enc_norm": L.norm_specs(cfg),
+        "decoder": stack_specs(dec_block_specs(cfg), cfg.num_layers),
+        "final_norm": L.norm_specs(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, S_src, d_model) precomputed frontend embeddings."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = frames.astype(cfg.activation_dtype)
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(h, bp):
+        a = L.norm_apply(bp["ln_attn"], h, cfg)
+        attn, _ = attention_apply(bp["attn"], a, cfg, positions=positions, causal=False)
+        h = h + attn
+        f = L.norm_apply(bp["ln_ffn"], h, cfg)
+        h = h + L.ffn_apply(bp["ffn"], f, cfg)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x = _scan_or_unroll(body, x, params["encoder"], cfg)
+    return L.norm_apply(params["enc_norm"], x, cfg)
+
+
+def _scan_or_unroll(body, x, stacked, cfg):
+    """lax.scan normally; python-unrolled when cfg.scan_layers=False
+    (probe mode: makes cost_analysis count every layer)."""
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, stacked)
+        return x
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    for i in range(n):
+        bp = jax.tree_util.tree_map(lambda a: a[i], stacked)
+        x, _ = body(x, bp)
+    return x
+
+
+def _dec_block(bp, h, memory_kv, cfg, *, positions, cache=None):
+    a = L.norm_apply(bp["ln_self"], h, cfg)
+    attn, new_cache = attention_apply(bp["self_attn"], a, cfg,
+                                      positions=positions, cache=cache)
+    h = h + attn
+    c = L.norm_apply(bp["ln_cross"], h, cfg)
+    cross, _ = attention_apply(bp["cross_attn"], c, cfg, positions=positions,
+                               kv=memory_kv)
+    h = h + cross
+    f = L.norm_apply(bp["ln_ffn"], h, cfg)
+    h = h + L.ffn_apply(bp["ffn"], f, cfg)
+    return h, new_cache
+
+
+def decode_train(params, tokens, memory, cfg: ModelConfig):
+    """Teacher-forcing decoder forward. memory: encoder output."""
+    x = L.embedding_apply(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(h, bp):
+        mem_kv = project_kv(bp["cross_attn"], memory, cfg)
+        h, _ = _dec_block(bp, h, mem_kv, cfg, positions=positions)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x = _scan_or_unroll(body, x, params["decoder"], cfg)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return L.unembed_apply(params["embed"], x, cfg)
+
+
+def encdec_train_apply(params, frames, tokens, cfg: ModelConfig):
+    memory = encode(params, frames, cfg)
+    logits = decode_train(params, tokens, memory, cfg)
+    return logits, empty_aux()
+
+
+def init_state(params, memory, cfg: ModelConfig, max_len: int) -> EncDecState:
+    """Precompute cross K/V for all decoder layers + empty self caches."""
+
+    def body(_, bp):
+        k, v = project_kv(bp["cross_attn"], memory, cfg)
+        return None, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["decoder"])
+    B = memory.shape[0]
+    one = init_cache(cfg, B, max_len)
+    caches = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy(), one)
+    return EncDecState(caches, ck, cv)
+
+
+def abstract_state(cfg: ModelConfig, batch: int, src_len: int, max_len: int) -> EncDecState:
+    hd = cfg.resolved_head_dim
+    one = abstract_cache(cfg, batch, max_len)
+    caches = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape, s.dtype), one)
+    kv = jax.ShapeDtypeStruct(
+        (cfg.num_layers, batch, src_len, cfg.num_kv_heads, hd), cfg.activation_dtype)
+    return EncDecState(caches, kv, kv)
+
+
+def decode_step(params, tokens, state: EncDecState, cfg: ModelConfig):
+    """tokens: (B, 1). Returns (logits, new_state)."""
+    x = L.embedding_apply(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    length = state.self_cache.length[0]
+    positions = jnp.broadcast_to(length + jnp.arange(S)[None, :], (B, S))
+
+    def body(h, scanned):
+        bp, cache, ck, cv = scanned
+        h, new_cache = _dec_block(bp, h, (ck, cv), cfg, positions=positions, cache=cache)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(
+        body, x, (params["decoder"], state.self_cache, state.cross_k, state.cross_v))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits, EncDecState(new_caches, state.cross_k, state.cross_v)

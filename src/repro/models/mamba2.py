@@ -1,0 +1,179 @@
+"""Mamba2 / SSD blocks (arXiv:2405.21060) — chunked scan for train/prefill
+and an O(1) recurrent step for decode.
+
+Follows the `ssd_minimal_discrete` reference: per-head scalar decay
+``a = -exp(A_log)``, discretisation ``adt = exp(dt * a)``, state
+``h[B,H,P,N]`` (P = head dim, N = d_state), shared B/C across heads
+(n_groups = 1 for simplicity; zamba2 uses 1-2 groups).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.nn import ParamSpec, truncated_normal_init, zeros_init, ones_init
+
+
+class Mamba2State(NamedTuple):
+    h: jax.Array     # (B, H, P, N) SSM state
+    conv: jax.Array  # (B, W-1, conv_dim) conv tail
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(d_inner // 64, 1)
+    P = d_inner // H
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def mamba2_block_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N  # x, B, C go through the conv
+    init = truncated_normal_init(cfg.initializer_range)
+    wdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln": L.norm_specs(cfg),
+        # separate projections (not one fused in_proj) so each output dim
+        # shards cleanly over the model axis (2*d_inner+2N+H rarely divides)
+        "in_z": ParamSpec((d, d_inner), wdt, ("embed", "ssm_inner"), init),
+        "in_x": ParamSpec((d, d_inner), wdt, ("embed", "ssm_inner"), init),
+        "in_B": ParamSpec((d, N), wdt, ("embed", None), init),
+        "in_C": ParamSpec((d, N), wdt, ("embed", None), init),
+        "in_dt": ParamSpec((d, H), wdt, ("embed", None), init),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), wdt, (None, "ssm_inner"), init),
+        "conv_b": ParamSpec((conv_dim,), jnp.float32, ("ssm_inner",), zeros_init),
+        "A_log": ParamSpec((H,), jnp.float32, (None,), zeros_init),
+        "dt_bias": ParamSpec((H,), jnp.float32, (None,), zeros_init),
+        "D": ParamSpec((H,), jnp.float32, (None,), ones_init),
+        "head_norm": ParamSpec((d_inner,), jnp.float32, ("ssm_inner",), ones_init),
+        "out_proj": ParamSpec((d_inner, d), wdt, ("ssm_inner", "embed"), init),
+    }
+
+
+def _segsum(logd):
+    """logd: (..., W). Returns (..., W, W) lower-tri cumulative sums:
+    out[t, s] = sum_{s < r <= t} logd_r, -inf above diagonal."""
+    W = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((W, W), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, Bmat, Cmat, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) f32; dt: (B,S,H) (post-softplus); Bmat/Cmat: (B,S,N).
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    a = -jnp.exp(A_log)                        # (H,)
+    W = min(chunk, S)
+    pad = (W - S % W) % W
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    NC = x.shape[1] // W
+    xc = x.reshape(Bsz, NC, W, H, P).transpose(1, 0, 3, 2, 4)      # (NC,B,H,W,P)
+    dtc = dt.reshape(Bsz, NC, W, H).transpose(1, 0, 3, 2)          # (NC,B,H,W)
+    Bc = Bmat.reshape(Bsz, NC, W, N).transpose(1, 0, 2, 3)         # (NC,B,W,N)
+    Cc = Cmat.reshape(Bsz, NC, W, N).transpose(1, 0, 2, 3)
+
+    def body(h, xs):
+        xb, dtb, Bb, Cb = xs                                       # per chunk
+        logd = dtb * a[None, :, None]                              # (B,H,W)
+        Lmat = jnp.exp(_segsum(logd))                              # (B,H,W,W)
+        CB = jnp.einsum("bsn,btn->bst", Cb, Bb)                    # (B,W,W)
+        scores = CB[:, None] * Lmat                                # (B,H,W,W)
+        causal = jnp.tril(jnp.ones((W, W), bool))
+        scores = jnp.where(causal, scores, 0.0)
+        xdt = xb * dtb[..., None]                                  # (B,H,W,P)
+        y_diag = jnp.einsum("bhst,bhtp->bhsp", scores, xdt)
+        # inter-chunk: contribution of incoming state
+        cum = jnp.cumsum(logd, axis=-1)                            # (B,H,W)
+        y_off = jnp.einsum("bsn,bhpn->bhsp", Cb, h) * jnp.exp(cum)[..., None]
+        # state update
+        decay_to_end = jnp.exp(cum[..., -1:] - cum)                # (B,H,W)
+        h_new = jnp.exp(cum[..., -1])[..., None, None] * h + jnp.einsum(
+            "bhs,bhsp,bsn->bhpn", decay_to_end * dtb, xb, Bb)
+        return h_new, y_diag + y_off
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    # checkpoint the chunk body (same rationale as xlstm's chunk scan)
+    h_final, yc = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                               h0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(Bsz, NC * W, H, P)
+    return y[:, :S], h_final
+
+
+def ssd_step(h, x, dt, A_log, Bvec, Cvec):
+    """Single-token recurrence. h: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    Bvec/Cvec: (B,N). Returns (y (B,H,P), h_new)."""
+    a = -jnp.exp(A_log)
+    adt = jnp.exp(dt * a[None, :])                                # (B,H)
+    h_new = adt[..., None, None] * h + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, x, Bvec)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cvec)
+    return y, h_new
+
+
+def mamba2_block_apply(params, x, cfg: ModelConfig, *,
+                       state: Optional[Mamba2State] = None):
+    """Returns (y, new_state)."""
+    Bsz, S, d = x.shape
+    d_inner, H, P, N = _dims(cfg)
+    dt_act = x.dtype
+    h = L.norm_apply(params["ln"], x, cfg)
+    z = h @ params["in_z"].astype(dt_act)
+    xs = h @ params["in_x"].astype(dt_act)
+    Bm = h @ params["in_B"].astype(dt_act)
+    Cm = h @ params["in_C"].astype(dt_act)
+    dtm = h @ params["in_dt"].astype(dt_act)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    if state is not None:
+        from repro.models.xlstm import _causal_conv
+        conv_out, new_tail = _causal_conv(conv_in, params["conv_w"].astype(dt_act), state.conv)
+    else:
+        from repro.models.xlstm import _causal_conv
+        conv_out, new_tail = _causal_conv(conv_in, params["conv_w"].astype(dt_act))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(dt_act))
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt32 = jax.nn.softplus(dtm.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+
+    x4 = xs.reshape(Bsz, S, H, P).astype(jnp.float32)
+    if state is None:
+        y, h_final = ssd_chunked(x4, dt32, params["A_log"],
+                                 Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                                 chunk=max(cfg.ssm_chunk, 16))
+        new_state = None
+    else:
+        y1, h_new = ssd_step(state.h, x4[:, 0], dt32[:, 0], params["A_log"],
+                             Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32))
+        y = y1[:, None]
+        new_state = Mamba2State(h_new, new_tail.astype(state.conv.dtype))
+
+    y = y + x4 * params["D"][None, None, :, None]
+    y = L.head_rmsnorm_apply(params["head_norm"].reshape(H, P), y, cfg.norm_eps)
+    y = y.reshape(Bsz, S, d_inner).astype(dt_act)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_act)
+    return x + out, new_state
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    shapes = [(batch, H, P, N), (batch, cfg.ssm_conv_width - 1, conv_dim)]
+    if abstract:
+        return Mamba2State(*[jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes])
+    return Mamba2State(*[jnp.zeros(s, jnp.float32) for s in shapes])

@@ -1,0 +1,226 @@
+"""Uniform per-family model API used by the trainer, server and dry-run.
+
+Every family exposes:
+  specs(cfg)                                   parameter ParamSpec tree
+  forward(params, batch, cfg) -> (logits, aux) training forward; logits
+                                               align with batch["labels"]
+  init_state(cfg, batch, max_len, abstract)    decode-state template
+  decode(params, tokens, state, cfg)           one-token serve step
+  prefill(params, batch, cfg, max_len)         prompt -> (logits, state)
+  input_specs(cfg, shape)                      ShapeDtypeStruct batch for a
+                                               ShapeConfig cell (dry-run)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models import xlstm as XL
+from repro.models import zamba as ZB
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyAPI:
+    specs: Callable
+    forward: Callable
+    init_state: Callable
+    decode: Callable
+    prefill: Optional[Callable]
+    input_specs: Callable
+    decode_input_specs: Callable
+
+
+def _tok_struct(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# decoder_lm (also base for vlm / m6 which add prefix embeddings)
+# ---------------------------------------------------------------------------
+
+def _lm_forward(params, batch, cfg: ModelConfig):
+    extra = batch.get("patch_embeds")
+    logits, aux = TF.lm_apply(params, batch["tokens"], cfg, extra_embeds=extra)
+    if extra is not None:
+        logits = logits[:, extra.shape[1]:]
+    return logits, aux
+
+
+def _lm_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    text = s - cfg.num_image_tokens
+    specs = {"tokens": _tok_struct(b, text), "labels": _tok_struct(b, text)}
+    if cfg.num_image_tokens:
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), cfg.activation_dtype)
+    return specs
+
+
+def _lm_init_state(cfg, batch, max_len, abstract=False):
+    return TF.init_caches(cfg, batch, max_len, abstract=abstract)
+
+
+def _lm_decode(params, tokens, state, cfg):
+    return TF.decode_apply(params, tokens, state, cfg)
+
+
+def _lm_prefill(params, batch, cfg, max_len):
+    logits, caches, _ = TF.prefill_apply(params, batch["tokens"], cfg, max_len=max_len)
+    return logits, caches
+
+
+def _lm_decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    state = TF.init_caches(cfg, b, shape.seq_len, abstract=True)
+    return {"tokens": _tok_struct(b, 1), "state": state}
+
+
+DECODER_LM = FamilyAPI(
+    specs=TF.lm_specs,
+    forward=_lm_forward,
+    init_state=_lm_init_state,
+    decode=_lm_decode,
+    prefill=_lm_prefill,
+    input_specs=_lm_input_specs,
+    decode_input_specs=_lm_decode_input_specs,
+)
+
+
+# ---------------------------------------------------------------------------
+# xlstm
+# ---------------------------------------------------------------------------
+
+def _xl_forward(params, batch, cfg):
+    logits, aux, _ = XL.xlstm_apply(params, batch["tokens"], cfg)
+    return logits, aux
+
+
+def _xl_init_state(cfg, batch, max_len, abstract=False):
+    del max_len  # recurrent: O(1) state
+    return XL.xlstm_init_states(cfg, batch, abstract)
+
+
+def _xl_decode(params, tokens, state, cfg):
+    logits, _, new_state = XL.xlstm_apply(params, tokens, cfg, states=state)
+    return logits, new_state
+
+
+def _xl_decode_input_specs(cfg, shape: ShapeConfig):
+    b = shape.global_batch
+    return {"tokens": _tok_struct(b, 1),
+            "state": XL.xlstm_init_states(cfg, b, abstract=True)}
+
+
+XLSTM = FamilyAPI(
+    specs=XL.xlstm_specs,
+    forward=_xl_forward,
+    init_state=_xl_init_state,
+    decode=_xl_decode,
+    prefill=None,
+    input_specs=lambda cfg, shape: {
+        "tokens": _tok_struct(shape.global_batch, shape.seq_len),
+        "labels": _tok_struct(shape.global_batch, shape.seq_len),
+    },
+    decode_input_specs=_xl_decode_input_specs,
+)
+
+
+# ---------------------------------------------------------------------------
+# zamba (hybrid)
+# ---------------------------------------------------------------------------
+
+def _zb_forward(params, batch, cfg):
+    logits, aux, _ = ZB.zamba_apply(params, batch["tokens"], cfg)
+    return logits, aux
+
+
+def _zb_init_state(cfg, batch, max_len, abstract=False):
+    return ZB.zamba_init_state(cfg, batch, max_len, abstract)
+
+
+def _zb_decode(params, tokens, state, cfg):
+    logits, _, new_state = ZB.zamba_apply(params, tokens, cfg, state=state)
+    return logits, new_state
+
+
+def _zb_decode_input_specs(cfg, shape: ShapeConfig):
+    b = shape.global_batch
+    return {"tokens": _tok_struct(b, 1),
+            "state": ZB.zamba_init_state(cfg, b, shape.seq_len, abstract=True)}
+
+
+ZAMBA = FamilyAPI(
+    specs=ZB.zamba_specs,
+    forward=_zb_forward,
+    init_state=_zb_init_state,
+    decode=_zb_decode,
+    prefill=None,
+    input_specs=lambda cfg, shape: {
+        "tokens": _tok_struct(shape.global_batch, shape.seq_len),
+        "labels": _tok_struct(shape.global_batch, shape.seq_len),
+    },
+    decode_input_specs=_zb_decode_input_specs,
+)
+
+
+# ---------------------------------------------------------------------------
+# encdec (seamless) — frames are stub frontend embeddings
+# ---------------------------------------------------------------------------
+
+def _ed_forward(params, batch, cfg):
+    return ED.encdec_train_apply(params, batch["frames"], batch["tokens"], cfg)
+
+
+def _ed_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.activation_dtype),
+        "tokens": _tok_struct(b, s),
+        "labels": _tok_struct(b, s),
+    }
+
+
+def _ed_init_state(cfg, batch, max_len, abstract=False):
+    assert abstract, "use encdec.init_state with real memory for concrete states"
+    return ED.abstract_state(cfg, batch, max_len, max_len)
+
+
+def _ed_decode(params, tokens, state, cfg):
+    return ED.decode_step(params, tokens, state, cfg)
+
+
+def _ed_decode_input_specs(cfg, shape: ShapeConfig):
+    b = shape.global_batch
+    return {"tokens": _tok_struct(b, 1),
+            "state": ED.abstract_state(cfg, b, shape.seq_len, shape.seq_len)}
+
+
+ENCDEC = FamilyAPI(
+    specs=ED.encdec_specs,
+    forward=_ed_forward,
+    init_state=_ed_init_state,
+    decode=_ed_decode,
+    prefill=None,
+    input_specs=_ed_input_specs,
+    decode_input_specs=_ed_decode_input_specs,
+)
+
+
+FAMILIES = {
+    "decoder_lm": DECODER_LM,
+    "vlm": DECODER_LM,    # VLM/M6 = decoder LM + patch_embeds stub prefix
+    "m6": DECODER_LM,
+    "xlstm": XLSTM,
+    "zamba": ZAMBA,
+    "encdec": ENCDEC,
+}
+
+
+def get_family(cfg: ModelConfig) -> FamilyAPI:
+    return FAMILIES[cfg.family]

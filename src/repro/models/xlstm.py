@@ -1,0 +1,370 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, recurrent), per-block pattern configurable via
+``cfg.xlstm_slstm_period`` (every k-th block is sLSTM; 0 = all mLSTM).
+
+mLSTM uses the stabilised parallel (quadratic) form for train/prefill and
+an O(1) recurrent step for decode (the `long_500k` cell).  sLSTM is a
+`lax.scan` over time.  Both keep gate math in float32.
+
+Simplifications vs the reference CUDA implementation (documented in
+DESIGN.md): no causal-conv skip inside the mLSTM block's qk path is
+*kept* (conv4), learnable per-head gate biases included, block-diagonal
+recurrent gates for sLSTM with one block per head.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.metrics import empty_aux
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.nn import ParamSpec, truncated_normal_init, zeros_init, ones_init
+from repro.nn.spec import stack_specs
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, D, D) matrix memory
+    n: jax.Array   # (B, H, D) normaliser
+    m: jax.Array   # (B, H) stabiliser
+    conv: jax.Array  # (B, W-1, D_inner) conv tail
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model if cfg.ssm_expand else 2 * cfg.d_model
+    heads = cfg.num_heads
+    dh = d_inner // heads
+    return d_inner, heads, dh
+
+
+def mlstm_block_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, dh = _mlstm_dims(cfg)
+    init = truncated_normal_init(cfg.initializer_range)
+    wdt = jnp.dtype(cfg.param_dtype)
+    w = 4  # causal conv width
+    return {
+        "ln": L.norm_specs(cfg),
+        "up_x": ParamSpec((d, d_inner), wdt, ("embed", "ssm_inner"), init),
+        "up_z": ParamSpec((d, d_inner), wdt, ("embed", "ssm_inner"), init),
+        "conv_w": ParamSpec((w, d_inner), wdt, (None, "ssm_inner"), init),
+        "wq": ParamSpec((d_inner, d_inner), wdt, ("ssm_inner", None), init),
+        "wk": ParamSpec((d_inner, d_inner), wdt, ("ssm_inner", None), init),
+        "wv": ParamSpec((d_inner, d_inner), wdt, ("ssm_inner", None), init),
+        "w_igate": ParamSpec((d_inner, H), jnp.float32, ("ssm_inner", None), init),
+        "w_fgate": ParamSpec((d_inner, H), jnp.float32, ("ssm_inner", None), init),
+        "b_igate": ParamSpec((H,), jnp.float32, (None,), zeros_init),
+        "b_fgate": ParamSpec((H,), jnp.float32, (None,), ones_init),
+        "head_norm": ParamSpec((d_inner,), jnp.float32, ("ssm_inner",), ones_init),
+        "down": ParamSpec((d_inner, d), wdt, ("ssm_inner", "embed"), init),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """x: (B,S,D), w: (W,D) depthwise causal conv; tail: (B,W-1,D) history."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_tail = xp[:, -(W - 1):, :] if W > 1 else tail
+    return out, new_tail
+
+
+def _mlstm_parallel(q, k, v, igate, fgate):
+    """Stabilised parallel mLSTM (paper App. B). q,k,v: (B,H,S,D);
+    igate/fgate: (B,H,S) pre-activations (f through log-sigmoid)."""
+    S = q.shape[2]
+    logf = jax.nn.log_sigmoid(fgate)                    # (B,H,S)
+    F = jnp.cumsum(logf, axis=-1)                       # (B,H,S)
+    # D[t,s] = F_t - F_s + i_s for s<=t
+    Dmat = F[..., :, None] - F[..., None, :] + igate[..., None, :]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    Dmat = jnp.where(causal, Dmat, -jnp.inf)
+    m = jnp.max(Dmat, axis=-1, keepdims=True)           # (B,H,S,1)
+    m = jnp.maximum(m, -1e30)                           # guard all -inf rows
+    Dexp = jnp.exp(Dmat - m)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale * Dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=-1, keepdims=True)),
+                       jnp.exp(-m))
+    h = jnp.einsum("bhst,bhtd->bhsd", scores / norm, v)
+    return h
+
+
+def _mlstm_chunked(q, k, v, igate, fgate, chunk: int = 256):
+    """Chunkwise-parallel stabilised mLSTM: O(S*W) memory instead of O(S^2).
+
+    q,k,v: (B,H,S,D) f32; igate/fgate: (B,H,S) pre-activations.
+    Equivalent to `_mlstm_parallel` (tested); used for long sequences.
+    """
+    B, H, S, D = q.shape
+    W = min(chunk, S)
+    if S % W != 0:  # pad to a chunk multiple (keeps semantics: padded gates
+        pad = W - S % W  # get igate = -inf so they contribute nothing)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        igate = jnp.pad(igate, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        fgate = jnp.pad(fgate, ((0, 0), (0, 0), (0, pad)), constant_values=30.0)
+    NC = q.shape[2] // W
+    resh = lambda a: a.reshape(B, H, NC, W, -1).transpose(2, 0, 1, 3, 4)
+    qc, kc, vc = resh(q), resh(k), resh(v)                       # (NC,B,H,W,D)
+    ic = igate.reshape(B, H, NC, W).transpose(2, 0, 1, 3)        # (NC,B,H,W)
+    fc = fgate.reshape(B, H, NC, W).transpose(2, 0, 1, 3)
+    scale = D ** -0.5
+
+    def body(carry, xs):
+        C, n, m = carry                                          # (B,H,D,D),(B,H,D),(B,H)
+        qb, kb, vb, ib, fb = xs
+        logf = jax.nn.log_sigmoid(fb)                            # (B,H,W)
+        lF = jnp.cumsum(logf, axis=-1)                           # inclusive
+        # intra-chunk decay matrix
+        Dmat = lF[..., :, None] - lF[..., None, :] + ib[..., None, :]
+        causal = jnp.tril(jnp.ones((W, W), bool))
+        Dmat = jnp.where(causal, Dmat, -jnp.inf)
+        m_intra = jnp.max(Dmat, axis=-1)                         # (B,H,W)
+        m_inter = lF + m[..., None]
+        m_t = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)  # (B,H,W)
+        Dexp = jnp.exp(Dmat - m_t[..., None])
+        scores = jnp.einsum("bhsd,bhtd->bhst", qb, kb) * scale * Dexp
+        inter_w = jnp.exp(m_inter - m_t)[..., None]              # (B,H,W,1)
+        num = jnp.einsum("bhst,bhtd->bhsd", scores, vb) + \
+            inter_w * jnp.einsum("bhsd,bhde->bhse", qb * scale, C)
+        den_intra = jnp.sum(scores, axis=-1)
+        den_inter = jnp.einsum("bhsd,bhd->bhs", qb * scale, n) * inter_w[..., 0]
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h = num / den[..., None]
+        # state update to end of chunk
+        lF_W = lF[..., -1:]                                      # (B,H,1)
+        m_new = jnp.maximum(lF_W[..., 0] + m, jnp.max(lF_W - lF + ib, axis=-1))
+        kw = jnp.exp(lF_W - lF + ib - m_new[..., None])          # (B,H,W)
+        C_new = jnp.exp(lF_W[..., 0] + m - m_new)[..., None, None] * C + \
+            jnp.einsum("bhs,bhsd,bhse->bhde", kw, kb, vb)
+        n_new = jnp.exp(lF_W[..., 0] + m - m_new)[..., None] * n + \
+            jnp.einsum("bhs,bhsd->bhd", kw, kb)
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.full((B, H), 0.0, jnp.float32)
+    # checkpoint the chunk body: bwd recomputes per-chunk decay/score
+    # tensors instead of saving NC copies (see EXPERIMENTS.md S Perf)
+    _, hs = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                         (C0, n0, m0), (qc, kc, vc, ic, fc))
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, NC * W, D)
+    return hs[:, :, :S]
+
+
+def mlstm_block_apply(params, x, cfg: ModelConfig, *, state: Optional[MLSTMState] = None):
+    """Returns (y, new_state). state != None -> single-step decode."""
+    B, S, _ = x.shape
+    d_inner, H, dh = _mlstm_dims(cfg)
+    dt = x.dtype
+    h = L.norm_apply(params["ln"], x, cfg)
+    xb = h @ params["up_x"].astype(dt)
+    zb = h @ params["up_z"].astype(dt)
+    conv_tail = state.conv if state is not None else None
+    xc, new_tail = _causal_conv(xb, params["conv_w"].astype(dt), conv_tail)
+    xc = jax.nn.silu(xc)
+    q = (xc @ params["wq"].astype(dt)).reshape(B, S, H, dh)
+    k = (xc @ params["wk"].astype(dt)).reshape(B, S, H, dh)
+    v = (xb @ params["wv"].astype(dt)).reshape(B, S, H, dh)
+    ig = (xc.astype(jnp.float32) @ params["w_igate"] + params["b_igate"])  # (B,S,H)
+    fg = (xc.astype(jnp.float32) @ params["w_fgate"] + params["b_fgate"])
+
+    if state is None:
+        qh = jnp.transpose(q, (0, 2, 1, 3)).astype(jnp.float32)
+        kh = jnp.transpose(k, (0, 2, 1, 3)).astype(jnp.float32)
+        vh = jnp.transpose(v, (0, 2, 1, 3)).astype(jnp.float32)
+        igh = jnp.transpose(ig, (0, 2, 1))
+        fgh = jnp.transpose(fg, (0, 2, 1))
+        if S > max(cfg.ssm_chunk, 1) * 2:
+            hout = _mlstm_chunked(qh, kh, vh, igh, fgh, chunk=max(cfg.ssm_chunk, 64))
+        else:
+            hout = _mlstm_parallel(qh, kh, vh, igh, fgh)
+        hout = jnp.transpose(hout, (0, 2, 1, 3)).reshape(B, S, d_inner)
+        new_state = None
+    else:
+        # O(1) recurrent step (S == 1)
+        q1 = q[:, 0].astype(jnp.float32) * (dh ** -0.5)   # (B,H,D)
+        k1 = k[:, 0].astype(jnp.float32)
+        v1 = v[:, 0].astype(jnp.float32)
+        ig1, fg1 = ig[:, 0], fg[:, 0]                      # (B,H)
+        logf = jax.nn.log_sigmoid(fg1)
+        m_new = jnp.maximum(logf + state.m, ig1)
+        fprime = jnp.exp(logf + state.m - m_new)[..., None]
+        iprime = jnp.exp(ig1 - m_new)[..., None]
+        c_new = fprime[..., None] * state.c + iprime[..., None] * (
+            k1[..., :, None] * v1[..., None, :])           # (B,H,D,D)
+        n_new = fprime * state.n + iprime * k1
+        num = jnp.einsum("bhd,bhde->bhe", q1, c_new)
+        den = jnp.maximum(jnp.abs(jnp.sum(q1 * n_new, axis=-1, keepdims=True)),
+                          jnp.exp(-m_new)[..., None])
+        hout = (num / den).reshape(B, 1, d_inner)
+        new_state = MLSTMState(c_new, n_new, m_new, new_tail)
+
+    hout = L.head_rmsnorm_apply(
+        params["head_norm"].reshape(H, dh), hout.reshape(B, S, H, dh).astype(jnp.float32),
+        cfg.norm_eps).reshape(B, S, d_inner).astype(dt)
+    out = (hout * jax.nn.silu(zb)) @ params["down"].astype(dt)
+    return x + out, new_state
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    d_inner, H, dh = _mlstm_dims(cfg)
+    shapes = {
+        "c": (batch, H, dh, dh), "n": (batch, H, dh), "m": (batch, H),
+        "conv": (batch, 3, d_inner),
+    }
+    mk = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract else (
+        lambda s: jnp.zeros(s, jnp.float32))
+    return MLSTMState(mk(shapes["c"]), mk(shapes["n"]), mk(shapes["m"]), mk(shapes["conv"]))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, D_in)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def slstm_block_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    init = truncated_normal_init(cfg.initializer_range)
+    wdt = jnp.dtype(cfg.param_dtype)
+    pf = int(d * 4 / 3) // 8 * 8 or 8  # gated-FFN projection factor 4/3
+    return {
+        "ln": L.norm_specs(cfg),
+        "w_gates": ParamSpec((d, 4 * d), wdt, ("embed", None), init),
+        # block-diagonal recurrent weights: one (dh, 4*dh) block per head
+        "r_gates": ParamSpec((H, dh, 4 * dh), wdt, (None, None, None), init),
+        "b_gates": ParamSpec((4 * d,), jnp.float32, (None,), zeros_init),
+        "head_norm": ParamSpec((d,), jnp.float32, ("embed",), ones_init),
+        "ln_ffn": L.norm_specs(cfg),
+        "ffn_up": ParamSpec((d, 2 * pf), wdt, ("embed", "mlp"), init),
+        "ffn_down": ParamSpec((pf, d), wdt, ("mlp", "embed"), init),
+    }
+
+
+def _slstm_cell(params, xt, state: SLSTMState, cfg: ModelConfig):
+    """One timestep. xt: (B, D) f32."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    B = xt.shape[0]
+    hprev = state.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hprev, params["r_gates"].astype(jnp.float32))
+    gates = xt @ params["w_gates"].astype(jnp.float32)
+    gates = gates.reshape(B, H, 4 * dh) + rec + params["b_gates"].reshape(H, 4 * dh)
+    i_t, f_t, z_t, o_t = jnp.split(gates, 4, axis=-1)      # (B,H,dh) each
+    z = jnp.tanh(z_t)
+    o = jax.nn.sigmoid(o_t)
+    logf = jax.nn.log_sigmoid(f_t)
+    m_prev = state.m.reshape(B, H, dh)
+    m_new = jnp.maximum(logf + m_prev, i_t)
+    iprime = jnp.exp(i_t - m_new)
+    fprime = jnp.exp(logf + m_prev - m_new)
+    c_new = fprime * state.c.reshape(B, H, dh) + iprime * z
+    n_new = fprime * state.n.reshape(B, H, dh) + iprime
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    flat = lambda a: a.reshape(B, d)
+    return SLSTMState(flat(c_new), flat(n_new), flat(h_new), flat(m_new))
+
+
+def slstm_block_apply(params, x, cfg: ModelConfig, *, state: Optional[SLSTMState] = None):
+    B, S, d = x.shape
+    dt = x.dtype
+    h = L.norm_apply(params["ln"], x, cfg).astype(jnp.float32)
+    st = state if state is not None else slstm_init_state(cfg, B)
+
+    def step(carry, xt):
+        new = _slstm_cell(params, xt, carry, cfg)
+        return new, new.h
+
+    if S == 1:
+        st = _slstm_cell(params, h[:, 0], st, cfg)
+        hs = st.h[:, None]
+    else:
+        st, hs = jax.lax.scan(step, st, jnp.transpose(h, (1, 0, 2)))
+        hs = jnp.transpose(hs, (1, 0, 2))
+
+    hs = L.head_rmsnorm_apply(params["head_norm"].reshape(cfg.num_heads, d // cfg.num_heads),
+                              hs.reshape(B, S, cfg.num_heads, -1), cfg.norm_eps)
+    hs = hs.reshape(B, S, d).astype(dt)
+    x = x + hs
+    # gated FFN (GeGLU, 4/3 factor)
+    g = L.norm_apply(params["ln_ffn"], x, cfg)
+    ug = g @ params["ffn_up"].astype(dt)
+    u, gate = jnp.split(ug, 2, axis=-1)
+    x = x + (jax.nn.gelu(gate) * u) @ params["ffn_down"].astype(dt)
+    return x, (st if state is not None else None)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    d = cfg.d_model
+    mk = (lambda: jax.ShapeDtypeStruct((batch, d), jnp.float32)) if abstract else (
+        lambda: jnp.zeros((batch, d), jnp.float32))
+    return SLSTMState(mk(), mk(), mk(), mk())
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def _is_slstm(cfg: ModelConfig, i: int) -> bool:
+    p = cfg.xlstm_slstm_period
+    return p > 0 and (i % p == p - 1)
+
+
+def xlstm_specs(cfg: ModelConfig):
+    specs = {
+        "embed": L.embedding_specs(cfg),
+        "final_norm": L.norm_specs(cfg),
+        "blocks": [
+            slstm_block_specs(cfg) if _is_slstm(cfg, i) else mlstm_block_specs(cfg)
+            for i in range(cfg.num_layers)
+        ],
+    }
+    return specs
+
+
+def xlstm_apply(params, tokens, cfg: ModelConfig, *, states=None):
+    """states: list of per-block states (decode) or None (train/prefill).
+    Returns (logits, aux, new_states)."""
+    x = L.embedding_apply(params["embed"], tokens, cfg)
+    x = shard(x, "batch", "seq", "embed")
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        st = states[i] if states is not None else None
+        fn = slstm_block_apply if _is_slstm(cfg, i) else mlstm_block_apply
+        if cfg.remat and states is None:
+            fn = jax.checkpoint(fn, prevent_cse=False,
+                                static_argnums=(2,))
+        x, ns = fn(bp, x, cfg, state=st)
+        new_states.append(ns)
+        x = shard(x, "batch", "seq", "embed")
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits, empty_aux(), (new_states if states is not None else None)
+
+
+def xlstm_init_states(cfg: ModelConfig, batch: int, abstract: bool = False):
+    return [
+        slstm_init_state(cfg, batch, abstract) if _is_slstm(cfg, i)
+        else mlstm_init_state(cfg, batch, abstract)
+        for i in range(cfg.num_layers)
+    ]

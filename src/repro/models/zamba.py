@@ -1,0 +1,198 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a Mamba2 backbone with a single
+*shared* transformer block (attention + MLP, weights reused) applied every
+``cfg.zamba_shared_period`` layers on ``concat(x, x0)`` (x0 = the original
+embeddings), projected back to d_model and added to the residual stream.
+
+Simplifications noted in DESIGN.md: per-application LoRA adapters on the
+shared block are omitted; n_groups=1 for SSD B/C.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.metrics import empty_aux
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.attention import (
+    KVCache,
+    abstract_cache,
+    attention_apply,
+    attention_specs,
+    init_cache,
+)
+from repro.models.mamba2 import (
+    Mamba2State,
+    mamba2_block_apply,
+    mamba2_block_specs,
+    mamba2_init_state,
+)
+from repro.nn import ParamSpec, truncated_normal_init
+from repro.nn.spec import stack_specs
+
+
+class ZambaState(NamedTuple):
+    mamba: Mamba2State          # stacked (L, ...) per-layer states
+    attn: KVCache               # stacked (n_shared, ...) KV caches
+
+
+def _shared_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.replace(d_model=2 * cfg.d_model, head_dim=2 * cfg.d_model // cfg.num_heads,
+                       ffn_activation="gelu")
+
+
+def _n_shared(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.num_layers / cfg.zamba_shared_period)
+
+
+def zamba_specs(cfg: ModelConfig):
+    scfg = _shared_cfg(cfg)
+    init = truncated_normal_init(cfg.initializer_range)
+    wdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "embed": L.embedding_specs(cfg),
+        "mamba": stack_specs(mamba2_block_specs(cfg), cfg.num_layers),
+        "shared": {
+            "ln_attn": L.norm_specs(scfg),
+            "attn": attention_specs(scfg),
+            "ln_ffn": L.norm_specs(scfg),
+            "ffn": L.ffn_specs(scfg),
+            "out": ParamSpec((2 * cfg.d_model, cfg.d_model), wdt, (None, "embed"), init),
+        },
+        "final_norm": L.norm_specs(cfg),
+    }
+
+
+def _shared_block(params, x, x0, cfg: ModelConfig, *, positions,
+                  cache: Optional[KVCache] = None):
+    scfg = _shared_cfg(cfg)
+    dt = x.dtype
+    y = jnp.concatenate([x, x0], axis=-1)
+    h = L.norm_apply(params["ln_attn"], y, scfg)
+    attn, new_cache = attention_apply(params["attn"], h, scfg,
+                                      positions=positions, cache=cache)
+    y = y + attn
+    h = L.norm_apply(params["ln_ffn"], y, scfg)
+    y = y + L.ffn_apply(params["ffn"], h, scfg)
+    return x + y @ params["out"].astype(dt), new_cache
+
+
+def _segments(cfg: ModelConfig) -> List[tuple]:
+    p = cfg.zamba_shared_period
+    segs = []
+    for start in range(0, cfg.num_layers, p):
+        segs.append((start, min(start + p, cfg.num_layers)))
+    return segs
+
+
+def zamba_apply(params, tokens, cfg: ModelConfig, *,
+                state: Optional[ZambaState] = None):
+    """Returns (logits, aux, new_state)."""
+    decode = state is not None
+    x = L.embedding_apply(params["embed"], tokens, cfg)
+    x = shard(x, "batch", "seq", "embed")
+    x0 = x
+    B, S, _ = x.shape
+    if decode:
+        length = state.attn.length[0]
+        positions = jnp.broadcast_to(length + jnp.arange(S)[None, :], (B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    new_mamba_states = []
+    new_attn_caches = []
+
+    def mamba_scan_body(h, bp):
+        h, _ = mamba2_block_apply(bp, h, cfg)
+        return h, None
+
+    body = mamba_scan_body
+    if cfg.remat and not decode:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    shared_fn = _shared_block
+    if cfg.remat and not decode:
+        shared_fn = jax.checkpoint(
+            lambda sp, a, b: _shared_block(sp, a, b, cfg, positions=positions)[0],
+            prevent_cse=False)
+
+    p = cfg.zamba_shared_period
+    n_full = cfg.num_layers // p
+    rem = cfg.num_layers % p
+
+    if not decode and cfg.scan_layers and n_full > 1:
+        # Scan over (shared block + p mamba layers) segments: one loop
+        # body instead of n_full unrolled shared applications — XLA reuses
+        # the segment's backward buffers across iterations (-10GB/dev on
+        # zamba2-7b train_4k; see EXPERIMENTS.md S Perf).
+        full = jax.tree_util.tree_map(
+            lambda a: a[: n_full * p].reshape((n_full, p) + a.shape[1:]),
+            params["mamba"])
+
+        def seg_body(h, seg_params):
+            h = shared_fn(params["shared"], h, x0)
+            h, _ = jax.lax.scan(body, h, seg_params)
+            return h, None
+
+        x, _ = jax.lax.scan(seg_body, x, full)
+        if rem:
+            x = shared_fn(params["shared"], x, x0)
+            tail = jax.tree_util.tree_map(lambda a: a[n_full * p:], params["mamba"])
+            x, _ = jax.lax.scan(body, x, tail)
+        x = shard(x, "batch", "seq", "embed")
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        logits = L.unembed_apply(params["embed"], x, cfg)
+        return logits, empty_aux(), None
+
+    for si, (start, stop) in enumerate(_segments(cfg)):
+        cache = jax.tree_util.tree_map(lambda a: a[si], state.attn) if decode else None
+        if cfg.remat and not decode:
+            x, new_cache = shared_fn(params["shared"], x, x0), None
+        else:
+            x, new_cache = _shared_block(params["shared"], x, x0, cfg,
+                                         positions=positions, cache=cache)
+        if decode:
+            new_attn_caches.append(new_cache)
+        seg_params = jax.tree_util.tree_map(lambda a: a[start:stop], params["mamba"])
+        if decode:
+            for li in range(stop - start):
+                bp = jax.tree_util.tree_map(lambda a: a[li], seg_params)
+                st = jax.tree_util.tree_map(lambda a: a[start + li], state.mamba)
+                x, ns = mamba2_block_apply(bp, x, cfg, state=st)
+                new_mamba_states.append(ns)
+        elif cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, seg_params)
+        else:  # probe mode: unrolled so cost_analysis counts every layer
+            for li in range(stop - start):
+                bp = jax.tree_util.tree_map(lambda a: a[li], seg_params)
+                x, _ = body(x, bp)[0], None
+        x = shard(x, "batch", "seq", "embed")
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    new_state = None
+    if decode:
+        new_state = ZambaState(
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_mamba_states),
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_attn_caches),
+        )
+    return logits, empty_aux(), new_state
+
+
+def zamba_init_state(cfg: ModelConfig, batch: int, max_len: int,
+                     abstract: bool = False) -> ZambaState:
+    scfg = _shared_cfg(cfg)
+    n = _n_shared(cfg)
+    one_m = mamba2_init_state(cfg, batch, abstract)
+    one_c = (abstract_cache if abstract else init_cache)(scfg, batch, max_len)
+    if abstract:
+        stack = lambda s, k: jax.ShapeDtypeStruct((k,) + s.shape, s.dtype)
+    else:
+        stack = lambda a, k: jnp.broadcast_to(a[None], (k,) + a.shape).copy()
+    mamba = jax.tree_util.tree_map(lambda a: stack(a, cfg.num_layers), one_m)
+    attn = jax.tree_util.tree_map(lambda a: stack(a, n), one_c)
+    return ZambaState(mamba, attn)

@@ -1,0 +1,41 @@
+"""Lightweight declarative parameter system (no flax dependency).
+
+Modules declare a tree of :class:`ParamSpec` (shape, dtype, logical axes,
+initializer).  Generic machinery then derives:
+
+  * real parameter pytrees (``init``),
+  * ``jax.sharding.PartitionSpec`` trees from logical-axis rules (``pspecs``),
+  * abstract ``ShapeDtypeStruct`` trees for dry-runs (``abstract``),
+  * parameter counts (``count``).
+
+Models themselves are pure functions ``apply(params, inputs, ...)``.
+"""
+from repro.nn.spec import (
+    ParamSpec,
+    abstract,
+    count_params,
+    init,
+    pspecs,
+    map_specs,
+)
+from repro.nn.initializers import (
+    normal_init,
+    scaled_normal_init,
+    truncated_normal_init,
+    zeros_init,
+    ones_init,
+)
+
+__all__ = [
+    "ParamSpec",
+    "abstract",
+    "count_params",
+    "init",
+    "pspecs",
+    "map_specs",
+    "normal_init",
+    "scaled_normal_init",
+    "truncated_normal_init",
+    "zeros_init",
+    "ones_init",
+]

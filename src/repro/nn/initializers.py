@@ -1,0 +1,56 @@
+"""Weight initializers.
+
+The paper (M6-T §4, Table 5) uses BERT truncated-normal init (mu=0,
+sigma=0.02) for <=100B models and sigma reduced 10x (0.002) for the 1T
+model, "to lower the absolute values of initialized weights" (also noted
+by Switch Transformer).  All initializers here are pure functions
+``(key, shape, dtype) -> array`` so they can live inside ParamSpec trees.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal_init(stddev: float = 0.02):
+    def _init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return _init
+
+
+def truncated_normal_init(stddev: float = 0.02, lower: float = -2.0, upper: float = 2.0):
+    """BERT-style truncated normal (truncated at +/-2 sigma)."""
+
+    def _init(key, shape, dtype):
+        x = jax.random.truncated_normal(key, lower, upper, shape, jnp.float32)
+        return (x * stddev).astype(dtype)
+
+    return _init
+
+
+def scaled_normal_init(fan_in_axes=(-2,), scale: float = 1.0):
+    """Variance-scaled (1/sqrt(fan_in)) normal init, used for projections."""
+
+    def _init(key, shape, dtype):
+        fan_in = 1
+        for ax in fan_in_axes:
+            fan_in *= shape[ax]
+        stddev = scale / math.sqrt(max(fan_in, 1))
+        x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+        return (x * stddev).astype(dtype)
+
+    return _init

@@ -1,0 +1,154 @@
+"""ParamSpec trees: declarative parameters -> init / sharding / counting.
+
+A model module exposes ``specs(cfg) -> nested dict[str, ParamSpec]``.
+Logical axis names on each spec (e.g. ``("embed", "mlp")``) are mapped to
+mesh axes by rules in :mod:`repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of a single parameter tensor."""
+
+    shape: Tuple[int, ...]
+    dtype: Any
+    logical_axes: Tuple[Optional[str], ...]
+    init: Callable[[Any, Tuple[int, ...], Any], jax.Array]
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical_axes):
+            raise ValueError(
+                f"shape {self.shape} and logical_axes {self.logical_axes} "
+                "must have the same rank"
+            )
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_flatten(tree, is_leaf=_is_spec)
+
+
+def map_specs(fn, tree):
+    """tree_map over ParamSpec leaves."""
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_spec)
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_spec)
+    return flat
+
+
+def init(tree, key, dtype_override: Optional[Any] = None):
+    """Materialise a ParamSpec tree into real arrays.
+
+    RNG is split deterministically by a hash of each leaf's key-path so
+    that adding/removing parameters does not silently change unrelated
+    initialisations.
+    """
+    flat = _leaf_paths(tree)
+    leaves = []
+    for path, spec in flat:
+        path_str = jax.tree_util.keystr(path)
+        sub = jax.random.fold_in(key, _stable_hash(path_str))
+        dtype = dtype_override or spec.dtype
+        leaves.append(spec.init(sub, spec.shape, dtype))
+    treedef = jax.tree_util.tree_structure(tree, is_leaf=_is_spec)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _stable_hash(s: str) -> int:
+    # Deterministic across processes (unlike Python's salted hash()).
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 & 0xFFFFFFFF
+    return h
+
+
+def abstract(tree, dtype_override: Optional[Any] = None):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype_override or s.dtype), tree
+    )
+
+
+def pspecs(tree, rules: Mapping[str, Optional[str]]):
+    """Derive a PartitionSpec tree from logical axis -> mesh axis rules.
+
+    ``rules`` maps logical axis name to mesh axis name (or a tuple of mesh
+    axes, or None for replicated).  Unknown logical axes are replicated.
+    """
+
+    def _one(spec: ParamSpec):
+        axes = []
+        used = set()
+        for la in spec.logical_axes:
+            mesh_ax = rules.get(la) if la is not None else None
+            # A mesh axis may appear at most once in a PartitionSpec.
+            if mesh_ax is not None:
+                flat_ax = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+                if any(a in used for a in flat_ax):
+                    mesh_ax = None
+                else:
+                    used.update(flat_ax)
+            axes.append(mesh_ax)
+        # Trim trailing Nones for readability.
+        while axes and axes[-1] is None:
+            axes.pop()
+        return P(*axes)
+
+    return map_specs(_one, tree)
+
+
+def stack_specs(tree, n: int):
+    """Prefix every spec with a stacked ``layers`` axis of size n (for
+    scan-over-layers parameter stacking)."""
+
+    def _stack(spec: ParamSpec) -> ParamSpec:
+        base_init = spec.init
+
+        def _init(key, shape, dtype):
+            keys = jax.random.split(key, shape[0])
+            return jnp.stack([base_init(k, shape[1:], dtype) for k in keys])
+
+        return ParamSpec((n,) + spec.shape, spec.dtype, ("layers",) + spec.logical_axes, _init)
+
+    return map_specs(_stack, tree)
+
+
+def count_params(tree) -> int:
+    flat, _ = _flatten(tree)
+    total = 0
+    for leaf in flat:
+        if isinstance(leaf, ParamSpec):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n
+        else:
+            total += leaf.size
+    return total
+
+
+def tree_bytes(tree) -> int:
+    flat, _ = _flatten(tree)
+    total = 0
+    for leaf in flat:
+        if isinstance(leaf, ParamSpec):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n * jnp.dtype(leaf.dtype).itemsize
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,2 @@
+from repro.optim.api import Optimizer, make_optimizer
+from repro.optim.schedules import warmup_constant, warmup_cosine

@@ -1,0 +1,73 @@
+"""Adafactor (Shazeer & Stern 2018) — sublinear memory second moments.
+
+This is what let the paper fit the 1T model's optimizer state on
+32GB V100s: matrices store factored row/col second moments instead of a
+full tensor.  Implementation follows the paper: decay beta2_t = 1 - t^-0.8,
+update clipping at RMS d=1.0, optional parameter-scale multiplication.
+The M6-T paper uses lr=5e-3 (not the 0.01 default, which diverged).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import Optimizer
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor(schedule, eps1: float = 1e-30, eps2: float = 1e-3,
+              clip_threshold: float = 1.0, decay_pow: float = 0.8,
+              multiply_by_parameter_scale: bool = True) -> Optimizer:
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),        # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"v": jax.tree_util.tree_map(
+            one, params, is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params, step):
+        t = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - t ** -decay_pow
+        lr = schedule(step + 1)
+
+        def one(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps1
+            if _factored(p.shape):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # v_hat = vr vc / mean_row(vr)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                vhat = vr[..., None] * vc[..., None, :] / jnp.maximum(denom[..., None], eps1)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2 * v["v"] + (1 - beta2) * g2
+                new_v = {"v": vhat}
+            u = g32 / jnp.sqrt(vhat + eps1)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            scale = lr
+            if multiply_by_parameter_scale:
+                p_rms = jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32))))
+                scale = lr * jnp.maximum(p_rms, eps2)
+            return (-scale * u).astype(p.dtype), new_v
+
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        # state["v"] has an extra dict level below each param position;
+        # flatten_up_to stops at the grads structure.
+        leaves_v = treedef.flatten_up_to(state["v"])
+        leaves_p = treedef.flatten_up_to(params)
+        outs = [one(g, v, p) for g, v, p in zip(leaves_g, leaves_v, leaves_p)]
+        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return updates, {"v": new_v}
+
+    return Optimizer(init, update)

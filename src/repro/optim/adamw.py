@@ -1,0 +1,40 @@
+"""AdamW (decoupled weight decay) — the paper's optimizer for <=100B."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import Optimizer
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        step1 = step + 1
+        lr = schedule(step1)
+        c1 = 1 - b1 ** step1.astype(jnp.float32)
+        c2 = 1 - b2 ** step1.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            mhat = mu / c1
+            nhat = nu / c2
+            u = -lr * (mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), mu, nu
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"], params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)

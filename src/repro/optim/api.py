@@ -1,0 +1,31 @@
+"""Optimizer interface (optax-like, self-contained).
+
+An Optimizer is a pair of pure functions:
+  init(params) -> state
+  update(grads, state, params, step) -> (updates, new_state)
+Updates are *added* to params by the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.configs.base import TrainConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def make_optimizer(tc: TrainConfig, schedule: Callable[[Any], Any]) -> Optimizer:
+    if tc.optimizer == "adamw":
+        from repro.optim.adamw import adamw
+
+        return adamw(schedule, weight_decay=tc.weight_decay)
+    if tc.optimizer == "adafactor":
+        from repro.optim.adafactor import adafactor
+
+        return adafactor(schedule)
+    raise ValueError(f"unknown optimizer {tc.optimizer!r}")

@@ -1,0 +1,76 @@
+"""Gradient compression for data-parallel reduction.
+
+Two modes (TrainConfig.grad_compression):
+
+* ``bf16``: cast gradients to bfloat16 before the DP reduction — the JAX
+  analogue of the paper's "FP16 communication" (Table 5); halves DP
+  all-reduce bytes.
+* ``int8``: per-tensor symmetric int8 quantisation with error feedback.
+  Used with ``compressed_psum`` (an explicit shard_map collective:
+  quantise -> all_gather(int8) -> dequantise+sum) when the trainer runs
+  in explicit-collective mode; the error-feedback residual makes the
+  scheme unbiased over time.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, mode: str, error_feedback=None):
+    """Lossy-compress a gradient tree; returns (compressed_grads, new_ef).
+
+    For ``bf16`` compression the dtype conversion *is* the compression —
+    under GSPMD the DP psum then moves bf16.  For ``int8`` we apply
+    quantise->dequantise with error feedback (the psum itself still runs
+    in the dequantised domain under GSPMD; the explicit int8 collective
+    path is `compressed_psum` below).
+    """
+    if mode == "none":
+        return grads, error_feedback
+    if mode == "bf16":
+        return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads), error_feedback
+    if mode == "int8":
+        if error_feedback is None:
+            error_feedback = jax.tree_util.tree_map(
+                lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+        def one(g, ef):
+            target = g.astype(jnp.float32) + ef
+            q, s = quantize_int8(target)
+            deq = dequantize_int8(q, s)
+            return deq.astype(g.dtype), target - deq
+
+        pairs = jax.tree_util.tree_map(one, grads, error_feedback)
+        is_pair = lambda x: isinstance(x, tuple)
+        out = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=is_pair)
+        ef = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=is_pair)
+        return out, ef
+    raise ValueError(f"unknown compression mode {mode!r}")
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-gather + local dequantised sum (inside shard_map).
+
+    Moves 1/4 the bytes of an f32 psum (int8 payload + one f32 scale per
+    shard) at the cost of an all-gather layout.
+    """
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)          # (n, ...)
+    ss = jax.lax.all_gather(scale, axis_name)      # (n,)
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * q.ndim)
+    return jnp.sum(deq, axis=0).astype(x.dtype)

@@ -1,0 +1,25 @@
+"""LR schedules. The paper (Table 5) uses linear warmup of 500 steps."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_constant(peak_lr: float, warmup_steps: int = 500):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        return peak_lr * warm
+
+    return schedule
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        progress = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return peak_lr * warm * (final_frac + (1 - final_frac) * cos)
+
+    return schedule

@@ -1,0 +1,74 @@
+"""ZeRO-1: shard optimizer state over the data-parallel axes.
+
+Under GSPMD this is purely a sharding declaration: optimizer states
+mirror the parameter trees, and we extend each state tensor's
+PartitionSpec with the DP axes on the first dimension that is currently
+replicated and divisible.  The partitioner then computes the optimizer
+update sharded over DP and all-gathers the applied updates — the ZeRO-1
+communication schedule — with state memory cut by |DP|.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import Rules
+
+
+def _extend_spec(spec: P, shape, mesh: Mesh, dp_axes) -> P:
+    """Add DP axes to the first replicated, divisible dim of `shape`."""
+    used = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(a)
+    dp = tuple(a for a in dp_axes if a not in used)
+    if not dp:
+        return spec
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, e in enumerate(entries):
+        if e is None and shape[i] > 0 and shape[i] % dp_size == 0:
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def zero1_shardings(opt_state_shapes, param_pspecs, rules: Rules):
+    """NamedSharding tree for optimizer state.
+
+    ``opt_state_shapes``: tree of ShapeDtypeStruct from
+    ``jax.eval_shape(optimizer.init, params)``.  State leaves that mirror
+    a parameter keep its model-parallel spec; reduced-rank factors
+    (Adafactor vr/vc) fall back to P().  All leaves additionally get DP
+    sharding on a free divisible dimension (the ZeRO-1 cut).
+    """
+    mesh = rules.mesh
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    is_p = lambda x: isinstance(x, P)
+
+    def build(state_sub):
+        flat_p, treedef = jax.tree_util.tree_flatten(param_pspecs, is_leaf=is_p)
+        try:
+            flat_s = treedef.flatten_up_to(state_sub)
+        except ValueError:
+            return jax.tree_util.tree_map(
+                lambda l: NamedSharding(mesh, _extend_spec(P(), l.shape, mesh, dp_axes)),
+                state_sub)
+        out = []
+        for pspec, s in zip(flat_p, flat_s):
+            out.append(jax.tree_util.tree_map(
+                lambda l, _p=pspec: NamedSharding(
+                    mesh, _extend_spec(_p if len(_p) <= len(l.shape) else P(),
+                                       l.shape, mesh, dp_axes)),
+                s))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    if isinstance(opt_state_shapes, dict):
+        return {k: build(v) for k, v in opt_state_shapes.items()}
+    return build(opt_state_shapes)

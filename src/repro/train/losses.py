@@ -1,0 +1,43 @@
+"""Loss functions: causal-LM cross entropy (+ MoE auxiliary losses)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Mean token CE over labels >= 0 (negative labels are masked).
+
+    logits: (B, S, V) — may be over a padded vocab; padded entries were
+    already masked to -inf upstream.  Returns (loss, n_tokens).
+    """
+    valid = labels >= 0
+    safe_labels = jnp.maximum(labels, 0)
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    # select-by-mask instead of take_along_axis: keeps the (sharded) vocab
+    # axis a plain reduction under GSPMD (no gather -> no logits all-gather)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_ids == safe_labels[..., None], logits32, 0.0),
+                   axis=-1)
+    nll = (logz - gold) * valid
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / n, n
+
+
+def total_loss(logits, labels, aux: Dict) -> Tuple[jax.Array, Dict]:
+    ce, n = cross_entropy(logits, labels)
+    loss = ce + aux.get("moe_aux_loss", 0.0) + aux.get("moe_z_loss", 0.0)
+    metrics = {
+        "loss": loss,
+        "ce": ce,
+        "log_ppl": ce,                      # the paper reports training log-PPL
+        "tokens": n,
+        "moe_aux_loss": aux.get("moe_aux_loss", jnp.zeros((), jnp.float32)),
+    }
+    for k in ("moe_cv", "moe_dropped_fraction"):
+        if k in aux:
+            metrics[k] = aux[k]             # per-layer traces (L,)
+    return loss, metrics

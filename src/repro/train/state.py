@@ -1,0 +1,22 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array            # scalar int32
+    error_feedback: Any = None  # int8-compression residual (or None)
+
+
+def init_train_state(params, optimizer, grad_compression: str = "none") -> TrainState:
+    opt_state = optimizer.init(params)
+    ef = None
+    if grad_compression == "int8":
+        ef = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32), ef)

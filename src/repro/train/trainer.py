@@ -1,0 +1,99 @@
+"""The train step: forward/backward, grad-accumulation, clipping,
+compression, optimizer update.  Pure function of (state, batch) — jit /
+pjit it with the shardings from `repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.registry import get_family
+from repro.optim.api import Optimizer
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.compression import compress_grads
+from repro.train.losses import total_loss
+from repro.train.state import TrainState
+
+
+def make_loss_fn(cfg: ModelConfig):
+    fam = get_family(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = fam.forward(params, batch, cfg)
+        loss, metrics = total_loss(logits, batch["labels"], aux)
+        return loss, metrics
+
+    return loss_fn
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import active_rules
+
+    rules = active_rules()
+
+    def f(x):
+        y = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        if rules is not None:
+            dp = rules.acts.get("batch")
+            size = rules.axis_size(dp)
+            if dp is not None and y.shape[1] % size == 0:
+                y = jax.lax.with_sharding_constraint(
+                    y, NamedSharding(rules.mesh, P(None, dp)))
+        return y
+
+    return jax.tree_util.tree_map(f, batch)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, optimizer: Optimizer) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if tc.microbatches > 1:
+            mb = _split_microbatches(batch, tc.microbatches)
+
+            def acc(carry, one):
+                g_acc, m_acc = carry
+                (loss, metrics), grads = grad_fn(state.params, one)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
+                m_acc = jax.tree_util.tree_map(jnp.add, m_acc,
+                                               {"loss": loss, "ce": metrics["ce"]})
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            m0 = {"loss": jnp.zeros((), jnp.float32), "ce": jnp.zeros((), jnp.float32)}
+            (grads, msum), _ = jax.lax.scan(acc, (g0, m0), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / tc.microbatches, grads)
+            metrics = {k: v / tc.microbatches for k, v in msum.items()}
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip_norm)
+        grads, ef = compress_grads(grads, tc.grad_compression, state.error_feedback)
+        updates, new_opt = optimizer.update(grads, state.opt_state, state.params, state.step)
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+            state.params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        new_state = TrainState(new_params, new_opt, state.step + 1, ef)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests see 1 device (the dry-run sets its own XLA_FLAGS in-process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

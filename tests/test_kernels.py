@@ -1,0 +1,102 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_ffn.ops import moe_ffn
+from repro.kernels.moe_ffn.ref import moe_ffn_ref
+
+MOE_CASES = [
+    # (E, X, M, I, act, dtype)
+    (4, 64, 32, 48, "swiglu", jnp.float32),
+    (2, 100, 64, 96, "gelu", jnp.float32),       # row padding path
+    (3, 128, 128, 256, "swiglu", jnp.bfloat16),
+    (1, 8, 16, 512, "relu", jnp.float32),
+    (8, 32, 64, 64, "swiglu", jnp.bfloat16),
+    (2, 256, 32, 40, "gelu", jnp.float32),        # I not a power of two
+]
+
+
+@pytest.mark.parametrize("E,X,M,I,act,dt", MOE_CASES)
+def test_moe_ffn_kernel_allclose(E, X, M, I, act, dt):
+    ks = jax.random.split(jax.random.PRNGKey(E * X + I), 4)
+    x = jax.random.normal(ks[0], (E, X, M), dt)
+    wu = (jax.random.normal(ks[1], (E, M, I), dt) * 0.1).astype(dt)
+    wg = (jax.random.normal(ks[2], (E, M, I), dt) * 0.1).astype(dt) if act == "swiglu" else None
+    wd = (jax.random.normal(ks[3], (E, I, M), dt) * 0.1).astype(dt)
+    y = moe_ffn(x, wu, wg, wd, act)
+    yr = moe_ffn_ref(x, wu, wg, wd, act)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               atol=tol, rtol=tol)
+
+
+FLASH_CASES = [
+    (2, 128, 4, 2, 32, True, jnp.float32),
+    (1, 96, 8, 8, 16, True, jnp.float32),
+    (2, 64, 4, 1, 64, False, jnp.float32),
+    (1, 256, 4, 2, 32, True, jnp.bfloat16),
+    (1, 80, 2, 2, 128, True, jnp.float32),        # non-pow2 seq
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,causal,dt", FLASH_CASES)
+def test_flash_attention_kernel_allclose(B, S, Hq, Hkv, D, causal, dt):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + D), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dt)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dt)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dt)
+    o = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=32)
+    r = attention_ref(q, k, v, causal=causal)
+    tol = 3e-2 if dt == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(r, np.float32),
+                               atol=tol)
+
+
+def test_chunked_attention_grads_match_reference():
+    from repro.models.chunked_attention import chunked_attention
+
+    B, S, Hkv, G, D = 2, 40, 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv * G, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+
+    def f_chunk(q_, k_, v_):
+        return chunked_attention(q_.reshape(B, S, Hkv, G, D), k_, v_, True, 0, 16, 0.0).sum()
+
+    def f_ref(q_, k_, v_):
+        return attention_ref(q_, k_, v_, causal=True).astype(jnp.float32).sum()
+
+    g1 = jax.grad(f_chunk, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+DECODE_CASES = [
+    (2, 128, 8, 2, 32, jnp.float32),
+    (1, 96, 4, 4, 16, jnp.float32),
+    (3, 256, 8, 1, 64, jnp.bfloat16),
+    (2, 80, 2, 2, 128, jnp.float32),      # non-pow2 cache length
+]
+
+
+@pytest.mark.parametrize("B,T,Hq,Hkv,D,dt", DECODE_CASES)
+def test_decode_attention_kernel_allclose(B, T, Hq, Hkv, D, dt):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(B * T + D), 4)
+    q = jax.random.normal(ks[0], (B, Hq, D), dt)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dt)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dt)
+    lengths = jax.random.randint(ks[3], (B,), 1, T + 1)
+    o = decode_attention(q, k, v, lengths, block_kv=32)
+    r = decode_attention_ref(q, k, v, lengths)
+    tol = 3e-2 if dt == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(r, np.float32),
+                               atol=tol)

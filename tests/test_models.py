@@ -1,0 +1,118 @@
+"""Model-family behaviour: decode==parallel equivalences, cache handling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import transformer as TF
+from repro.models import xlstm as XL
+from repro.models import mamba2 as M2
+from repro.models import zamba as ZB
+from repro.models import encdec as ED
+from repro.nn import init
+
+
+def test_transformer_prefill_decode_matches_full():
+    # capacity_factor high enough that no token is ever dropped -> exact
+    cfg = ModelConfig(num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=96, vocab_size=97, dtype="float32",
+                      moe=MoEConfig(num_experts=4, routing="prototype",
+                                    num_prototypes=2, group_size=32,
+                                    capacity_factor=8.0))
+    params = init(TF.lm_specs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 97)
+    full, _ = jax.jit(lambda p, t: TF.lm_apply(p, t, cfg))(params, toks)
+    lg, caches, _ = jax.jit(lambda p, t: TF.prefill_apply(p, t, cfg, max_len=16))(
+        params, toks[:, :8])
+    errs = [float(jnp.abs(lg[:, 7] - full[:, 7]).max())]
+    for i in range(8, 12):
+        lg2, caches = jax.jit(lambda p, t, c: TF.decode_apply(p, t, c, cfg))(
+            params, toks[:, i:i + 1], caches)
+        errs.append(float(jnp.abs(lg2[:, 0] - full[:, i]).max()))
+    assert max(errs) < 3e-4, errs
+
+
+def test_chunked_attention_in_model_matches_reference():
+    base = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                       d_ff=96, vocab_size=97, dtype="float32")
+    params = init(TF.lm_specs(base), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0, 97)
+    ref, _ = jax.jit(lambda p, t: TF.lm_apply(p, t, base.replace(attention_impl="reference")))(params, toks)
+    chk, _ = jax.jit(lambda p, t: TF.lm_apply(p, t, base.replace(
+        attention_impl="chunked", attention_block=16)))(params, toks)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(chk), atol=3e-4)
+
+
+def test_xlstm_decode_matches_parallel():
+    cfg = ModelConfig(family="xlstm", num_layers=4, d_model=48, num_heads=4,
+                      num_kv_heads=4, vocab_size=61, xlstm_slstm_period=4,
+                      ssm_chunk=16, dtype="float32")
+    params = init(XL.xlstm_specs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 61)
+    full, _, _ = jax.jit(lambda p, t: XL.xlstm_apply(p, t, cfg))(params, toks)
+    states = XL.xlstm_init_states(cfg, 2)
+    for i in range(10):
+        lg, _, states = jax.jit(lambda p, t, s: XL.xlstm_apply(p, t, cfg, states=s))(
+            params, toks[:, i:i + 1], states)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]),
+                                   atol=2e-4)
+
+
+def test_mamba2_chunk_invariance_and_decode():
+    cfg = ModelConfig(d_model=32, ssm_state=8, ssm_heads=4, ssm_chunk=8,
+                      dtype="float32")
+    params = init(M2.mamba2_block_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32)) * 0.3
+    y1, _ = M2.mamba2_block_apply(params, x, cfg)
+    y2, _ = M2.mamba2_block_apply(params, x, cfg.replace(ssm_chunk=24))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    st = M2.mamba2_init_state(cfg, 2)
+    for i in range(8):
+        yi, st = M2.mamba2_block_apply(params, x[:, i:i + 1], cfg, state=st)
+        np.testing.assert_allclose(np.asarray(yi[:, 0]), np.asarray(y1[:, i]), atol=1e-5)
+
+
+def test_zamba_decode_matches_parallel():
+    cfg = ModelConfig(family="zamba", num_layers=5, d_model=32, num_heads=4,
+                      num_kv_heads=4, d_ff=64, vocab_size=61, ssm_state=8,
+                      ssm_heads=4, ssm_chunk=8, zamba_shared_period=2,
+                      dtype="float32")
+    params = init(ZB.zamba_specs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 61)
+    full, _, _ = jax.jit(lambda p, t: ZB.zamba_apply(p, t, cfg))(params, toks)
+    state = ZB.zamba_init_state(cfg, 2, max_len=12)
+    for i in range(8):
+        lg, _, state = jax.jit(lambda p, t, s: ZB.zamba_apply(p, t, cfg, state=s))(
+            params, toks[:, i:i + 1], state)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]),
+                                   atol=3e-4)
+
+
+def test_encdec_decode_matches_teacher_forcing():
+    cfg = ModelConfig(family="encdec", num_layers=2, num_encoder_layers=2,
+                      d_model=48, num_heads=4, num_kv_heads=4, d_ff=64,
+                      vocab_size=73, norm="layernorm", ffn_activation="relu",
+                      dtype="float32")
+    params = init(ED.encdec_specs(cfg), jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 48))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 7), 0, 73)
+    full = jax.jit(lambda p, f, t: ED.encdec_train_apply(p, f, t, cfg)[0])(
+        params, frames, toks)
+    memory = ED.encode(params, frames, cfg)
+    state = ED.init_state(params, memory, cfg, max_len=8)
+    for i in range(7):
+        lg, state = jax.jit(lambda p, t, s: ED.decode_step(p, t, s, cfg))(
+            params, toks[:, i:i + 1], state)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]),
+                                   atol=3e-4)
+
+
+def test_vlm_prefix_positions():
+    cfg = ModelConfig(num_layers=2, d_model=32, num_heads=4, num_kv_heads=4,
+                      d_ff=64, vocab_size=61, num_image_tokens=4, dtype="float32")
+    params = init(TF.lm_specs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 61)
+    embeds = jax.random.normal(jax.random.PRNGKey(2), (2, 4, 32))
+    logits, _ = TF.lm_apply(params, toks, cfg, extra_embeds=embeds)
+    assert logits.shape[1] == 10  # image prefix + text

@@ -1,0 +1,109 @@
+"""Hypothesis property-based tests for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.routing import prototype_gating, route, topk_gating
+from repro.nn import init
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def routing_cases(draw):
+    E = draw(st.sampled_from([2, 4, 8]))
+    T = draw(st.integers(4, 40))
+    k = draw(st.integers(1, min(E, 3)))
+    cap = draw(st.integers(1, T))
+    seed = draw(st.integers(0, 2**16))
+    return E, T, k, cap, seed
+
+
+@given(routing_cases())
+@settings(**SETTINGS)
+def test_topk_invariants(case):
+    """For any logits: (a) <=1 token per (expert, slot), (b) each token's
+    dispatch count <= k, (c) per-expert load <= capacity, (d) combine
+    weights in [0,1] and sum <= 1 per token, (e) dispatch == (combine>0)."""
+    E, T, k, cap, seed = case
+    cfg = MoEConfig(num_experts=E, routing="topk", top_k=k, aux_loss_coef=0.01)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, T, E))
+    res = topk_gating(logits, cfg, cap)
+    d = np.asarray(res.dispatch)
+    c = np.asarray(res.combine)
+    assert d.shape == (1, T, E, cap)
+    assert (d.sum(axis=1) <= 1).all()          # slot occupancy
+    assert (d.sum(axis=(2, 3)) <= k).all()     # per-token fanout
+    assert (d.sum(axis=(1, 3)) <= cap).all()   # capacity
+    assert (c >= 0).all() and (c <= 1 + 1e-6).all()
+    assert (c.sum(axis=(2, 3)) <= 1 + 1e-5).all()
+    assert ((c > 0) == d).all()
+
+
+@given(routing_cases(), st.integers(1, 3))
+@settings(**SETTINGS)
+def test_prototype_invariants(case, Z):
+    F, T, _, cap, seed = case
+    E = Z * F
+    cfg = MoEConfig(num_experts=E, routing="prototype", num_prototypes=Z,
+                    aux_loss_coef=0.01)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, Z, T, F))
+    res = prototype_gating(logits, cfg, cap)
+    d = np.asarray(res.dispatch)
+    assert d.shape == (1, T, E, cap)
+    assert (d.sum(axis=1) <= 1).all()
+    # exactly one expert per prototype per token (before capacity), so
+    # fanout <= Z and per-prototype fanout <= 1
+    per_proto = d.reshape(1, T, Z, F, cap).sum(axis=(3, 4))
+    assert (per_proto <= 1).all()
+    assert 0.0 <= float(res.metrics["dropped_fraction"]) <= 1.0
+
+
+@given(st.integers(0, 2**16), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_int8_quantization_bounded_error(seed, n):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+    q, s = quantize_int8(jnp.asarray(x))
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - x)
+    assert err.max() <= float(s) * 0.5 + 1e-7  # half-ulp of the int8 grid
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip_property(seed):
+    import tempfile
+
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    key = jax.random.PRNGKey(seed)
+    tree = {
+        "a": jax.random.normal(key, (3, 5)),
+        "nested": {"b": jnp.arange(7, dtype=jnp.int32),
+                   "c": jax.random.normal(key, (2,), jnp.bfloat16)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(1, tree)
+        restored = ck.restore(1, jax.eval_shape(lambda: tree))
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 1000), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_data_pipeline_deterministic_and_seekable(step1, step2):
+    from repro.data.pipeline import SyntheticLM
+
+    p = SyntheticLM(vocab_size=101, batch=2, seq_len=16, seed=7)
+    b1 = p.batch_at(step1)
+    b1_again = p.batch_at(step1)
+    np.testing.assert_array_equal(b1["tokens"], b1_again["tokens"])
+    if step1 != step2:
+        b2 = p.batch_at(step2)
+        assert not np.array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()

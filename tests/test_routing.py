@@ -1,0 +1,149 @@
+"""Routing semantics vs the paper's pseudo-code (Figs. 7-8) + invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core.routing import (
+    prototype_gating, route, router_logits_prototype, router_logits_topk,
+    topk_gating)
+
+
+def _mk_logits(key, G, T, E):
+    return jax.random.normal(key, (G, T, E), jnp.float32)
+
+
+class TestTopK:
+    def test_top1_selects_argmax(self):
+        cfg = MoEConfig(num_experts=4, routing="topk", top_k=1, aux_loss_coef=0.0)
+        logits = _mk_logits(jax.random.PRNGKey(0), 1, 16, 4)
+        res = topk_gating(logits, cfg, capacity=16)
+        # every token goes to exactly its argmax expert
+        chosen = jnp.argmax(jnp.sum(res.combine, axis=-1), axis=-1)  # (G,T)
+        np.testing.assert_array_equal(np.asarray(chosen), np.asarray(jnp.argmax(logits, -1)))
+
+    def test_topk_gate_values_are_softmax_probs(self):
+        # Fig. 8: gates are raw softmax probabilities (not renormalised)
+        cfg = MoEConfig(num_experts=8, routing="topk", top_k=2, aux_loss_coef=0.0)
+        logits = _mk_logits(jax.random.PRNGKey(1), 2, 8, 8)
+        res = topk_gating(logits, cfg, capacity=8)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top2 = jnp.sort(probs, axis=-1)[..., -2:].sum(-1)
+        total_gate = jnp.sum(res.combine, axis=(-1, -2))
+        np.testing.assert_allclose(np.asarray(total_gate), np.asarray(top2), rtol=1e-5)
+
+    def test_capacity_enforced_per_expert(self):
+        cfg = MoEConfig(num_experts=2, routing="topk", top_k=1, aux_loss_coef=0.0)
+        # all tokens prefer expert 0
+        logits = jnp.stack([jnp.full((32,), 5.0), jnp.zeros((32,))], axis=-1)[None]
+        res = topk_gating(logits, cfg, capacity=4)
+        loads = jnp.sum(res.dispatch, axis=(0, 1, 3))
+        assert int(loads[0]) == 4  # capacity-bound
+        assert float(res.metrics["dropped_fraction"]) == pytest.approx(28 / 32)
+
+    def test_positions_unique_within_expert(self):
+        cfg = MoEConfig(num_experts=4, routing="topk", top_k=2, aux_loss_coef=0.0)
+        logits = _mk_logits(jax.random.PRNGKey(2), 1, 64, 4)
+        res = topk_gating(logits, cfg, capacity=64)
+        # each (expert, position) slot holds at most one token
+        slot_occupancy = jnp.sum(res.dispatch, axis=1)  # (G,E,C)
+        assert int(jnp.max(slot_occupancy)) <= 1
+
+    def test_sequential_iterations_share_capacity(self):
+        # 2nd argmax pass continues positions where the 1st left off
+        cfg = MoEConfig(num_experts=2, routing="topk", top_k=2, aux_loss_coef=0.0)
+        logits = jnp.stack([jnp.full((8,), 3.0), jnp.full((8,), 2.0)], -1)[None]
+        res = topk_gating(logits, cfg, capacity=10)
+        loads = jnp.sum(res.dispatch, axis=(0, 1, 3))
+        # 8 tokens x top-2 over 2 experts: expert0 gets 8, expert1 gets 8,
+        # capacity 10 -> 8 each, no overflow collisions
+        assert int(loads[0]) == 8 and int(loads[1]) == 8
+
+
+class TestPrototype:
+    def test_equals_concatenated_top1(self):
+        """Z top-1 routing == independent top-1 within each prototype."""
+        Z, F, T = 2, 4, 32
+        cfg = MoEConfig(num_experts=Z * F, routing="prototype", num_prototypes=Z,
+                        aux_loss_coef=0.0)
+        logits = jax.random.normal(jax.random.PRNGKey(3), (1, Z, T, F))
+        res = prototype_gating(logits, cfg, capacity=T)
+        combine = res.combine.reshape(1, T, Z, F, T)
+        for z in range(Z):
+            sub_cfg = MoEConfig(num_experts=F, routing="topk", top_k=1, aux_loss_coef=0.0)
+            sub = topk_gating(logits[:, z], sub_cfg, capacity=T)
+            np.testing.assert_allclose(np.asarray(combine[:, :, z]),
+                                       np.asarray(sub.combine), rtol=1e-6)
+
+    def test_each_token_hits_k_prototypes(self):
+        Z, F, T = 4, 2, 16
+        cfg = MoEConfig(num_experts=Z * F, routing="prototype", num_prototypes=Z,
+                        aux_loss_coef=0.0)
+        logits = jax.random.normal(jax.random.PRNGKey(4), (1, Z, T, F))
+        res = prototype_gating(logits, cfg, capacity=T)
+        per_token = jnp.sum(res.dispatch, axis=(2, 3))  # (G,T)
+        np.testing.assert_array_equal(np.asarray(per_token), Z)
+
+    def test_no_argmax_loop_for_kprime_1(self):
+        # structural check: prototype routing with k'=1 runs ONE argmax pass
+        # regardless of Z, while top-k runs k passes.  We verify via jaxpr
+        # op counts (argmax lowers to reduce ops: count them).
+        def n_argmax(fn, *args):
+            jaxpr = jax.make_jaxpr(fn)(*args)
+            return str(jaxpr).count("argmax")
+
+        cfg_p = MoEConfig(num_experts=8, routing="prototype", num_prototypes=4)
+        cfg_t = MoEConfig(num_experts=8, routing="topk", top_k=4)
+        lp = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 8, 2))
+        lt = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 8))
+        assert n_argmax(lambda l: prototype_gating(l, cfg_p, 4).combine, lp) == 1
+        assert n_argmax(lambda l: topk_gating(l, cfg_t, 4).combine, lt) == 4
+
+    def test_router_logits_shapes(self):
+        x = jnp.ones((2, 8, 16))
+        assert router_logits_topk(x, jnp.ones((16, 6))).shape == (2, 8, 6)
+        assert router_logits_prototype(x, jnp.ones((16, 3, 2))).shape == (2, 3, 8, 2)
+
+
+class TestAuxLoss:
+    def test_balanced_assignment_minimises_aux(self):
+        cfg = MoEConfig(num_experts=4, routing="topk", top_k=1, aux_loss_coef=1.0)
+        T = 64
+        # perfectly balanced: tokens cycle over experts with sharp logits
+        ids = jnp.arange(T) % 4
+        bal = 10.0 * jax.nn.one_hot(ids, 4)[None]
+        res_bal = topk_gating(bal, cfg, capacity=T)
+        # collapsed: everyone to expert 0
+        col = 10.0 * jax.nn.one_hot(jnp.zeros(T, jnp.int32), 4)[None]
+        res_col = topk_gating(col, cfg, capacity=T)
+        assert float(res_bal.aux_loss) < float(res_col.aux_loss)
+        # balanced: aux ~= coef (density*proxy*E^2 = E^2 * (1/E * 1/E) * E... )
+        assert float(res_bal.aux_loss) == pytest.approx(1.0, rel=0.05)
+
+    def test_cv_metric(self):
+        cfg = MoEConfig(num_experts=4, routing="topk", top_k=1, aux_loss_coef=0.0)
+        ids = jnp.arange(64) % 4
+        bal = 10.0 * jax.nn.one_hot(ids, 4)[None]
+        res = topk_gating(bal, cfg, capacity=64)
+        assert float(res.metrics["cv"]) == pytest.approx(0.0, abs=1e-6)
+        col = 10.0 * jax.nn.one_hot(jnp.zeros(64, jnp.int32), 4)[None]
+        res2 = topk_gating(col, cfg, capacity=64)
+        assert float(res2.metrics["cv"]) == pytest.approx(np.sqrt(3), rel=1e-3)
+
+
+class TestCapacityFormula:
+    def test_eq2(self):
+        # C = k*T/N * gamma  (paper Eq. 2)
+        m = MoEConfig(num_experts=64, routing="topk", top_k=2, capacity_factor=1.25)
+        assert m.capacity(2048) == int(2 * 2048 / 64 * 1.25)
+
+    def test_capacity_one_mode(self):
+        m = MoEConfig(num_experts=64, routing="topk", top_k=4,
+                      capacity_factor=1.25, capacity_mode="one")
+        assert m.capacity(2048) == int(1 * 2048 / 64 * 1.25)
+
+    def test_prototype_active_k(self):
+        m = MoEConfig(num_experts=64, routing="prototype", num_prototypes=4)
+        assert m.active_k == 4
+        assert m.experts_per_prototype == 16
