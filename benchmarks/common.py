@@ -37,11 +37,9 @@ def bench_config(layers=3, d_model=128, d_ff=256, experts=16, vocab=4096,
         remat=False, moe=MoEConfig(**moe))
 
 
-def variant(cfg: ModelConfig, routing: str, k: int, capacity_mode: str = "k") -> ModelConfig:
-    if routing == "topk":
-        return cfg.replace_moe(routing="topk", top_k=k, capacity_mode=capacity_mode)
-    return cfg.replace_moe(routing="prototype", num_prototypes=k,
-                           prototype_top_k=1, capacity_mode=capacity_mode)
+# The ablation-grid helper is shared with the paper configs — one
+# definition keeps benchmark cells and config variants in sync.
+from repro.configs.m6 import variant  # noqa: E402,F401
 
 
 def train_run(cfg: ModelConfig, steps: int, batch: int, seq: int, lr=3e-3,
@@ -109,8 +107,10 @@ def train_flops(cfg: ModelConfig, batch: int, seq: int) -> float:
         logits, aux = fam.forward(p, bb, cfgp)
         return total_loss(logits, bb["labels"], aux)[0]
 
+    from repro.distributed.costs import cost_analysis_dict
+
     c = jax.jit(jax.grad(f)).lower(params, b).compile()
-    return float(c.cost_analysis()["flops"])
+    return float(cost_analysis_dict(c)["flops"])
 
 
 def save_result(name: str, payload) -> str:

@@ -1,14 +1,37 @@
-"""Table 2: training speed (ms/step) of routing strategies at Capacity 1x.
+"""Table 2: training speed (ms/step) of routing strategies at Capacity 1x,
+plus a beyond-paper sweep of routing strategy x execution path.
 
 Paper claim: the looping argmax makes top-k (k>1) markedly slower, while
 k top-1 prototyping stays within a few percent of top-1.
+
+The sweep isolates where the time goes per (strategy, impl) cell of the
+MoE layer forward:
+
+* ``route_ms``  — RoutingPlan construction only (the index view);
+* ``ffn_ms``    — expert FFN on an already-dispatched buffer;
+* ``layer_ms``  — the full layer forward;
+* ``dispatch_combine_ms`` — layer minus route minus ffn: the token
+  movement cost the index-view rewrite targets (the einsum path pays
+  O(T*E*C*M) one-hot contractions here, gather/pallas pay O(k*T*M)).
+
+Results land in experiments/table2_speed.json (paper table) and
+experiments/BENCH_table2_speed_sweep.json (per-strategy/impl breakdown).
 """
 from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
 
 from benchmarks.common import bench_config, save_result, time_step, variant
 
 STRATEGIES = [("topk", 1, "Top-1"), ("topk", 2, "Top-2"), ("topk", 4, "Top-4"),
               ("prototype", 2, "2 Top-1"), ("prototype", 4, "4 Top-1")]
+
+SWEEP_STRATEGIES = STRATEGIES + [("expert_choice", 2, "EC Top-C"),
+                                 ("hash", 1, "Hash-1")]
+SWEEP_IMPLS = ("einsum", "gather", "pallas")
 
 
 def run(batch=8, seq=256, experts=32):
@@ -17,6 +40,67 @@ def run(batch=8, seq=256, experts=32):
     for routing, k, label in STRATEGIES:
         cfg = variant(base, routing, k, capacity_mode="one")
         out[label] = time_step(cfg, batch, seq)["ms_per_step"]
+    return out
+
+
+def _median_ms(fn, *args, iters=16):
+    fn(*args).block_until_ready()  # compile + warmup
+    times = []
+    for _ in range(iters):
+        t0 = time.time()
+        fn(*args).block_until_ready()
+        times.append((time.time() - t0) * 1e3)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def time_moe_layer(cfg, batch, seq, iters=16):
+    """Per-phase forward timings of one MoE layer (see module docstring)."""
+    from repro.core import moe
+    from repro.core.routing import route
+    from repro.nn import init
+
+    m = cfg.moe
+    params = init(moe.moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, seq, cfg.d_model),
+                          cfg.activation_dtype)
+    xg, G = moe.group_tokens(x, m)
+    T = xg.shape[1]
+    capacity = m.capacity(T)
+
+    def route_only(p, xx):
+        xgg, _ = moe.group_tokens(xx, m)
+        w = p.get("router")
+        plan = route(xgg, None if w is None else w.astype(jnp.float32), m, capacity)
+        return jnp.sum(plan.masked_gate) + plan.aux_loss
+
+    buf = jax.random.normal(jax.random.PRNGKey(2),
+                            (m.num_experts, G * capacity, cfg.d_model),
+                            cfg.activation_dtype)
+    ffn_only = jax.jit(lambda p, b: jnp.sum(moe._expert_ffn(p, b, cfg)))
+    layer = jax.jit(lambda p, xx: jnp.sum(moe.moe_ffn_apply(p, xx, cfg)[0]))
+
+    route_ms = _median_ms(jax.jit(route_only), params, x, iters=iters)
+    ffn_ms = _median_ms(ffn_only, params, buf, iters=iters)
+    layer_ms = _median_ms(layer, params, x, iters=iters)
+    return {
+        "route_ms": route_ms,
+        "ffn_ms": ffn_ms,
+        "layer_ms": layer_ms,
+        "dispatch_combine_ms": max(layer_ms - route_ms - ffn_ms, 0.0),
+        "capacity": capacity,
+        "groups": G,
+    }
+
+
+def run_sweep(batch=8, seq=256, experts=32, impls=SWEEP_IMPLS):
+    base = bench_config(experts=experts).replace_moe(capacity_mode="one")
+    out = {}
+    for routing, k, label in SWEEP_STRATEGIES:
+        out[label] = {}
+        for impl in impls:
+            cfg = variant(base, routing, k, capacity_mode="one").replace_moe(impl=impl)
+            out[label][impl] = time_moe_layer(cfg, batch, seq)
     return out
 
 
@@ -29,6 +113,14 @@ def main():
     ratio = out["Top-4"] / out["4 Top-1"]
     print(f"table2,top4_over_4top1,{ratio:.3f}")
     save_result("table2_speed", out)
+
+    sweep = run_sweep()
+    print("sweep,strategy,impl,layer_ms,route_ms,dispatch_combine_ms,ffn_ms")
+    for label, impls in sweep.items():
+        for impl, r in impls.items():
+            print(f"sweep,{label},{impl},{r['layer_ms']:.2f},{r['route_ms']:.2f},"
+                  f"{r['dispatch_combine_ms']:.2f},{r['ffn_ms']:.2f}")
+    save_result("BENCH_table2_speed_sweep", sweep)
     return out
 
 

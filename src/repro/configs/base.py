@@ -17,10 +17,12 @@ class MoEConfig:
     """Mixture-of-Experts + expert-prototyping (M6-T) configuration."""
 
     num_experts: int = 0                 # 0 => dense FFN
-    # Routing mode: "topk" (GShard/Switch sequential top-k, looping argmax)
-    # or "prototype" (M6-T k top-1 expert prototyping).
+    # Routing strategy: a key into the repro.core.routers registry.
+    # Built-ins: "topk" (GShard/Switch sequential top-k, looping argmax),
+    # "prototype" (M6-T k top-1 expert prototyping), "expert_choice"
+    # (experts pick their top-C tokens), "hash" (stateless position hash).
     routing: str = "topk"
-    top_k: int = 1                       # k for topk routing
+    top_k: int = 1                       # k for topk/expert_choice/hash routing
     num_prototypes: int = 1              # Z for prototype routing
     prototype_top_k: int = 1             # k' inside each prototype (paper: 1)
     # Capacity convention (M6-T 3.2): "k" => C = k*T/N*gamma ; "one" => C = 1*T/N*gamma
@@ -29,7 +31,10 @@ class MoEConfig:
     aux_loss_coef: float = 0.01          # 0 disables the balancing loss
     router_z_loss_coef: float = 0.0      # beyond-paper stability option
     router_dtype: str = "float32"        # routers always f32 (stability)
-    normalize_gates: bool = False        # Fig. 8 uses raw softmax gates
+    # Renormalise each token's kept gates to sum to 1.  Applies to every
+    # router (including prototype, where pre-registry code ignored it;
+    # Fig. 8 itself uses raw softmax gates — hence the False default).
+    normalize_gates: bool = False
     group_size: int = 2048               # tokens per routing group (GShard "d")
     combine_dtype: str = "auto"          # "auto": activation dtype (mesh-tf bf16)
     # Execution path: "einsum" (paper-faithful GShard one-hot einsums),
@@ -38,8 +43,18 @@ class MoEConfig:
     moe_attention: bool = False          # M6-T 3.4 (negative result)
     expert_axis: str = "model"           # mesh axis experts are sharded over
 
+    def __post_init__(self):
+        if self.num_experts > 0:
+            # Lazy import: the registry lives above configs in the layer
+            # graph, but validation only runs at instance creation, after
+            # repro.core.routers has had a chance to register plugins.
+            from repro.core.routers import get_router
+
+            get_router(self.routing)  # raises with the registry key list
+
     @property
     def active_k(self) -> int:
+        """Expert choices per token (expected, for capacity/metrics)."""
         if self.num_experts == 0:
             return 0
         if self.routing == "prototype":

@@ -44,11 +44,12 @@ CONFIG = M6_BASE
 
 
 def variant(base: ModelConfig, routing: str, k: int, capacity_mode: str = "k") -> ModelConfig:
-    """Paper ablation grid: Top-1/2/4 and 2/4 Top-1, Capacity kx / 1x."""
-    if routing == "topk":
-        return base.replace_moe(routing="topk", top_k=k, capacity_mode=capacity_mode)
-    return base.replace_moe(routing="prototype", num_prototypes=k,
-                            prototype_top_k=1, capacity_mode=capacity_mode)
+    """Paper ablation grid (Top-1/2/4, 2/4 Top-1, Capacity kx / 1x) plus
+    any other registered router (expert_choice, hash, plugins) k-way."""
+    if routing == "prototype":
+        return base.replace_moe(routing="prototype", num_prototypes=k,
+                                prototype_top_k=1, capacity_mode=capacity_mode)
+    return base.replace_moe(routing=routing, top_k=k, capacity_mode=capacity_mode)
 
 
 def smoke() -> ModelConfig:

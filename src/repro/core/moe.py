@@ -2,13 +2,17 @@
 execution paths:
 
 * ``impl="einsum"``  — paper-faithful GShard one-hot einsum dispatch/combine
-  (`dispatch[GTEC] x tokens[GTM] -> [EGCM]`, expert FFN, combine back).
-  Under pjit the expert axis sharding induces the all-to-alls of Fig. 7.
-* ``impl="gather"``  — beyond-paper optimized path: scatter/gather token
-  movement, O(k*T*M) instead of O(T*E*C*M); same outputs.
-* ``impl="pallas"``  — gather dispatch + Pallas grouped-GEMM expert FFN
-  (`repro.kernels.moe_ffn`) for the compute hot-spot (the paper's appendix
-  attributes ~98% of MoE-layer forward FLOPs to the two expert matmuls).
+  (`dispatch[GTEC] x tokens[GTM] -> [EGCM]`, expert FFN, combine back),
+  materialising the RoutingPlan's dense view.  Under pjit the expert axis
+  sharding induces the all-to-alls of Fig. 7.
+* ``impl="gather"``  — beyond-paper optimized path: consumes the plan's
+  *index view* directly — tokens are scattered into flat (E*C) expert
+  buffers by slot id and gathered back by the same ids.  O(k*T*M) memory
+  and compute instead of O(T*E*C*M); no (G,T,E,C) tensor is ever built.
+* ``impl="pallas"``  — the same index-view dispatch feeding the Pallas
+  grouped-GEMM expert FFN (`repro.kernels.moe_ffn`) for the compute
+  hot-spot (the paper's appendix attributes ~98% of MoE-layer forward
+  FLOPs to the two expert matmuls).
 """
 from __future__ import annotations
 
@@ -18,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoEConfig
-from repro.core.routing import RoutingResult, route
+from repro.core.routers import get_router
+from repro.core.routing import RoutingPlan, route
 from repro.distributed.sharding import shard
 from repro.nn import ParamSpec, truncated_normal_init
 
@@ -33,18 +38,13 @@ def moe_ffn_specs(cfg: ModelConfig, d_model: Optional[int] = None):
     dff = cfg.d_ff
     wdt = jnp.dtype(cfg.param_dtype)
     init = truncated_normal_init(cfg.initializer_range)
-    if m.routing == "prototype":
-        router = ParamSpec(
-            (d, m.num_prototypes, m.experts_per_prototype),
-            jnp.float32, ("embed", None, "expert"), init,
-        )
-    else:
-        router = ParamSpec((d, m.num_experts), jnp.float32, ("embed", "expert"), init)
     specs = {
-        "router": router,
         "up": ParamSpec((m.num_experts, d, dff), wdt, ("expert", "embed", "mlp"), init),
         "down": ParamSpec((m.num_experts, dff, d), wdt, ("expert", "mlp", "embed"), init),
     }
+    router = get_router(m.routing).param_spec(m, d, init)
+    if router is not None:
+        specs["router"] = router
     if cfg.ffn_activation in ("swiglu", "geglu"):
         specs["gate"] = ParamSpec((m.num_experts, d, dff), wdt, ("expert", "embed", "mlp"), init)
     return specs
@@ -101,11 +101,12 @@ def _expert_ffn(params, dispatched: jax.Array, cfg: ModelConfig) -> jax.Array:
 # Execution paths
 # ---------------------------------------------------------------------------
 
-def _einsum_path(params, xg, routing: RoutingResult, cfg: ModelConfig) -> jax.Array:
+def _einsum_path(params, xg, plan: RoutingPlan, cfg: ModelConfig) -> jax.Array:
     """Paper-faithful Fig. 7: one-hot einsum dispatch -> expert FFN -> combine."""
     dt = cfg.activation_dtype
-    G, T, E, C = routing.combine.shape
-    dispatch = routing.dispatch.astype(dt)                     # (G,T,E,C)
+    combine = plan.combine                                     # (G,T,E,C) dense view
+    G, T, E, C = combine.shape
+    dispatch = (combine > 0.0).astype(dt)
     # 'dTZFC,dTZM->ZFdCM' in the paper == 'gtec,gtm->egcm' with E=Z*F.
     dispatched = jnp.einsum("gtec,gtm->egcm", dispatch, xg)
     dispatched = shard(dispatched, "expert", "groups", None, None)
@@ -113,41 +114,84 @@ def _einsum_path(params, xg, routing: RoutingResult, cfg: ModelConfig) -> jax.Ar
     out = out.reshape(E, G, C, cfg.d_model)
     out = shard(out, "expert", "groups", None, None)
     # 'dTEC,EdCM->dTM' == 'gtec,egcm->gtm'
-    y = jnp.einsum("gtec,egcm->gtm", routing.combine.astype(dt), out)
+    y = jnp.einsum("gtec,egcm->gtm", combine.astype(dt), out)
     return y
 
 
-def _gather_path(params, xg, routing: RoutingResult, cfg: ModelConfig) -> jax.Array:
-    """Optimized: scatter tokens into expert buffers, gather back.
+def _gather_path(params, xg, plan: RoutingPlan, cfg: ModelConfig) -> jax.Array:
+    """Index-view dispatch: scatter tokens into flat expert buffers by slot id.
 
-    Same (E,C) buffer layout and capacity semantics as the einsum path, so
-    outputs are bit-comparable (up to reduction order).
+    Each token-choice (g, t, j) owns slot ``e*C + c`` of group g's flat
+    buffer; overflowed choices are parked on a sentinel row that is
+    sliced off.  The same slot ids drive the gather-back, so the dense
+    (G,T,E,C) one-hot tensors are never built.  Same (E,C) buffer layout
+    and capacity semantics as the einsum path, so outputs match (up to
+    reduction order).  Branch-free in T.
+
+    Plans carrying the slot-major view (expert-choice: K would be E) are
+    dispatched from it instead: gather-by-slot in, scatter-add-by-token
+    out — O(E*C*M) token movement either way.
     """
+    if plan.token_at_slot is not None:
+        return _gather_path_slot_major(params, xg, plan, cfg)
     dt = cfg.activation_dtype
-    G, T, E, C = routing.combine.shape
+    G, T, K = plan.expert_index.shape
+    E, C = plan.num_experts, plan.capacity
     M = xg.shape[-1]
-    # slot id per (g, t, e, c) is e*C + c; each token occupies at most
-    # active_k slots.  Recover (slot -> token) via a scatter-add of x
-    # weighted by the dispatch mask: since each (e,c) slot holds at most
-    # one token, the sum places exactly that token (or zeros).
-    dispatch = routing.dispatch.astype(dt)
-    buf = jnp.einsum("gtec,gtm->gecm", dispatch, xg)  # fallback when T small
-    # For larger T, use true gather/scatter:
-    if T > 64:
-        # token index occupying each (e,c) slot (or -1)
-        tok_idx = jnp.argmax(routing.dispatch, axis=1)            # (G,E,C)
-        occupied = jnp.any(routing.dispatch, axis=1)              # (G,E,C)
-        gathered = jnp.take_along_axis(
-            xg[:, :, None, :], tok_idx.reshape(G, -1, 1, 1).astype(jnp.int32), axis=1
-        )
-        gathered = gathered.reshape(G, E, C, M)
-        buf = jnp.where(occupied[..., None], gathered, 0.0).astype(dt)
-    buf = jnp.transpose(buf, (1, 0, 2, 3))                        # (E,G,C,M)
+    n_slots = E * C
+
+    flat_slot = plan.expert_index * C + plan.slot_index        # (G,T,K)
+    flat_slot = jnp.where(plan.valid, flat_slot, n_slots)      # sentinel row
+    flat_slot = flat_slot.reshape(G, T * K)
+
+    # dispatch: scatter each choice's token vector into its slot.  Valid
+    # (e, c) targets are unique, so `add` places exactly one token per slot.
+    gi = jnp.arange(G)[:, None]
+    tok = jnp.repeat(jnp.arange(T), K)                         # (T*K,)
+    buf = jnp.zeros((G, n_slots + 1, M), dt)
+    buf = buf.at[gi, flat_slot].add(xg[:, tok, :].astype(dt))
+    buf = buf[:, :n_slots].reshape(G, E, C, M)
+
+    buf = jnp.transpose(buf, (1, 0, 2, 3))                     # (E,G,C,M)
     buf = shard(buf, "expert", "groups", None, None)
     out = _expert_ffn(params, buf.reshape(E, G * C, M), cfg).reshape(E, G, C, M)
-    out = jnp.transpose(out, (1, 0, 2, 3))                        # (G,E,C,M)
-    # combine: for each token sum over its (e,c) slots with gate weights
-    y = jnp.einsum("gtec,gecm->gtm", routing.combine.astype(dt), out)
+    out = shard(out, "expert", "groups", None, None)
+    out = jnp.transpose(out, (1, 0, 2, 3)).reshape(G, n_slots, M)
+
+    # combine: gather each choice's slot back and weight by its gate.
+    # Invalid choices carry gate 0, so clipping their slot is harmless.
+    picked = jnp.take_along_axis(
+        out, jnp.minimum(flat_slot, n_slots - 1)[..., None], axis=1)
+    gates = plan.masked_gate.astype(dt).reshape(G, T * K)
+    y = jnp.sum((picked * gates[..., None]).reshape(G, T, K, M), axis=2)
+    return y
+
+
+def _gather_path_slot_major(params, xg, plan: RoutingPlan, cfg: ModelConfig) -> jax.Array:
+    """Slot-major twin of :func:`_gather_path`: each (expert, slot) names
+    its token directly, so dispatch is a gather and combine a scatter-add
+    over tokens.  Empty slots (token -1) carry gate 0 and zeroed rows."""
+    dt = cfg.activation_dtype
+    G, T, M = xg.shape
+    E = plan.num_experts
+    Cs = plan.token_at_slot.shape[-1]
+
+    tok = plan.token_at_slot                                   # (G,E,Cs)
+    filled = tok >= 0
+    tok_safe = jnp.clip(tok, 0, T - 1).reshape(G, E * Cs, 1)
+    buf = jnp.take_along_axis(xg, tok_safe, axis=1).reshape(G, E, Cs, M)
+    buf = jnp.where(filled[..., None], buf, 0.0).astype(dt)
+
+    buf = jnp.transpose(buf, (1, 0, 2, 3))                     # (E,G,Cs,M)
+    buf = shard(buf, "expert", "groups", None, None)
+    out = _expert_ffn(params, buf.reshape(E, G * Cs, M), cfg).reshape(E, G, Cs, M)
+    out = shard(out, "expert", "groups", None, None)
+    out = jnp.transpose(out, (1, 0, 2, 3))                     # (G,E,Cs,M)
+
+    gates = jnp.where(filled, plan.gate_at_slot, 0.0).astype(dt)
+    vals = (out * gates[..., None]).reshape(G, E * Cs, M)
+    gi = jnp.arange(G)[:, None]
+    y = jnp.zeros((G, T, M), dt).at[gi, tok_safe[..., 0]].add(vals)
     return y
 
 
@@ -160,18 +204,21 @@ def moe_ffn_apply(params, x, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
     capacity = m.capacity(T)
     xg = shard(xg, "groups", None, None)
 
-    routing = route(xg, params["router"].astype(jnp.float32), m, capacity)
+    router_w = params.get("router")
+    if router_w is not None:
+        router_w = router_w.astype(jnp.float32)
+    plan = route(xg, router_w, m, capacity)
 
-    if m.impl in ("gather",):
-        y = _gather_path(params, xg, routing, cfg)
-    else:  # "einsum" (faithful) and "pallas" (einsum dispatch + kernel FFN)
-        y = _einsum_path(params, xg, routing, cfg)
+    if m.impl in ("gather", "pallas"):   # index-view dispatch (+ kernel FFN)
+        y = _gather_path(params, xg, plan, cfg)
+    else:                                # "einsum": paper-faithful dense view
+        y = _einsum_path(params, xg, plan, cfg)
 
     y = y.reshape(B, S, M).astype(x.dtype)
     aux = {
-        "moe_aux_loss": routing.aux_loss,
-        "moe_z_loss": routing.z_loss,
-        "moe_cv": routing.metrics["cv"],
-        "moe_dropped_fraction": routing.metrics["dropped_fraction"],
+        "moe_aux_loss": plan.aux_loss,
+        "moe_z_loss": plan.z_loss,
+        "moe_cv": plan.metrics["cv"],
+        "moe_dropped_fraction": plan.metrics["dropped_fraction"],
     }
     return y, aux

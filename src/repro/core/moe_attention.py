@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.moe import group_tokens
+from repro.core.routers import get_router
 from repro.core.routing import route
 from repro.distributed.sharding import shard
 from repro.models.attention import _sdpa, causal_mask
@@ -31,18 +32,16 @@ def moe_attention_specs(cfg: ModelConfig):
     wdt = jnp.dtype(cfg.param_dtype)
     init = truncated_normal_init(cfg.initializer_range)
     E = m.num_experts
-    if m.routing == "prototype":
-        router = ParamSpec((d, m.num_prototypes, m.experts_per_prototype),
-                           jnp.float32, ("embed", None, "expert"), init)
-    else:
-        router = ParamSpec((d, E), jnp.float32, ("embed", "expert"), init)
-    return {
-        "router": router,
+    specs = {
         "wq": ParamSpec((E, d, cfg.num_heads * hd), wdt, ("expert", "embed", "heads"), init),
         "wk": ParamSpec((E, d, cfg.num_kv_heads * hd), wdt, ("expert", "embed", "kv_heads"), init),
         "wv": ParamSpec((E, d, cfg.num_kv_heads * hd), wdt, ("expert", "embed", "kv_heads"), init),
         "wo": ParamSpec((E, cfg.num_heads * hd, d), wdt, ("expert", "heads", "embed"), init),
     }
+    router = get_router(m.routing).param_spec(m, d, init)
+    if router is not None:
+        specs["router"] = router
+    return specs
 
 
 def _moe_project(w, dispatched, dt):
@@ -60,13 +59,17 @@ def moe_attention_apply(params, x, cfg: ModelConfig, *, positions,
     xg, G = group_tokens(x, m)
     T = xg.shape[1]
     capacity = m.capacity(T)
-    routing = route(xg, params["router"].astype(jnp.float32), m, capacity)
+    router_w = params.get("router")
+    if router_w is not None:
+        router_w = router_w.astype(jnp.float32)
+    routing = route(xg, router_w, m, capacity)
     E, C = m.num_experts, capacity
 
-    disp = routing.dispatch.astype(dt)
+    combine = routing.combine                  # materialise the dense view once
+    disp = (combine > 0.0).astype(dt)
+    combine = combine.astype(dt)
     dispatched = jnp.einsum("gtec,gtm->egcm", disp, xg)
     dispatched = shard(dispatched, "expert", "groups", None, None)
-    combine = routing.combine.astype(dt)
 
     def back(y_egco, out_dim):
         y = jnp.einsum("gtec,egco->gto", combine, y_egco)

@@ -1,0 +1,189 @@
+"""The ``RoutingPlan`` contract and the ``Router`` protocol.
+
+A router turns token activations into a *plan*: for every token, up to K
+expert choices, each described by four ``(G, T, K)`` arrays —
+
+* ``expert_index`` — which expert the choice targets (int32 in [0, E));
+* ``slot_index``   — the position inside that expert's capacity buffer
+  (int32; values >= capacity mean the choice overflowed);
+* ``gate``         — the combine weight (float32, post-normalisation);
+* ``valid``        — whether the choice survived capacity (bool).
+
+This *index view* is the canonical, compact representation: it is
+``O(T*K)`` and is computed natively by every router — never recovered by
+``argmax`` over dense masks.  The paper-faithful GShard one-hot tensors
+(``combine``/``dispatch`` of shape ``(G, T, E, C)``) are *lazily
+materialised* views, built by scatter only when the einsum execution
+path asks for them.
+
+Routers whose per-token fanout is naturally wide (expert-choice uses
+K = E columns, mostly invalid) additionally provide the *slot-major*
+view — ``token_at_slot``/``gate_at_slot`` of shape ``(G, E, C)`` — which
+the gather/pallas dispatch prefers, keeping token movement ``O(E*C*M)``
+rather than ``O(T*K*M)``.
+
+Invariants every router must uphold (asserted by the test-suite):
+
+1. each valid ``(expert, slot)`` pair is unique within a group — a slot
+   holds at most one token;
+2. ``slot_index < capacity`` whenever ``valid``;
+3. gates are non-negative; for token-choice routers the per-token gate
+   sum is <= 1 (raw softmax mass) unless gates are renormalised.
+
+Routers are plain stateless objects implementing :class:`Router` and are
+looked up by name through :mod:`repro.core.routers` (the registry); a new
+routing strategy is a ~50-line plugin, not a fork of the MoE layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.nn import ParamSpec
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("expert_index", "slot_index", "gate", "valid",
+                      "aux_loss", "z_loss", "metrics",
+                      "token_at_slot", "gate_at_slot"),
+         meta_fields=("num_experts", "capacity", "combine_dtype"))
+@dataclasses.dataclass(frozen=True)
+class RoutingPlan:
+    """Index-view routing decision + lazily materialised dense views.
+
+    Registered as a pytree with ``num_experts``/``capacity``/
+    ``combine_dtype`` as static metadata, so a plan can cross jit
+    boundaries (shapes stay Python ints inside traced code).
+    """
+
+    expert_index: jax.Array   # (G, T, K) int32
+    slot_index: jax.Array     # (G, T, K) int32
+    gate: jax.Array           # (G, T, K) float32
+    valid: jax.Array          # (G, T, K) bool
+    num_experts: int
+    capacity: int
+    aux_loss: jax.Array       # scalar f32 (load-balancing loss, 0 if disabled)
+    z_loss: jax.Array         # scalar f32 (router z-loss, 0 if disabled)
+    metrics: dict             # load-balance metrics (cv, dropped fraction, ...)
+    combine_dtype: jnp.dtype = jnp.float32
+    # Optional *slot-major* view for routers whose natural K would be
+    # large (expert-choice: K = E).  token_at_slot[g, e, c] is the token
+    # occupying slot (e, c), or -1 for an empty slot; gate_at_slot is
+    # that choice's combine weight.  When present, the gather/pallas
+    # dispatch uses these O(E*C) arrays instead of the (G, T, K) view.
+    token_at_slot: Optional[jax.Array] = None   # (G, E, Cs) int32, -1 = empty
+    gate_at_slot: Optional[jax.Array] = None    # (G, E, Cs) float32
+
+    @property
+    def masked_gate(self) -> jax.Array:
+        """Gate with overflowed/invalid choices zeroed — the combine weight."""
+        return jnp.where(self.valid, self.gate, 0.0)
+
+    @property
+    def combine(self) -> jax.Array:
+        """Dense (G, T, E, C) combine view: gate * one_hot(e) * one_hot(c).
+
+        Materialised by scatter from the index view; only the einsum
+        (paper-faithful) path should touch this.
+        """
+        return self._scatter_dense(self.masked_gate.astype(self.combine_dtype))
+
+    @property
+    def dispatch(self) -> jax.Array:
+        """Dense (G, T, E, C) boolean dispatch view (combine > 0)."""
+        return self.combine > 0.0
+
+    def _scatter_dense(self, values: jax.Array) -> jax.Array:
+        G, T, K = self.expert_index.shape
+        E, C = self.num_experts, self.capacity
+        g = jnp.arange(G)[:, None, None]
+        t = jnp.arange(T)[None, :, None]
+        e = jnp.clip(self.expert_index, 0, E - 1)
+        # overflowed slots land on a sentinel column that is sliced away
+        c = jnp.where(self.valid, self.slot_index, C)
+        dense = jnp.zeros((G, T, E, C + 1), values.dtype)
+        return dense.at[g, t, e, c].add(values)[..., :C]
+
+
+@runtime_checkable
+class Router(Protocol):
+    """A routing strategy: parameter spec + plan construction.
+
+    Implementations are registered with
+    :func:`repro.core.routers.register_router` and selected by
+    ``MoEConfig.routing``.
+    """
+
+    name: str
+
+    def param_spec(self, m: MoEConfig, d_model: int, init) -> Optional[ParamSpec]:
+        """Router weight spec, or None for stateless (parameter-free) routers."""
+        ...
+
+    def plan(self, x32: jax.Array, w: Optional[jax.Array], m: MoEConfig,
+             capacity: int, combine_dtype=jnp.float32) -> RoutingPlan:
+        """x32: (G, T, M) float32 tokens -> RoutingPlan."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Shared router math
+# ---------------------------------------------------------------------------
+
+def one_hot_f32(x: jax.Array, n: int) -> jax.Array:
+    return jax.nn.one_hot(x, n, dtype=jnp.float32)
+
+
+def slot_positions(mask: jax.Array, count: jax.Array, token_axis: int):
+    """Position of each selected token inside its expert's buffer.
+
+    ``mask`` is a one-hot expert selection with the expert axis last and
+    tokens along ``token_axis``; ``count`` carries per-expert occupancy
+    from earlier selection rounds.  Returns (pos, new_count).
+    """
+    pos_in_expert = jnp.cumsum(mask, axis=token_axis) - mask \
+        + jnp.expand_dims(count, token_axis)
+    pos = jnp.sum(pos_in_expert * mask, axis=-1)
+    return pos, count + jnp.sum(mask, axis=token_axis)
+
+
+def aux_loss(density: jax.Array, density_proxy: jax.Array, n: int,
+             coef: float) -> jax.Array:
+    """mesh-tf / Fig. 8 form: mean(density * density_proxy) * n^2 * coef."""
+    return jnp.mean(density * density_proxy) * float(n) * float(n) * coef
+
+
+def z_loss(logits: jax.Array, coef: float) -> jax.Array:
+    if coef == 0.0:
+        return jnp.zeros((), jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    return coef * jnp.mean(jnp.square(lse))
+
+
+def normalize_gates(gate: jax.Array, valid: jax.Array) -> jax.Array:
+    """Renormalise a token's kept gates to sum to 1 (0 if all dropped)."""
+    kept = jnp.where(valid, gate, 0.0)
+    denom = jnp.sum(kept, axis=-1, keepdims=True)
+    return kept / jnp.maximum(denom, 1e-9)
+
+
+def index_load_metrics(expert_index: jax.Array, valid: jax.Array,
+                       num_experts: int, total_slots: int) -> dict:
+    """Compute-load metrics straight from the index view (paper 3.1).
+
+    c_v = sigma(loads) / mu(loads) over experts, where loads counts real
+    dispatched tokens (capacity overflow excluded) — the paper's
+    definition, computed without any (G, T, E, C) intermediate.
+    """
+    flat_e = jnp.clip(expert_index, 0, num_experts - 1).reshape(-1)
+    flat_v = valid.reshape(-1).astype(jnp.float32)
+    loads = jnp.zeros((num_experts,), jnp.float32).at[flat_e].add(flat_v)
+    mean = jnp.mean(loads)
+    cv = jnp.std(loads) / (mean + 1e-9)
+    dropped = 1.0 - jnp.sum(loads) / float(total_slots)
+    return {"cv": cv, "dropped_fraction": dropped, "expert_loads": loads}

@@ -1,0 +1,90 @@
+"""Expert-choice routing (Zhou et al., 2022 — MoEC/EC family).
+
+Roles are flipped relative to token-choice: each *expert* selects its
+top-C tokens by router score, so every expert buffer is exactly full and
+load balance holds by construction (no auxiliary loss needed).  A token
+may be picked by 0..E experts, so the index view uses K = E choice
+columns: column e describes "did expert e pick this token, and at which
+slot".
+
+Scores are the per-token softmax over experts (so gate magnitudes are
+comparable with the ``topk`` router); selection is a single
+``jax.lax.top_k`` over the token axis per expert — no sequential loop.
+
+Caveat (Zhou et al. 4.1): selecting over the token axis makes token t's
+routing depend on *other tokens in its group, including future ones* —
+fine for encoders/non-autoregressive training, but for causal LMs the
+train-time routing is not reproducible at autoregressive decode time.
+CE numbers from causal-LM ablations (e.g. examples/prototyping_ablation)
+are therefore not directly comparable with token-choice routers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.routers import base, register_router
+from repro.core.routers.base import RoutingPlan
+from repro.nn import ParamSpec
+
+
+def expert_choice_plan(logits: jax.Array, cfg: MoEConfig, capacity: int,
+                       combine_dtype=jnp.float32) -> RoutingPlan:
+    """Expert-choice gating from precomputed (G,T,E) logits."""
+    G, T, E = logits.shape
+    c_eff = min(capacity, T)  # an expert cannot pick more tokens than exist
+    scores = jax.nn.softmax(logits, axis=-1)                 # (G,T,E)
+
+    # Each expert picks its top-c_eff tokens: (G,E,c_eff) token indices.
+    _, sel_tok = jax.lax.top_k(jnp.swapaxes(scores, 1, 2), c_eff)
+
+    # Invert the selection into a per-(token, expert) slot map.
+    g = jnp.arange(G)[:, None, None]
+    e = jnp.arange(E)[None, :, None]
+    c = jnp.arange(c_eff, dtype=jnp.int32)[None, None, :]
+    slot_of = jnp.full((G, T, E), -1, jnp.int32)
+    slot_of = slot_of.at[g, sel_tok, e].set(jnp.broadcast_to(c, (G, E, c_eff)))
+
+    valid = slot_of >= 0
+    expert_index = jnp.broadcast_to(jnp.arange(E, dtype=jnp.int32), (G, T, E))
+    slot_index = jnp.where(valid, slot_of, capacity)
+    gate = scores
+    if cfg.normalize_gates:
+        gate = base.normalize_gates(gate, valid)
+
+    # Slot-major view: the top_k selection IS (token, gate) per (e, c) —
+    # O(E*C) dispatch metadata (all slots full by construction), sparing
+    # the gather path the mostly-invalid (G, T, E) token-choice columns.
+    gate_m = jnp.where(valid, gate, 0.0)
+    gate_at_slot = jnp.take_along_axis(jnp.swapaxes(gate_m, 1, 2), sel_tok, axis=2)
+
+    zl = base.z_loss(logits, cfg.router_z_loss_coef)
+    # Balance is structural: every expert holds exactly c_eff tokens, so
+    # loads and cv are compile-time constants — no scatter needed.
+    # "dropped" reports the genuinely interesting failure mode: tokens
+    # no expert picked.
+    unrouted = 1.0 - jnp.mean(jnp.any(valid, axis=-1).astype(jnp.float32))
+    metrics = {
+        "cv": jnp.zeros((), jnp.float32),
+        "dropped_fraction": unrouted,
+        "expert_loads": jnp.full((E,), float(G * c_eff), jnp.float32),
+    }
+    return RoutingPlan(expert_index, slot_index, gate, valid, E, capacity,
+                       jnp.zeros((), jnp.float32), zl, metrics, combine_dtype,
+                       token_at_slot=sel_tok.astype(jnp.int32),
+                       gate_at_slot=gate_at_slot)
+
+
+@register_router
+class ExpertChoiceRouter:
+    name = "expert_choice"
+
+    def param_spec(self, m: MoEConfig, d_model: int, init):
+        return ParamSpec((d_model, m.num_experts), jnp.float32,
+                         ("embed", "expert"), init)
+
+    def plan(self, x32, w, m: MoEConfig, capacity: int,
+             combine_dtype=jnp.float32) -> RoutingPlan:
+        logits = jnp.einsum("gtm,me->gte", x32, w.astype(jnp.float32))
+        return expert_choice_plan(logits, m, capacity, combine_dtype)

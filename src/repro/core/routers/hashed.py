@@ -1,0 +1,75 @@
+"""Stateless hash routing — a *position-hash* variant of the idea in
+Roller et al., 2021 ("Hash Layers").
+
+No learned router at all: each token is assigned to experts by a fixed
+integer hash, with uniform combine weight 1/k.  Note the deliberate
+departure from the citation: Roller et al. hash the *token id* so that
+experts specialise per token type; the MoE layer here only sees hidden
+states, so we hash the token's global *position* instead — a fully
+content-independent assignment (a fixed pseudo-random permutation over
+positions).  That makes this the floor baseline for "how much does
+learned/content routing matter", strictly weaker than true Hash Layers;
+token-id hashing needs ids threaded to the layer (see ROADMAP).  It also
+exercises the parameter-free corner of the Router API (``param_spec``
+returns None).
+
+Choice i targets expert ``(hash(pos) + i) % E`` so a token's k choices
+are always distinct experts.  Capacity/slot semantics are identical to
+token-choice routers (first-come within the group, overflow dropped).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.routers import base, register_router
+from repro.core.routers.base import RoutingPlan
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """splitmix-style avalanche on uint32 (deterministic, well spread)."""
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def hash_plan(G: int, T: int, cfg: MoEConfig, capacity: int,
+              combine_dtype=jnp.float32) -> RoutingPlan:
+    E = cfg.num_experts
+    k = max(1, min(cfg.top_k, E))
+    pos = (jnp.arange(G, dtype=jnp.uint32)[:, None] * jnp.uint32(T)
+           + jnp.arange(T, dtype=jnp.uint32)[None, :])       # (G,T) global position
+    h = (_mix32(pos) % jnp.uint32(E)).astype(jnp.int32)      # (G,T)
+
+    count = jnp.zeros((G, E), jnp.float32)
+    experts, slots = [], []
+    for i in range(k):
+        idx = (h + i) % E                                    # distinct experts
+        mask = base.one_hot_f32(idx, E)
+        p, count = base.slot_positions(mask, count, token_axis=1)
+        experts.append(idx)
+        slots.append(p.astype(jnp.int32))
+
+    expert_index = jnp.stack(experts, axis=-1)               # (G,T,k)
+    slot_index = jnp.stack(slots, axis=-1)
+    valid = slot_index < capacity
+    gate = jnp.full((G, T, k), 1.0 / k, jnp.float32)         # uniform average
+
+    zero = jnp.zeros((), jnp.float32)
+    metrics = base.index_load_metrics(expert_index, valid, E, G * T * k)
+    return RoutingPlan(expert_index, slot_index, gate, valid, E, capacity,
+                       zero, zero, metrics, combine_dtype)
+
+
+@register_router
+class HashRouter:
+    name = "hash"
+
+    def param_spec(self, m: MoEConfig, d_model: int, init):
+        return None  # stateless: no router weights
+
+    def plan(self, x32, w, m: MoEConfig, capacity: int,
+             combine_dtype=jnp.float32) -> RoutingPlan:
+        G, T = x32.shape[0], x32.shape[1]
+        return hash_plan(G, T, m, capacity, combine_dtype)

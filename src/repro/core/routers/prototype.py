@@ -1,0 +1,86 @@
+"""M6-T k top-1 expert prototyping (Eq. 3 / Fig. 8).
+
+Experts are split into Z prototypes of F = E/Z experts; each prototype
+routes independently with top-1 (generalised to top-k' > 1); outputs are
+summed.  No argmax loop across prototypes — everything is parallel over
+Z, so with k' = 1 the hot path runs exactly one argmax regardless of Z
+(the paper's Table 2 speed claim).
+
+Global expert ids follow the Fig. 8 reshape: expert = z * F + f, so the
+index view is directly comparable with the ``topk`` router's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.routers import base, register_router
+from repro.core.routers.base import RoutingPlan
+from repro.nn import ParamSpec
+
+
+def prototype_logits(x32: jax.Array, w: jax.Array) -> jax.Array:
+    """(G,T,M) x (M,Z,F) -> (G,Z,T,F)  (Fig. 8: 'dTZM,MZF->dZTF')."""
+    return jnp.einsum("gtm,mzf->gztf", x32, w.astype(jnp.float32))
+
+
+def prototype_plan(logits: jax.Array, cfg: MoEConfig, capacity: int,
+                   combine_dtype=jnp.float32) -> RoutingPlan:
+    """k top-1 gating from precomputed per-prototype logits."""
+    G, Z, T, F = logits.shape
+    kp = cfg.prototype_top_k
+    raw_gates = jax.nn.softmax(logits, axis=-1)              # (G,Z,T,F)
+
+    remaining = raw_gates
+    count = jnp.zeros((G, Z, F), jnp.float32)
+    experts, slots, gates = [], [], []
+    first_mask = None
+    for _ in range(kp):  # paper: kp == 1, no loop in the hot path
+        idx = jnp.argmax(remaining, axis=-1)                 # (G,Z,T)
+        mask = base.one_hot_f32(idx, F)                      # (G,Z,T,F)
+        if first_mask is None:
+            first_mask = mask
+        gate = jnp.sum(raw_gates * mask, axis=-1)            # (G,Z,T)
+        pos, count = base.slot_positions(mask, count, token_axis=2)
+        # Fig. 8 reshape: global expert id = z * F + f.
+        experts.append(idx.astype(jnp.int32)
+                       + (jnp.arange(Z, dtype=jnp.int32) * F)[None, :, None])
+        slots.append(pos.astype(jnp.int32))
+        gates.append(gate)
+        remaining = remaining * (1.0 - mask)
+
+    # (kp lists of (G,Z,T)) -> (G,T,Z,kp) -> (G,T,Z*kp): choices are
+    # ordered prototype-major so prototype z's picks sit at [z*kp:(z+1)*kp].
+    def _stack(xs):
+        return jnp.stack(xs, axis=-1).transpose(0, 2, 1, 3).reshape(G, T, Z * kp)
+
+    expert_index = _stack(experts)
+    slot_index = _stack(slots)
+    gate = _stack(gates)
+    valid = slot_index < capacity
+
+    if cfg.normalize_gates:
+        gate = base.normalize_gates(gate, valid)
+
+    # aux loss per prototype over its F experts (Fig. 8: F^2 scaling).
+    density = jnp.mean(first_mask, axis=2)                   # (G,Z,F)
+    density_proxy = jnp.mean(raw_gates, axis=2)              # (G,Z,F)
+    aux = base.aux_loss(density, density_proxy, F, cfg.aux_loss_coef)
+    zl = base.z_loss(logits, cfg.router_z_loss_coef)
+    metrics = base.index_load_metrics(expert_index, valid, Z * F, G * T * Z * kp)
+    return RoutingPlan(expert_index, slot_index, gate, valid, Z * F, capacity,
+                       aux, zl, metrics, combine_dtype)
+
+
+@register_router
+class PrototypeRouter:
+    name = "prototype"
+
+    def param_spec(self, m: MoEConfig, d_model: int, init):
+        return ParamSpec((d_model, m.num_prototypes, m.experts_per_prototype),
+                         jnp.float32, ("embed", None, "expert"), init)
+
+    def plan(self, x32, w, m: MoEConfig, capacity: int,
+             combine_dtype=jnp.float32) -> RoutingPlan:
+        return prototype_plan(prototype_logits(x32, w), m, capacity, combine_dtype)

@@ -1,13 +1,14 @@
-"""Token -> expert routing: sequential top-k and M6-T expert prototyping.
+"""Token -> expert routing, dispatched through the pluggable Router API.
 
-Faithful to the paper's pseudo-code (Figs. 7-8):
+The strategies themselves live in :mod:`repro.core.routers` (one module
+per router, registered by name); this module is the stable entry point:
 
-* ``topk_gating``   — GShard-style sequential top-k with the *looping
-  argmax* the paper identifies as the efficiency problem (Table 2).
-* ``prototype_gating`` — the paper's contribution (Eq. 3 / Fig. 8):
-  experts are split into Z prototypes of F = E/Z experts; each prototype
-  routes independently with top-1 (generalised to top-k'); outputs are
-  summed.  No argmax loop across prototypes — everything is parallel.
+* :func:`route` — look up ``cfg.routing`` in the registry and build a
+  :class:`~repro.core.routers.base.RoutingPlan` (the compact index view;
+  dense GShard ``combine``/``dispatch`` tensors are lazy properties).
+* ``topk_gating`` / ``prototype_gating`` — the paper's gating functions
+  (Figs. 7-8) operating on precomputed logits, kept for tests and direct
+  experimentation.
 
 Tokens are routed inside *groups* (the ``d``/worker dimension in the
 paper's pseudo-code generalised to G groups): capacity and the
@@ -18,170 +19,44 @@ All routing math runs in float32 regardless of activation dtype.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
+from repro.core.routers import available_routers, get_router, register_router
+from repro.core.routers.base import RoutingPlan
+from repro.core.routers.expert_choice import expert_choice_plan
+from repro.core.routers.hashed import hash_plan
+from repro.core.routers.prototype import prototype_logits, prototype_plan
+from repro.core.routers.topk import topk_logits, topk_plan
 
-
-class RoutingResult(NamedTuple):
-    combine: jax.Array    # (G, T, E, C) float: gate * one_hot(expert) * one_hot(pos)
-    dispatch: jax.Array   # (G, T, E, C) bool
-    aux_loss: jax.Array   # scalar f32 (load-balancing loss, 0 if disabled)
-    z_loss: jax.Array     # scalar f32 (router z-loss, 0 if disabled)
-    metrics: dict         # load-balance metrics (c_v, dropped fraction, ...)
-
-
-def _one_hot(x, n):
-    return jax.nn.one_hot(x, n, dtype=jnp.float32)
-
-
-def _load_metrics(dispatch_mask_gtec: jax.Array, active_k: int) -> dict:
-    """Compute-load metrics over *real* dispatched tokens (paper 3.1).
-
-    c_v = sigma(loads) / mu(loads) over experts, where loads counts real
-    tokens (capacity padding excluded) — exactly the paper's definition.
-    """
-    loads = jnp.sum(dispatch_mask_gtec, axis=(0, 1, 3))  # (E,)
-    mean = jnp.mean(loads)
-    cv = jnp.std(loads) / (mean + 1e-9)
-    total_slots = dispatch_mask_gtec.shape[0] * dispatch_mask_gtec.shape[1] * active_k
-    dropped = 1.0 - jnp.sum(loads) / total_slots
-    return {"cv": cv, "dropped_fraction": dropped, "expert_loads": loads}
-
-
-def router_logits_topk(x32: jax.Array, w: jax.Array) -> jax.Array:
-    """(G,T,M) x (M,E) -> (G,T,E)."""
-    return jnp.einsum("gtm,me->gte", x32, w.astype(jnp.float32))
-
-
-def router_logits_prototype(x32: jax.Array, w: jax.Array) -> jax.Array:
-    """(G,T,M) x (M,Z,F) -> (G,Z,T,F)  (Fig. 8: 'dTZM,MZF->dZTF')."""
-    return jnp.einsum("gtm,mzf->gztf", x32, w.astype(jnp.float32))
-
-
-def _aux_loss(density: jax.Array, density_proxy: jax.Array, n: int, coef: float) -> jax.Array:
-    """mesh-tf / Fig. 8 form: mean(density * density_proxy) * n^2 * coef."""
-    return jnp.mean(density * density_proxy) * float(n) * float(n) * coef
-
-
-def _z_loss(logits: jax.Array, coef: float) -> jax.Array:
-    if coef == 0.0:
-        return jnp.zeros((), jnp.float32)
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    return coef * jnp.mean(jnp.square(lse))
-
-
-def topk_gating(
-    logits: jax.Array,   # (G, T, E) f32
-    cfg: MoEConfig,
-    capacity: int,
-    combine_dtype=jnp.float32,
-) -> RoutingResult:
-    """Sequential top-k routing with the looping argmax (paper 3.2/3.3).
-
-    The combine tensor accumulates in ``combine_dtype`` (bf16 at scale, as
-    in mesh-tf): every (t,e,c) slot is written by at most one iteration,
-    so reduced precision only rounds the gate value itself."""
-    G, T, E = logits.shape
-    k = cfg.top_k
-    raw_gates = jax.nn.softmax(logits, axis=-1)  # (G,T,E)
-
-    remaining = raw_gates
-    count = jnp.zeros((G, E), jnp.float32)        # tokens already assigned per expert
-    combine = jnp.zeros((G, T, E, capacity), combine_dtype)
-    first_mask = None
-    # The literal "looping argmax" — k sequential passes (Table 2's cost).
-    for i in range(k):
-        idx = jnp.argmax(remaining, axis=-1)                     # (G,T)
-        mask = _one_hot(idx, E)                                  # (G,T,E)
-        if first_mask is None:
-            first_mask = mask
-        gate = jnp.sum(raw_gates * mask, axis=-1)                # (G,T)
-        # position of each token within its expert's buffer, continuing
-        # from previous iterations' assignments
-        pos_in_expert = jnp.cumsum(mask, axis=1) - mask + count[:, None, :]
-        pos = jnp.sum(pos_in_expert * mask, axis=-1)             # (G,T)
-        count = count + jnp.sum(mask, axis=1)
-        keep = (pos < capacity).astype(jnp.float32)              # (G,T)
-        contrib = (gate * keep)[:, :, None, None] * (
-            mask[:, :, :, None] * _one_hot(pos.astype(jnp.int32), capacity)[:, :, None, :]
-        )
-        combine = combine + contrib.astype(combine_dtype)
-        remaining = remaining * (1.0 - mask)
-
-    if cfg.normalize_gates:
-        denom = jnp.sum(combine, axis=(2, 3), keepdims=True)
-        combine = combine / jnp.maximum(denom, 1e-9)
-        combine = combine * jnp.minimum(jnp.sum(combine, axis=(2, 3), keepdims=True), 1.0)
-
-    dispatch = combine > 0.0
-    density = jnp.mean(first_mask, axis=1)                       # (G,E)
-    density_proxy = jnp.mean(raw_gates, axis=1)                  # (G,E)
-    aux = _aux_loss(density, density_proxy, E, cfg.aux_loss_coef)
-    zl = _z_loss(logits, cfg.router_z_loss_coef)
-    metrics = _load_metrics(dispatch, k)
-    return RoutingResult(combine, dispatch, aux, zl, metrics)
-
-
-def prototype_gating(
-    logits: jax.Array,   # (G, Z, T, F) f32
-    cfg: MoEConfig,
-    capacity: int,
-    combine_dtype=jnp.float32,
-) -> RoutingResult:
-    """k top-1 expert prototyping (Fig. 8), generalised to top-k' > 1."""
-    G, Z, T, F = logits.shape
-    raw_gates = jax.nn.softmax(logits, axis=-1)                  # (G,Z,T,F)
-
-    kp = cfg.prototype_top_k
-    combine_zf = jnp.zeros((G, Z, T, F, capacity), combine_dtype)
-    remaining = raw_gates
-    count = jnp.zeros((G, Z, F), jnp.float32)
-    first_mask = None
-    for i in range(kp):  # paper: kp == 1, no loop in the hot path
-        idx = jnp.argmax(remaining, axis=-1)                     # (G,Z,T)
-        mask = _one_hot(idx, F)                                  # (G,Z,T,F)
-        if first_mask is None:
-            first_mask = mask
-        gate = jnp.sum(raw_gates * mask, axis=-1)                # (G,Z,T)
-        pos_in_expert = jnp.cumsum(mask, axis=2) - mask + count[:, :, None, :]
-        pos = jnp.sum(pos_in_expert * mask, axis=-1)             # (G,Z,T)
-        count = count + jnp.sum(mask, axis=2)
-        keep = (pos < capacity).astype(jnp.float32)
-        contrib = (gate * keep)[..., None, None] * (
-            mask[..., None] * _one_hot(pos.astype(jnp.int32), capacity)[..., None, :]
-        )
-        combine_zf = combine_zf + contrib.astype(combine_dtype)
-        remaining = remaining * (1.0 - mask)
-
-    # (G,Z,T,F,C) -> (G,T,Z,F,C) -> (G,T,E,C)   (Fig. 8 reshape)
-    combine = jnp.transpose(combine_zf, (0, 2, 1, 3, 4)).reshape(G, T, Z * F, capacity)
-    dispatch = combine > 0.0
-
-    # aux loss per prototype over its F experts (Fig. 8: F^2 scaling).
-    density = jnp.mean(first_mask, axis=2)                       # (G,Z,F)
-    density_proxy = jnp.mean(raw_gates, axis=2)                  # (G,Z,F)
-    aux = _aux_loss(density, density_proxy, F, cfg.aux_loss_coef)
-    zl = _z_loss(logits, cfg.router_z_loss_coef)
-    metrics = _load_metrics(dispatch, Z * kp)
-    return RoutingResult(combine, dispatch, aux, zl, metrics)
+# Back-compat aliases (pre-Router-API names).
+RoutingResult = RoutingPlan
+router_logits_topk = topk_logits
+router_logits_prototype = prototype_logits
+topk_gating = topk_plan
+prototype_gating = prototype_plan
 
 
 def route(
-    x: jax.Array,        # (G, T, M) tokens (any float dtype)
-    router_w: jax.Array,  # (M,E) for topk / (M,Z,F) for prototype
+    x: jax.Array,                    # (G, T, M) tokens (any float dtype)
+    router_w: Optional[jax.Array],   # router weights, None for stateless routers
     cfg: MoEConfig,
     capacity: int,
-) -> RoutingResult:
+) -> RoutingPlan:
+    """Build the routing plan for ``cfg.routing`` via the registry."""
     x32 = x.astype(jnp.float32)
     cd = jnp.float32 if cfg.combine_dtype == "float32" else jnp.dtype(x.dtype)
-    if cfg.routing == "prototype":
-        logits = router_logits_prototype(x32, router_w)
-        return prototype_gating(logits, cfg, capacity, combine_dtype=cd)
-    elif cfg.routing == "topk":
-        logits = router_logits_topk(x32, router_w)
-        return topk_gating(logits, cfg, capacity, combine_dtype=cd)
-    raise ValueError(f"unknown routing mode {cfg.routing!r}")
+    router = get_router(cfg.routing)
+    return router.plan(x32, router_w, cfg, capacity, combine_dtype=cd)
+
+
+__all__ = [
+    "RoutingPlan", "RoutingResult", "route",
+    "register_router", "get_router", "available_routers",
+    "topk_gating", "prototype_gating",
+    "topk_plan", "prototype_plan", "expert_choice_plan", "hash_plan",
+    "router_logits_topk", "router_logits_prototype",
+]

@@ -19,6 +19,18 @@ from typing import Dict
 from repro.configs.base import ModelConfig, ShapeConfig
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """`compiled.cost_analysis()` across jax versions: some return the
+    properties dict directly, some a one-element list of it."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        if not cost:
+            raise RuntimeError(
+                "compiled.cost_analysis() returned no data on this backend")
+        cost = cost[0]
+    return cost
+
+
 def _moe_terms(cfg: ModelConfig, tokens_per_group: int) -> Dict[str, float]:
     """Per-token FLOPs for router, dispatch/combine, expert FFN."""
     m = cfg.moe

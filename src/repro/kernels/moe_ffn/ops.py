@@ -4,6 +4,16 @@ On non-TPU backends the kernel runs in interpret mode (Python semantics,
 used for CI correctness); on TPU it lowers to Mosaic.  Shapes that do not
 tile evenly are padded on the row dimension (padded rows compute garbage
 that is sliced away — they never touch real rows).
+
+The (E, X, M) input is the per-expert capacity buffer produced by the
+MoE layer's index-view dispatch (X = G*C rows per expert); empty slots
+are zero rows, which the kernel processes like any other — their outputs
+are discarded by the gate-weighted combine.
+
+``pallas_call`` has no autodiff rule, so :func:`moe_ffn` carries a
+``custom_vjp``: forward runs the kernel, backward differentiates the
+pure-jnp reference (same math, f32 accumulation) — making the pallas
+impl trainable, not just a serving path.
 """
 from __future__ import annotations
 
@@ -21,21 +31,53 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("activation", "block_x", "block_i"))
-def moe_ffn(x: jax.Array, w_up: jax.Array, w_gate: Optional[jax.Array],
-            w_down: jax.Array, activation: str = "swiglu",
-            block_x: int = 128, block_i: int = 512) -> jax.Array:
+def _run_kernel(x, w_up, w_gate, w_down, activation, block_x, block_i):
     E, X, M = x.shape
     I = w_up.shape[-1]
     bx = min(block_x, max(8, X))
     bi = min(block_i, I)
-    while I % bi:
+    while bi > 1 and I % bi:
         bi //= 2
+    # loop invariant: bi divides I on exit (worst case bi == 1)
     pad_x = (-X) % bx
     xp = jnp.pad(x, ((0, 0), (0, pad_x), (0, 0))) if pad_x else x
     y = moe_ffn_kernel(xp, w_up, w_gate, w_down, activation,
                        block_x=bx, block_i=bi, interpret=_interpret())
     return y[:, :X] if pad_x else y
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _moe_ffn(x, w_up, w_gate, w_down, activation, block_x, block_i):
+    return _run_kernel(x, w_up, w_gate, w_down, activation, block_x, block_i)
+
+
+def _moe_ffn_fwd(x, w_up, w_gate, w_down, activation, block_x, block_i):
+    y = _run_kernel(x, w_up, w_gate, w_down, activation, block_x, block_i)
+    return y, (x, w_up, w_gate, w_down)
+
+
+def _moe_ffn_bwd(activation, block_x, block_i, res, g):
+    x, w_up, w_gate, w_down = res
+    if w_gate is None:
+        _, vjp = jax.vjp(
+            lambda xx, up, down: moe_ffn_ref(xx, up, None, down, activation),
+            x, w_up, w_down)
+        dx, dup, ddown = vjp(g)
+        return dx, dup, None, ddown
+    _, vjp = jax.vjp(
+        lambda xx, up, gate, down: moe_ffn_ref(xx, up, gate, down, activation),
+        x, w_up, w_gate, w_down)
+    return vjp(g)
+
+
+_moe_ffn.defvjp(_moe_ffn_fwd, _moe_ffn_bwd)
+
+
+@partial(jax.jit, static_argnames=("activation", "block_x", "block_i"))
+def moe_ffn(x: jax.Array, w_up: jax.Array, w_gate: Optional[jax.Array],
+            w_down: jax.Array, activation: str = "swiglu",
+            block_x: int = 128, block_i: int = 512) -> jax.Array:
+    return _moe_ffn(x, w_up, w_gate, w_down, activation, block_x, block_i)
 
 
 __all__ = ["moe_ffn", "moe_ffn_ref"]

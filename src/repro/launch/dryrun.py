@@ -30,7 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.configs.registry import ARCH_IDS, ALL_IDS, get_config
 from repro.configs.shapes import SHAPES, shapes_for
-from repro.distributed.costs import bytes_for, flops_for
+from repro.distributed.costs import bytes_for, cost_analysis_dict, flops_for
 from repro.distributed.hlo import collective_bytes, op_histogram
 from repro.distributed.roofline import (
     Roofline, model_flops_forward, model_flops_train)
@@ -221,7 +221,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)

@@ -37,8 +37,8 @@ def build(args):
         if args.routing == "prototype":
             cfg = cfg.replace_moe(routing="prototype",
                                   num_prototypes=args.k)
-        else:
-            cfg = cfg.replace_moe(routing="topk", top_k=args.k)
+        else:  # any other registry key routes k-way via top_k
+            cfg = cfg.replace_moe(routing=args.routing, top_k=args.k)
     if args.capacity:
         cfg = cfg.replace_moe(capacity_mode=args.capacity)
     if args.moe_impl and cfg.moe.num_experts:
@@ -57,7 +57,9 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--optimizer", default=None, choices=[None, "adamw", "adafactor"])
-    ap.add_argument("--routing", default=None, choices=[None, "topk", "prototype"])
+    from repro.core.routers import available_routers
+    ap.add_argument("--routing", default=None,
+                    choices=[None, *available_routers()])
     ap.add_argument("--k", type=int, default=2)
     ap.add_argument("--capacity", default=None, choices=[None, "k", "one"])
     ap.add_argument("--moe-impl", default=None)

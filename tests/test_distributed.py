@@ -179,7 +179,9 @@ def test_analytic_flops_vs_unrolled_cost_analysis(arch):
         logits, aux = fam.forward(p, b, cfg)
         return total_loss(logits, b["labels"], aux)[0]
 
-    measured = jax.jit(jax.grad(f)).lower(params, batch).compile().cost_analysis()["flops"]
+    from repro.distributed.costs import cost_analysis_dict
+    compiled = jax.jit(jax.grad(f)).lower(params, batch).compile()
+    measured = cost_analysis_dict(compiled)["flops"]
     analytic = flops_for(cfg, shape)
     ratio = analytic / measured
     assert 0.6 < ratio < 1.7, (arch, ratio)

@@ -1,0 +1,264 @@
+"""Router API: registry, RoutingPlan invariants, golden values, and the
+structural guarantee that index-view paths never build (G,T,E,C) tensors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.moe import group_tokens, moe_ffn_apply, moe_ffn_specs
+from repro.core.routers import available_routers, get_router, register_router
+from repro.core.routers.expert_choice import expert_choice_plan
+from repro.core.routers.hashed import hash_plan
+from repro.core.routing import route
+from repro.nn import init
+
+ALL_ROUTERS = ("topk", "prototype", "expert_choice", "hash")
+
+
+def _moe_cfg(routing, **kw):
+    base = dict(num_experts=8, routing=routing, top_k=2, num_prototypes=2,
+                aux_loss_coef=0.01)
+    base.update(kw)
+    return MoEConfig(**base)
+
+
+def _plan_for(routing, G=2, T=24, M=16, capacity=8, seed=0):
+    m = _moe_cfg(routing)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (G, T, M))
+    router = get_router(routing)
+    spec = router.param_spec(m, M, jax.nn.initializers.normal(1.0))
+    w = None
+    if spec is not None:
+        w = jax.random.normal(jax.random.PRNGKey(seed + 1), spec.shape)
+    return route(x, w, m, capacity), m
+
+
+class TestRegistry:
+    def test_builtin_keys(self):
+        assert set(ALL_ROUTERS) <= set(available_routers())
+
+    def test_unknown_key_lists_registry(self):
+        with pytest.raises(ValueError, match="expert_choice.*topk"):
+            get_router("nope")
+
+    def test_config_validates_routing_key(self):
+        with pytest.raises(ValueError, match="unknown routing mode"):
+            MoEConfig(num_experts=4, routing="definitely-not-registered")
+        # dense configs (num_experts=0) skip validation entirely
+        MoEConfig(num_experts=0, routing="whatever")
+
+    def test_plugin_registration(self):
+        from repro.core.routers import _REGISTRY
+        from repro.core.routers.topk import TopKRouter
+
+        try:
+            @register_router
+            class MyRouter(TopKRouter):
+                name = "my_plugin"
+
+            assert get_router("my_plugin").name == "my_plugin"
+            # config construction now accepts the plugin key
+            MoEConfig(num_experts=4, routing="my_plugin")
+        finally:
+            _REGISTRY.pop("my_plugin", None)
+
+
+class TestPlanInvariants:
+    """The RoutingPlan contract every router must uphold."""
+
+    @pytest.mark.parametrize("routing", ALL_ROUTERS)
+    def test_index_view_contract(self, routing):
+        plan, m = _plan_for(routing)
+        G, T, K = plan.expert_index.shape
+        e = np.asarray(plan.expert_index)
+        s = np.asarray(plan.slot_index)
+        v = np.asarray(plan.valid)
+        g = np.asarray(plan.masked_gate)
+        assert ((e >= 0) & (e < plan.num_experts)).all()
+        assert (s[v] < plan.capacity).all()          # valid => in capacity
+        assert (g >= 0).all() and (g[~v] == 0).all()
+        # per-token gate mass: one unit of softmax mass per independent
+        # routing distribution (Z for prototyping, 1 otherwise)
+        mass = m.num_prototypes if routing == "prototype" else 1
+        assert g.sum(-1).max() <= mass + 1e-5
+        # each valid (expert, slot) pair is unique within a group
+        for gi in range(G):
+            pairs = np.stack([e[gi][v[gi]], s[gi][v[gi]]], -1)
+            assert len(np.unique(pairs, axis=0)) == len(pairs)
+
+    @pytest.mark.parametrize("routing", ALL_ROUTERS)
+    def test_dense_views_agree_with_index_view(self, routing):
+        plan, m = _plan_for(routing)
+        combine = np.asarray(plan.combine)
+        dispatch = np.asarray(plan.dispatch)
+        assert combine.shape == (*plan.expert_index.shape[:2],
+                                 plan.num_experts, plan.capacity)
+        assert ((combine > 0) == dispatch).all()
+        assert (dispatch.sum(axis=1) <= 1).all()     # slot occupancy
+        # loads computed from the index view == loads from the dense view
+        np.testing.assert_array_equal(
+            np.asarray(plan.metrics["expert_loads"]),
+            dispatch.sum(axis=(0, 1, 3)).astype(np.float32))
+
+    @pytest.mark.parametrize("routing", ALL_ROUTERS)
+    def test_plan_crosses_jit_boundary(self, routing):
+        """RoutingPlan is a registered pytree with static shape metadata,
+        so route() can be jitted directly (as RoutingResult could)."""
+        m = _moe_cfg(routing)
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 12))
+        router = get_router(routing)
+        spec = router.param_spec(m, 12, jax.nn.initializers.normal(1.0))
+        w = None if spec is None else jax.random.normal(jax.random.PRNGKey(1),
+                                                        spec.shape)
+        plan = jax.jit(lambda xx, ww: route(xx, ww, m, 8))(x, w)
+        assert plan.num_experts == m.num_experts and plan.capacity == 8
+        assert plan.combine.shape == (1, 16, m.num_experts, 8)
+
+    @pytest.mark.parametrize("routing", ["topk", "prototype"])
+    def test_normalize_gates_sums_to_one(self, routing):
+        m = _moe_cfg(routing, normalize_gates=True)
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 12))
+        router = get_router(routing)
+        spec = router.param_spec(m, 12, jax.nn.initializers.normal(1.0))
+        w = jax.random.normal(jax.random.PRNGKey(1), spec.shape)
+        plan = route(x, w, m, capacity=16)
+        # every token with >= 1 kept choice has its gates renormalised to 1
+        mass = np.asarray(plan.masked_gate.sum(-1))
+        has_any = np.asarray(plan.valid.any(-1))
+        np.testing.assert_allclose(mass[has_any], 1.0, rtol=1e-5)
+
+    @pytest.mark.parametrize("routing", ALL_ROUTERS)
+    def test_capacity_overflow_marks_invalid(self, routing):
+        plan, _ = _plan_for(routing, T=32, capacity=2)
+        s = np.asarray(plan.slot_index)
+        v = np.asarray(plan.valid)
+        assert (~v[s >= 2]).all()
+        # loads aggregate over groups; capacity binds per group
+        loads = np.asarray(plan.metrics["expert_loads"])
+        assert loads.max() <= 2 * plan.expert_index.shape[0]
+
+
+class TestExpertChoiceGolden:
+    def test_each_expert_fills_exactly_c(self):
+        # 3 tokens, 2 experts, capacity 2: 4 slots > 3 tokens, so some
+        # token must be picked twice — expert-choice's signature behavior.
+        logits = jnp.array([[[1.0, 0.0], [0.5, 0.0], [0.0, 1.0]]])
+        m = MoEConfig(num_experts=2, routing="expert_choice", top_k=2)
+        plan = expert_choice_plan(logits, m, capacity=2)
+        scores = np.asarray(jax.nn.softmax(logits, -1))[0]
+        v = np.asarray(plan.valid)[0]                # (T=3, E=2)
+        s = np.asarray(plan.slot_index)[0]
+        # expert 0 ranks tokens 0 > 1 > 2; expert 1 ranks 2 > 1 > 0
+        np.testing.assert_array_equal(v, [[True, False],
+                                          [True, True],
+                                          [False, True]])
+        assert s[0, 0] == 0 and s[1, 0] == 1         # expert 0: t0 then t1
+        assert s[2, 1] == 0 and s[1, 1] == 1         # expert 1: t2 then t1
+        np.testing.assert_allclose(np.asarray(plan.masked_gate)[0][v],
+                                   scores[v], rtol=1e-6)
+        # structural balance: every expert exactly full, cv == 0, no aux
+        np.testing.assert_array_equal(np.asarray(plan.metrics["expert_loads"]),
+                                      [2.0, 2.0])
+        assert float(plan.metrics["cv"]) == pytest.approx(0.0, abs=1e-6)
+        assert float(plan.aux_loss) == 0.0
+
+    def test_unpicked_tokens_reported_dropped(self):
+        # 4 tokens, 2 experts, capacity 1: only 2 picks -> 2 tokens unrouted
+        logits = jnp.array([[[1.0, 0.0], [0.8, 0.0], [0.0, 1.0], [0.0, 0.8]]])
+        m = MoEConfig(num_experts=2, routing="expert_choice", top_k=1)
+        plan = expert_choice_plan(logits, m, capacity=1)
+        v = np.asarray(plan.valid)[0]
+        np.testing.assert_array_equal(v.any(-1), [True, False, True, False])
+        assert float(plan.metrics["dropped_fraction"]) == pytest.approx(0.5)
+
+    def test_capacity_clamped_to_tokens(self):
+        # capacity > T must not break top_k over the token axis
+        logits = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2))
+        m = MoEConfig(num_experts=2, routing="expert_choice", top_k=1)
+        plan = expert_choice_plan(logits, m, capacity=16)
+        assert np.asarray(plan.metrics["expert_loads"]).max() <= 4
+
+
+class TestHashGolden:
+    def test_deterministic_assignment(self):
+        m = MoEConfig(num_experts=4, routing="hash", top_k=1)
+        plan = hash_plan(1, 8, m, capacity=4)
+        # golden snapshot: fixed integer mix, stable across runs/platforms
+        np.testing.assert_array_equal(
+            np.asarray(plan.expert_index)[0, :, 0], [0, 0, 1, 1, 1, 2, 3, 2])
+        np.testing.assert_array_equal(
+            np.asarray(plan.slot_index)[0, :, 0], [0, 1, 0, 1, 2, 0, 0, 1])
+        np.testing.assert_array_equal(
+            np.asarray(plan.metrics["expert_loads"]), [2.0, 3.0, 2.0, 1.0])
+
+    def test_k_choices_are_distinct_experts(self):
+        m = MoEConfig(num_experts=4, routing="hash", top_k=2)
+        plan = hash_plan(2, 16, m, capacity=16)
+        e = np.asarray(plan.expert_index)
+        assert (e[..., 0] != e[..., 1]).all()
+        # uniform average gates: 1/k each, summing to 1 per token
+        np.testing.assert_allclose(np.asarray(plan.gate), 0.5)
+
+    def test_stateless_no_router_param(self):
+        cfg = ModelConfig(d_model=16, d_ff=32, dtype="float32",
+                          moe=MoEConfig(num_experts=4, routing="hash",
+                                        top_k=1, group_size=32))
+        specs = moe_ffn_specs(cfg)
+        assert "router" not in specs
+        params = init(specs, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+        y, aux = jax.jit(lambda p, x: moe_ffn_apply(p, x, cfg))(params, x)
+        assert y.shape == x.shape and not bool(jnp.isnan(y).any())
+        assert float(aux["moe_aux_loss"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Structural guarantee: index-view paths never materialise (G,T,E,C)
+# ---------------------------------------------------------------------------
+
+def _walk_avals(jaxpr):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield v.aval
+        for p in eqn.params.values():
+            for pv in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(pv, "jaxpr", pv)
+                if hasattr(inner, "eqns"):
+                    yield from _walk_avals(inner)
+
+
+def _dense_shape_present(fn, args, dense_shape):
+    closed = jax.make_jaxpr(fn)(*args)
+    return any(getattr(a, "shape", None) == dense_shape
+               for a in _walk_avals(closed.jaxpr))
+
+
+@pytest.mark.parametrize("routing", ALL_ROUTERS)
+def test_gather_path_has_no_dense_intermediate(routing):
+    cfg = ModelConfig(d_model=32, d_ff=48, dtype="float32",
+                      moe=MoEConfig(num_experts=8, routing=routing, top_k=2,
+                                    num_prototypes=2, group_size=64,
+                                    capacity_factor=2.0, impl="gather"))
+    params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32))
+    xg, G = group_tokens(x, cfg.moe)
+    T = xg.shape[1]
+    dense = (G, T, cfg.moe.num_experts, cfg.moe.capacity(T))
+
+    assert not _dense_shape_present(
+        lambda p, xx: moe_ffn_apply(p, xx, cfg)[0], (params, x), dense)
+    # ... including through the backward pass
+    assert not _dense_shape_present(
+        jax.grad(lambda p, xx: jnp.sum(moe_ffn_apply(p, xx, cfg)[0] ** 2)),
+        (params, x), dense)
+    if routing == "expert_choice":
+        # slot-major dispatch: no (G, T*E, M) token blowup from the
+        # K = E token-choice columns either
+        blown = (G, T * cfg.moe.num_experts, cfg.d_model)
+        assert not _dense_shape_present(
+            lambda p, xx: moe_ffn_apply(p, xx, cfg)[0], (params, x), blown)
+    # control: the einsum path does materialise exactly that tensor
+    cfg_e = cfg.replace_moe(impl="einsum")
+    assert _dense_shape_present(
+        lambda p, xx: moe_ffn_apply(p, xx, cfg_e)[0], (params, x), dense)

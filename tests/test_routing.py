@@ -1,4 +1,10 @@
-"""Routing semantics vs the paper's pseudo-code (Figs. 7-8) + invariants."""
+"""Routing semantics vs the paper's pseudo-code (Figs. 7-8) + invariants.
+
+These tests consume the dense ``combine``/``dispatch`` views, which are
+now lazy scatter-materialisations of the RoutingPlan index view — so they
+double as equivalence checks between the two representations.
+(Registry/index-view/new-router coverage lives in test_routers.py.)
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
