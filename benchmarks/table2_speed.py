@@ -1,21 +1,29 @@
 """Table 2: training speed (ms/step) of routing strategies at Capacity 1x,
-plus a beyond-paper sweep of routing strategy x execution path.
+plus a beyond-paper sweep of routing strategy x execution backend.
 
 Paper claim: the looping argmax makes top-k (k>1) markedly slower, while
 k top-1 prototyping stays within a few percent of top-1.
 
-The sweep isolates where the time goes per (strategy, impl) cell of the
-MoE layer forward:
+The sweep isolates where the time goes per (strategy, dispatcher) cell
+of the MoE layer forward — the dispatcher axis runs over the
+``repro.core.dispatch`` registry (einsum / gather / pallas / alltoall):
 
 * ``route_ms``  — RoutingPlan construction only (the index view);
-* ``ffn_ms``    — expert FFN on an already-dispatched buffer;
-* ``layer_ms``  — the full layer forward;
+* ``ffn_ms``    — expert FFN on an already-dispatched buffer (kernel
+  FFN for the pallas dispatcher, einsum FFN otherwise);
+* ``layer_ms``  — the full layer forward through the dispatcher;
 * ``dispatch_combine_ms`` — layer minus route minus ffn: the token
-  movement cost the index-view rewrite targets (the einsum path pays
-  O(T*E*C*M) one-hot contractions here, gather/pallas pay O(k*T*M)).
+  movement cost (the einsum backend pays O(T*E*C*M) one-hot
+  contractions here, index-view backends pay O(k*T*M)).
+
+Note: on a single device (this benchmark) the ``alltoall`` dispatcher
+has no expert-sharded mesh and degrades to its gather fallback, so its
+column measures the fallback dispatch; on a mesh it additionally pays
+the two all_to_all collectives.
 
 Results land in experiments/table2_speed.json (paper table) and
-experiments/BENCH_table2_speed_sweep.json (per-strategy/impl breakdown).
+experiments/BENCH_table2_speed_sweep.json (per-strategy/dispatcher
+breakdown).
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ STRATEGIES = [("topk", 1, "Top-1"), ("topk", 2, "Top-2"), ("topk", 4, "Top-4"),
 
 SWEEP_STRATEGIES = STRATEGIES + [("expert_choice", 2, "EC Top-C"),
                                  ("hash", 1, "Hash-1")]
-SWEEP_IMPLS = ("einsum", "gather", "pallas")
+SWEEP_DISPATCHERS = ("einsum", "gather", "pallas", "alltoall")
 
 
 def run(batch=8, seq=256, experts=32):
@@ -57,6 +65,7 @@ def _median_ms(fn, *args, iters=16):
 def time_moe_layer(cfg, batch, seq, iters=16):
     """Per-phase forward timings of one MoE layer (see module docstring)."""
     from repro.core import moe
+    from repro.core.dispatch import expert_ffn
     from repro.core.routing import route
     from repro.nn import init
 
@@ -77,7 +86,8 @@ def time_moe_layer(cfg, batch, seq, iters=16):
     buf = jax.random.normal(jax.random.PRNGKey(2),
                             (m.num_experts, G * capacity, cfg.d_model),
                             cfg.activation_dtype)
-    ffn_only = jax.jit(lambda p, b: jnp.sum(moe._expert_ffn(p, b, cfg)))
+    ffn_only = jax.jit(lambda p, b: jnp.sum(
+        expert_ffn(p, b, cfg, use_kernel=m.impl == "pallas")))
     layer = jax.jit(lambda p, xx: jnp.sum(moe.moe_ffn_apply(p, xx, cfg)[0]))
 
     route_ms = _median_ms(jax.jit(route_only), params, x, iters=iters)
@@ -93,12 +103,12 @@ def time_moe_layer(cfg, batch, seq, iters=16):
     }
 
 
-def run_sweep(batch=8, seq=256, experts=32, impls=SWEEP_IMPLS):
+def run_sweep(batch=8, seq=256, experts=32, dispatchers=SWEEP_DISPATCHERS):
     base = bench_config(experts=experts).replace_moe(capacity_mode="one")
     out = {}
     for routing, k, label in SWEEP_STRATEGIES:
         out[label] = {}
-        for impl in impls:
+        for impl in dispatchers:
             cfg = variant(base, routing, k, capacity_mode="one").replace_moe(impl=impl)
             out[label][impl] = time_moe_layer(cfg, batch, seq)
     return out
@@ -115,7 +125,7 @@ def main():
     save_result("table2_speed", out)
 
     sweep = run_sweep()
-    print("sweep,strategy,impl,layer_ms,route_ms,dispatch_combine_ms,ffn_ms")
+    print("sweep,strategy,dispatcher,layer_ms,route_ms,dispatch_combine_ms,ffn_ms")
     for label, impls in sweep.items():
         for impl, r in impls.items():
             print(f"sweep,{label},{impl},{r['layer_ms']:.2f},{r['route_ms']:.2f},"

@@ -37,20 +37,25 @@ class MoEConfig:
     normalize_gates: bool = False
     group_size: int = 2048               # tokens per routing group (GShard "d")
     combine_dtype: str = "auto"          # "auto": activation dtype (mesh-tf bf16)
-    # Execution path: "einsum" (paper-faithful GShard one-hot einsums),
-    # "gather" (optimized gather/scatter), "pallas" (grouped-GEMM kernel).
+    # Execution backend: a key into the repro.core.dispatch registry.
+    # Built-ins: "einsum" (paper-faithful GShard one-hot einsums),
+    # "gather" (index-view gather/scatter), "pallas" (grouped-GEMM
+    # kernel), "alltoall" (explicit expert-parallel shard_map dispatch).
     impl: str = "einsum"
     moe_attention: bool = False          # M6-T 3.4 (negative result)
     expert_axis: str = "model"           # mesh axis experts are sharded over
 
     def __post_init__(self):
         if self.num_experts > 0:
-            # Lazy import: the registry lives above configs in the layer
+            # Lazy imports: the registries live above configs in the layer
             # graph, but validation only runs at instance creation, after
-            # repro.core.routers has had a chance to register plugins.
+            # repro.core.{routers,dispatch} have had a chance to register
+            # plugins.
+            from repro.core.dispatch import get_dispatcher
             from repro.core.routers import get_router
 
-            get_router(self.routing)  # raises with the registry key list
+            get_router(self.routing)      # raises with the registry key list
+            get_dispatcher(self.impl)     # likewise for execution backends
 
     @property
     def active_k(self) -> int:

@@ -1,0 +1,72 @@
+"""The ``MoEContext``: per-call information threaded to MoE layers.
+
+Routers and dispatchers historically saw only hidden states — a bare
+``(params, x, cfg)`` signature — which made whole families of strategies
+inexpressible: true Hash-Layers routing needs *token identity*, stochastic
+routing needs a PRNG key, curriculum/annealed routing needs the step, and
+serving-time routing needs the absolute decode positions.  ``MoEContext``
+carries exactly that side-channel, built once at the model entry point
+(trainer / serving engine / family ``*_apply``) and threaded through
+``block_apply`` into ``moe_ffn_apply``, the router registry, and the
+dispatcher registry.
+
+All fields are optional: ``MoEContext()`` is a valid "know nothing"
+context, and every consumer must degrade gracefully (e.g. the ``hash``
+router falls back to position hashing when ``token_ids`` is None).
+
+The context is a registered pytree (``is_training`` is static metadata,
+everything else is data), so it crosses ``jit`` boundaries and rides
+through ``lax.scan`` closures without retracing games.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("token_ids", "positions", "rng", "step"),
+         meta_fields=("is_training",))
+@dataclasses.dataclass(frozen=True)
+class MoEContext:
+    """Side-channel inputs for routing/dispatch decisions.
+
+    ``token_ids``/``positions`` are ``(B, S)`` at the model level; inside
+    the MoE layer they are regrouped to the router's ``(G, T)`` layout via
+    :meth:`grouped` (the same reshape ``group_tokens`` applies to
+    activations, so choice ``(g, t)`` lines up with token ``(g, t)``).
+    ``token_ids`` entries < 0 mean "identity unknown" (e.g. image-patch
+    prefix rows) and consumers must fall back per-token.
+    """
+
+    token_ids: Optional[jax.Array] = None   # (B, S) int32; -1 = no identity
+    positions: Optional[jax.Array] = None   # (B, S) int32 absolute positions
+    rng: Optional[jax.Array] = None         # PRNG key for stochastic routing
+    step: Optional[jax.Array] = None        # training step (scalar)
+    is_training: bool = False
+
+    def replace(self, **kw) -> "MoEContext":
+        return dataclasses.replace(self, **kw)
+
+    def with_tokens(self, token_ids: Optional[jax.Array],
+                    positions: Optional[jax.Array],
+                    prefix_len: int = 0) -> "MoEContext":
+        """Fill per-sequence arrays, padding ``prefix_len`` non-token rows
+        (image patches / audio frames) with id -1 so shapes match x."""
+        if token_ids is not None and prefix_len:
+            pad = jnp.full((token_ids.shape[0], prefix_len), -1, token_ids.dtype)
+            token_ids = jnp.concatenate([pad, token_ids], axis=1)
+        return dataclasses.replace(self, token_ids=token_ids, positions=positions)
+
+    def grouped(self, G: int, T: int) -> "MoEContext":
+        """Reshape (B, S) fields to the router's (G, T) group layout."""
+        def regroup(a):
+            return None if a is None else a.reshape(G, T)
+
+        return dataclasses.replace(
+            self, token_ids=regroup(self.token_ids),
+            positions=regroup(self.positions))

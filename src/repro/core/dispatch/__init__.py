@@ -1,0 +1,72 @@
+"""Pluggable MoE execution backends (dispatchers).
+
+``MoEConfig.impl`` is a key into this registry — the execution twin of
+the routing registry in :mod:`repro.core.routers`.  A *router* decides
+which expert gets which token (the ``RoutingPlan``); a *dispatcher*
+decides how that plan is executed on the hardware: how tokens move into
+per-expert buffers, where the grouped FFN runs, and which collectives
+carry expert parallelism.  Built-ins:
+
+* ``einsum``   — paper-faithful GShard one-hot einsum dispatch/combine
+  (materialises the plan's dense ``(G,T,E,C)`` view; expert parallelism
+  is implicit via ``with_sharding_constraint`` + GSPMD);
+* ``gather``   — index-view dispatch: flat slot-id scatter/gather, no
+  dense tensor ever built (implicit parallelism, as above);
+* ``pallas``   — the gather dispatch feeding the Pallas grouped-GEMM
+  expert-FFN kernel (``repro.kernels.moe_ffn``);
+* ``alltoall`` — explicit expert parallelism: ``shard_map`` over the
+  mesh's expert axis with ``jax.lax.all_to_all`` dispatch/return
+  collectives and a per-shard grouped FFN (Fig. 7 at 480-GPU scale, the
+  Switch-Transformer execution model).
+
+Adding a backend is a small plugin::
+
+    from repro.core.dispatch import register_dispatcher
+
+    @register_dispatcher
+    class MyDispatcher:
+        name = "mine"
+        def __call__(self, params, xg, plan, cfg, ctx=None): ...
+
+Registration must happen before a ``MoEConfig(impl="mine")`` is
+constructed (config validation consults this registry).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Type
+
+from repro.core.dispatch.base import Dispatcher, expert_ffn  # noqa: F401
+
+_REGISTRY: Dict[str, Dispatcher] = {}
+
+
+def register_dispatcher(cls: Type) -> Type:
+    """Class decorator: instantiate and register a Dispatcher under cls.name."""
+    name = getattr(cls, "name", None)
+    if not name or not isinstance(name, str):
+        raise ValueError(f"dispatcher class {cls!r} needs a string `name` attribute")
+    _REGISTRY[name] = cls()
+    return cls
+
+
+def get_dispatcher(name: str) -> Dispatcher:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown moe impl {name!r}; registered dispatchers: "
+            f"{', '.join(available_dispatchers())}"
+        ) from None
+
+
+def available_dispatchers() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# Built-ins self-register on import.
+from repro.core.dispatch import alltoall, einsum, gather, pallas  # noqa: E402,F401
+
+__all__ = [
+    "Dispatcher", "expert_ffn", "register_dispatcher", "get_dispatcher",
+    "available_dispatchers",
+]

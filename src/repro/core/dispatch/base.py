@@ -1,0 +1,74 @@
+"""The ``Dispatcher`` protocol and the shared grouped expert FFN.
+
+A dispatcher executes a :class:`~repro.core.routers.base.RoutingPlan`:
+it moves tokens into per-expert buffers, runs each expert's FFN, and
+combines the gate-weighted results back into token order.  Dispatchers
+never make routing decisions — the plan is computed once (outside the
+dispatcher, by the router registry) so that every backend executes the
+*same* assignment and backends are numerically interchangeable, which
+the test-suite asserts forward and backward for every router.
+
+The contract:
+
+* input ``xg`` is the grouped token array ``(G, T, M)``;
+* the return value is ``(G, T, M)`` in ``cfg.activation_dtype`` domain;
+* capacity-dropped tokens contribute exactly zero rows (the residual
+  connection in the block then passes them through);
+* index-view dispatchers must never materialise the dense ``(G,T,E,C)``
+  combine/dispatch tensors (structurally asserted by walking jaxprs in
+  ``tests/test_dispatch.py``).
+
+Dispatchers receive the :class:`~repro.core.context.MoEContext` (already
+regrouped to ``(G, T)``) so execution strategies can use step / PRNG /
+token identity if they need to; all built-ins ignore it today.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.context import MoEContext
+from repro.core.routers.base import RoutingPlan
+
+
+@runtime_checkable
+class Dispatcher(Protocol):
+    """An MoE execution backend, selected by ``MoEConfig.impl``."""
+
+    name: str
+
+    def __call__(self, params, xg: jax.Array, plan: RoutingPlan,
+                 cfg: ModelConfig, ctx: Optional[MoEContext] = None) -> jax.Array:
+        """params: MoE layer params; xg: (G, T, M) -> (G, T, M)."""
+        ...
+
+
+def expert_ffn(params, dispatched: jax.Array, cfg: ModelConfig,
+               use_kernel: bool = False) -> jax.Array:
+    """dispatched: (E, X, M) -> (E, X, M) through each expert's FFN.
+
+    ``use_kernel`` selects the Pallas grouped-GEMM kernel (the compute
+    hot-spot: the paper's appendix attributes ~98% of MoE-layer forward
+    FLOPs to the two expert matmuls); the default is the pure-jnp einsum
+    form, which also serves as the kernel's reference/backward.
+    """
+    dt = cfg.activation_dtype
+    up_w = params["up"].astype(dt)
+    down_w = params["down"].astype(dt)
+    if use_kernel:
+        from repro.kernels.moe_ffn import ops as moe_ops
+
+        gate_w = params["gate"].astype(dt) if "gate" in params else None
+        return moe_ops.moe_ffn(dispatched, up_w, gate_w, down_w, cfg.ffn_activation)
+    h = jnp.einsum("exm,emi->exi", dispatched, up_w)
+    if "gate" in params:
+        g = jnp.einsum("exm,emi->exi", dispatched, params["gate"].astype(dt))
+        h = jax.nn.silu(g) * h if cfg.ffn_activation == "swiglu" else jax.nn.gelu(g) * h
+    elif cfg.ffn_activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return jnp.einsum("exi,eim->exm", h, down_w)

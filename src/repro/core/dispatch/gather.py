@@ -1,0 +1,114 @@
+"""Index-view dispatch: flat slot-id scatter/gather, no dense tensors.
+
+Each token-choice ``(g, t, j)`` owns slot ``e*C + c`` of group g's flat
+buffer; overflowed choices are parked on a sentinel row that is sliced
+off.  The same slot ids drive the gather-back, so the dense ``(G,T,E,C)``
+one-hot tensors are never built.  Same ``(E, C)`` buffer layout and
+capacity semantics as the einsum path, so outputs match (up to reduction
+order).  O(k*T*M) token movement instead of O(T*E*C*M); branch-free in T.
+
+Plans carrying the slot-major view (expert-choice: K would be E) are
+dispatched from it instead: gather-by-slot in, scatter-add-by-token out —
+O(E*C*M) token movement either way.
+
+The ``pallas`` dispatcher reuses this dispatch verbatim and swaps the
+expert FFN for the Pallas grouped-GEMM kernel.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.context import MoEContext
+from repro.core.dispatch import register_dispatcher
+from repro.core.dispatch.base import expert_ffn
+from repro.core.routers.base import RoutingPlan
+from repro.distributed.sharding import shard
+
+
+def flat_slot_ids(plan: RoutingPlan) -> jax.Array:
+    """(G, T*K) flat slot id per choice; invalid choices -> sentinel E*C."""
+    n_slots = plan.num_experts * plan.capacity
+    flat = plan.expert_index * plan.capacity + plan.slot_index   # (G,T,K)
+    flat = jnp.where(plan.valid, flat, n_slots)
+    G, T, K = plan.expert_index.shape
+    return flat.reshape(G, T * K)
+
+
+def gather_dispatch(params, xg: jax.Array, plan: RoutingPlan,
+                    cfg: ModelConfig, use_kernel: bool = False) -> jax.Array:
+    if plan.token_at_slot is not None:
+        return _slot_major_dispatch(params, xg, plan, cfg, use_kernel)
+    dt = cfg.activation_dtype
+    G, T, K = plan.expert_index.shape
+    E, C = plan.num_experts, plan.capacity
+    M = xg.shape[-1]
+    n_slots = E * C
+
+    flat_slot = flat_slot_ids(plan)                            # (G, T*K)
+
+    # dispatch: scatter each choice's token vector into its slot.  Valid
+    # (e, c) targets are unique, so `add` places exactly one token per slot.
+    gi = jnp.arange(G)[:, None]
+    tok = jnp.repeat(jnp.arange(T), K)                         # (T*K,)
+    buf = jnp.zeros((G, n_slots + 1, M), dt)
+    buf = buf.at[gi, flat_slot].add(xg[:, tok, :].astype(dt))
+    buf = buf[:, :n_slots].reshape(G, E, C, M)
+
+    buf = jnp.transpose(buf, (1, 0, 2, 3))                     # (E,G,C,M)
+    buf = shard(buf, "expert", "groups", None, None)
+    out = expert_ffn(params, buf.reshape(E, G * C, M), cfg, use_kernel)
+    out = out.reshape(E, G, C, M)
+    out = shard(out, "expert", "groups", None, None)
+    out = jnp.transpose(out, (1, 0, 2, 3)).reshape(G, n_slots, M)
+
+    # combine: gather each choice's slot back and weight by its gate.
+    # Invalid choices carry gate 0, so clipping their slot is harmless.
+    picked = jnp.take_along_axis(
+        out, jnp.minimum(flat_slot, n_slots - 1)[..., None], axis=1)
+    gates = plan.masked_gate.astype(dt).reshape(G, T * K)
+    y = jnp.sum((picked * gates[..., None]).reshape(G, T, K, M), axis=2)
+    return y
+
+
+def _slot_major_dispatch(params, xg, plan: RoutingPlan, cfg: ModelConfig,
+                         use_kernel: bool = False) -> jax.Array:
+    """Slot-major twin of :func:`gather_dispatch`: each (expert, slot)
+    names its token directly, so dispatch is a gather and combine a
+    scatter-add over tokens.  Empty slots (token -1) carry gate 0 and
+    zeroed rows."""
+    dt = cfg.activation_dtype
+    G, T, M = xg.shape
+    E = plan.num_experts
+    Cs = plan.token_at_slot.shape[-1]
+
+    tok = plan.token_at_slot                                   # (G,E,Cs)
+    filled = tok >= 0
+    tok_safe = jnp.clip(tok, 0, T - 1).reshape(G, E * Cs, 1)
+    buf = jnp.take_along_axis(xg, tok_safe, axis=1).reshape(G, E, Cs, M)
+    buf = jnp.where(filled[..., None], buf, 0.0).astype(dt)
+
+    buf = jnp.transpose(buf, (1, 0, 2, 3))                     # (E,G,Cs,M)
+    buf = shard(buf, "expert", "groups", None, None)
+    out = expert_ffn(params, buf.reshape(E, G * Cs, M), cfg, use_kernel)
+    out = out.reshape(E, G, Cs, M)
+    out = shard(out, "expert", "groups", None, None)
+    out = jnp.transpose(out, (1, 0, 2, 3))                     # (G,E,Cs,M)
+
+    gates = jnp.where(filled, plan.gate_at_slot, 0.0).astype(dt)
+    vals = (out * gates[..., None]).reshape(G, E * Cs, M)
+    gi = jnp.arange(G)[:, None]
+    y = jnp.zeros((G, T, M), dt).at[gi, tok_safe[..., 0]].add(vals)
+    return y
+
+
+@register_dispatcher
+class GatherDispatcher:
+    name = "gather"
+
+    def __call__(self, params, xg, plan: RoutingPlan, cfg: ModelConfig,
+                 ctx: Optional[MoEContext] = None) -> jax.Array:
+        return gather_dispatch(params, xg, plan, cfg, use_kernel=False)

@@ -1,0 +1,29 @@
+"""Pallas execution backend: gather (index-view) dispatch feeding the
+Pallas grouped-GEMM expert-FFN kernel (``repro.kernels.moe_ffn``).
+
+Token movement is identical to the ``gather`` dispatcher; only the
+expert-FFN compute hot-spot changes.  The kernel carries a
+``custom_vjp`` (kernel forward, reference-einsum backward), so this
+backend is trainable, not just a serving path.  On non-TPU backends the
+kernel runs in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.context import MoEContext
+from repro.core.dispatch import register_dispatcher
+from repro.core.dispatch.gather import gather_dispatch
+from repro.core.routers.base import RoutingPlan
+
+
+@register_dispatcher
+class PallasDispatcher:
+    name = "pallas"
+
+    def __call__(self, params, xg, plan: RoutingPlan, cfg: ModelConfig,
+                 ctx: Optional[MoEContext] = None) -> jax.Array:
+        return gather_dispatch(params, xg, plan, cfg, use_kernel=True)

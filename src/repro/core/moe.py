@@ -1,18 +1,29 @@
-"""The MoE FFN layer (paper Fig. 7) with three numerically-equivalent
-execution paths:
+"""The MoE FFN layer (paper Fig. 7), as a thin composition of two
+registries plus parameter specs and token grouping:
 
-* ``impl="einsum"``  — paper-faithful GShard one-hot einsum dispatch/combine
-  (`dispatch[GTEC] x tokens[GTM] -> [EGCM]`, expert FFN, combine back),
-  materialising the RoutingPlan's dense view.  Under pjit the expert axis
-  sharding induces the all-to-alls of Fig. 7.
-* ``impl="gather"``  — beyond-paper optimized path: consumes the plan's
-  *index view* directly — tokens are scattered into flat (E*C) expert
-  buffers by slot id and gathered back by the same ids.  O(k*T*M) memory
-  and compute instead of O(T*E*C*M); no (G,T,E,C) tensor is ever built.
-* ``impl="pallas"``  — the same index-view dispatch feeding the Pallas
-  grouped-GEMM expert FFN (`repro.kernels.moe_ffn`) for the compute
-  hot-spot (the paper's appendix attributes ~98% of MoE-layer forward
-  FLOPs to the two expert matmuls).
+* **Routing** (:mod:`repro.core.routers`, keyed by ``MoEConfig.routing``)
+  decides *which* expert gets which token and emits a compact index-view
+  :class:`~repro.core.routers.base.RoutingPlan`.
+* **Dispatch** (:mod:`repro.core.dispatch`, keyed by ``MoEConfig.impl``)
+  decides *how* that plan executes: ``einsum`` (paper-faithful GShard
+  one-hot einsums, dense ``(G,T,E,C)`` view, implicit GSPMD parallelism),
+  ``gather`` (flat slot-id scatter/gather off the index view, O(k*T*M)
+  token movement), ``pallas`` (gather dispatch + the Pallas grouped-GEMM
+  expert-FFN kernel), and ``alltoall`` (explicit expert parallelism:
+  ``shard_map`` over the mesh's expert axis with ``lax.all_to_all``
+  collectives — Fig. 7's system design written down as collectives
+  rather than recovered by the compiler).
+
+Every (router, dispatcher) pair composes: the plan is computed once, so
+all backends execute the same assignment and are numerically
+interchangeable — asserted forward and backward by the test-suite.
+
+``moe_ffn_apply`` additionally accepts a
+:class:`~repro.core.context.MoEContext` carrying token ids, absolute
+positions, PRNG key, step, and train/eval mode.  The layer regroups the
+per-sequence fields to the router's ``(G, T)`` layout and hands the
+context to both registries, which is what lets the ``hash`` router hash
+token *identity* (true Hash Layers) instead of position.
 """
 from __future__ import annotations
 
@@ -22,6 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.context import MoEContext
+from repro.core.dispatch import get_dispatcher
 from repro.core.routers import get_router
 from repro.core.routing import RoutingPlan, route
 from repro.distributed.sharding import shard
@@ -73,146 +86,30 @@ def _largest_divisor_leq(n: int, k: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Expert FFN on dispatched buffers
+# The layer
 # ---------------------------------------------------------------------------
 
-def _expert_ffn(params, dispatched: jax.Array, cfg: ModelConfig) -> jax.Array:
-    """dispatched: (E, X, M) -> (E, X, M) through each expert's FFN."""
-    dt = cfg.activation_dtype
-    up_w = params["up"].astype(dt)
-    down_w = params["down"].astype(dt)
-    if cfg.moe.impl == "pallas":
-        from repro.kernels.moe_ffn import ops as moe_ops
+def moe_ffn_apply(params, x, cfg: ModelConfig,
+                  ctx: Optional[MoEContext] = None) -> Tuple[jax.Array, dict]:
+    """x: (B, S, M) -> (y, aux) where aux carries losses + load metrics.
 
-        gate_w = params["gate"].astype(dt) if "gate" in params else None
-        return moe_ops.moe_ffn(dispatched, up_w, gate_w, down_w, cfg.ffn_activation)
-    h = jnp.einsum("exm,emi->exi", dispatched, up_w)
-    if "gate" in params:
-        g = jnp.einsum("exm,emi->exi", dispatched, params["gate"].astype(dt))
-        h = jax.nn.silu(g) * h if cfg.ffn_activation == "swiglu" else jax.nn.gelu(g) * h
-    elif cfg.ffn_activation == "gelu":
-        h = jax.nn.gelu(h)
-    else:
-        h = jax.nn.relu(h)
-    return jnp.einsum("exi,eim->exm", h, down_w)
-
-
-# ---------------------------------------------------------------------------
-# Execution paths
-# ---------------------------------------------------------------------------
-
-def _einsum_path(params, xg, plan: RoutingPlan, cfg: ModelConfig) -> jax.Array:
-    """Paper-faithful Fig. 7: one-hot einsum dispatch -> expert FFN -> combine."""
-    dt = cfg.activation_dtype
-    combine = plan.combine                                     # (G,T,E,C) dense view
-    G, T, E, C = combine.shape
-    dispatch = (combine > 0.0).astype(dt)
-    # 'dTZFC,dTZM->ZFdCM' in the paper == 'gtec,gtm->egcm' with E=Z*F.
-    dispatched = jnp.einsum("gtec,gtm->egcm", dispatch, xg)
-    dispatched = shard(dispatched, "expert", "groups", None, None)
-    out = _expert_ffn(params, dispatched.reshape(E, G * C, cfg.d_model), cfg)
-    out = out.reshape(E, G, C, cfg.d_model)
-    out = shard(out, "expert", "groups", None, None)
-    # 'dTEC,EdCM->dTM' == 'gtec,egcm->gtm'
-    y = jnp.einsum("gtec,egcm->gtm", combine.astype(dt), out)
-    return y
-
-
-def _gather_path(params, xg, plan: RoutingPlan, cfg: ModelConfig) -> jax.Array:
-    """Index-view dispatch: scatter tokens into flat expert buffers by slot id.
-
-    Each token-choice (g, t, j) owns slot ``e*C + c`` of group g's flat
-    buffer; overflowed choices are parked on a sentinel row that is
-    sliced off.  The same slot ids drive the gather-back, so the dense
-    (G,T,E,C) one-hot tensors are never built.  Same (E,C) buffer layout
-    and capacity semantics as the einsum path, so outputs match (up to
-    reduction order).  Branch-free in T.
-
-    Plans carrying the slot-major view (expert-choice: K would be E) are
-    dispatched from it instead: gather-by-slot in, scatter-add-by-token
-    out — O(E*C*M) token movement either way.
+    ``ctx`` is optional — ``None`` means "no side information" and every
+    router/dispatcher must cope (the pre-context signature).
     """
-    if plan.token_at_slot is not None:
-        return _gather_path_slot_major(params, xg, plan, cfg)
-    dt = cfg.activation_dtype
-    G, T, K = plan.expert_index.shape
-    E, C = plan.num_experts, plan.capacity
-    M = xg.shape[-1]
-    n_slots = E * C
-
-    flat_slot = plan.expert_index * C + plan.slot_index        # (G,T,K)
-    flat_slot = jnp.where(plan.valid, flat_slot, n_slots)      # sentinel row
-    flat_slot = flat_slot.reshape(G, T * K)
-
-    # dispatch: scatter each choice's token vector into its slot.  Valid
-    # (e, c) targets are unique, so `add` places exactly one token per slot.
-    gi = jnp.arange(G)[:, None]
-    tok = jnp.repeat(jnp.arange(T), K)                         # (T*K,)
-    buf = jnp.zeros((G, n_slots + 1, M), dt)
-    buf = buf.at[gi, flat_slot].add(xg[:, tok, :].astype(dt))
-    buf = buf[:, :n_slots].reshape(G, E, C, M)
-
-    buf = jnp.transpose(buf, (1, 0, 2, 3))                     # (E,G,C,M)
-    buf = shard(buf, "expert", "groups", None, None)
-    out = _expert_ffn(params, buf.reshape(E, G * C, M), cfg).reshape(E, G, C, M)
-    out = shard(out, "expert", "groups", None, None)
-    out = jnp.transpose(out, (1, 0, 2, 3)).reshape(G, n_slots, M)
-
-    # combine: gather each choice's slot back and weight by its gate.
-    # Invalid choices carry gate 0, so clipping their slot is harmless.
-    picked = jnp.take_along_axis(
-        out, jnp.minimum(flat_slot, n_slots - 1)[..., None], axis=1)
-    gates = plan.masked_gate.astype(dt).reshape(G, T * K)
-    y = jnp.sum((picked * gates[..., None]).reshape(G, T, K, M), axis=2)
-    return y
-
-
-def _gather_path_slot_major(params, xg, plan: RoutingPlan, cfg: ModelConfig) -> jax.Array:
-    """Slot-major twin of :func:`_gather_path`: each (expert, slot) names
-    its token directly, so dispatch is a gather and combine a scatter-add
-    over tokens.  Empty slots (token -1) carry gate 0 and zeroed rows."""
-    dt = cfg.activation_dtype
-    G, T, M = xg.shape
-    E = plan.num_experts
-    Cs = plan.token_at_slot.shape[-1]
-
-    tok = plan.token_at_slot                                   # (G,E,Cs)
-    filled = tok >= 0
-    tok_safe = jnp.clip(tok, 0, T - 1).reshape(G, E * Cs, 1)
-    buf = jnp.take_along_axis(xg, tok_safe, axis=1).reshape(G, E, Cs, M)
-    buf = jnp.where(filled[..., None], buf, 0.0).astype(dt)
-
-    buf = jnp.transpose(buf, (1, 0, 2, 3))                     # (E,G,Cs,M)
-    buf = shard(buf, "expert", "groups", None, None)
-    out = _expert_ffn(params, buf.reshape(E, G * Cs, M), cfg).reshape(E, G, Cs, M)
-    out = shard(out, "expert", "groups", None, None)
-    out = jnp.transpose(out, (1, 0, 2, 3))                     # (G,E,Cs,M)
-
-    gates = jnp.where(filled, plan.gate_at_slot, 0.0).astype(dt)
-    vals = (out * gates[..., None]).reshape(G, E * Cs, M)
-    gi = jnp.arange(G)[:, None]
-    y = jnp.zeros((G, T, M), dt).at[gi, tok_safe[..., 0]].add(vals)
-    return y
-
-
-def moe_ffn_apply(params, x, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
-    """x: (B, S, M) -> (y, aux) where aux carries losses + load metrics."""
     m = cfg.moe
     B, S, M = x.shape
     xg, G = group_tokens(x, m)
     T = xg.shape[1]
     capacity = m.capacity(T)
     xg = shard(xg, "groups", None, None)
+    gctx = ctx.grouped(G, T) if ctx is not None else None
 
     router_w = params.get("router")
     if router_w is not None:
         router_w = router_w.astype(jnp.float32)
-    plan = route(xg, router_w, m, capacity)
+    plan = route(xg, router_w, m, capacity, ctx=gctx)
 
-    if m.impl in ("gather", "pallas"):   # index-view dispatch (+ kernel FFN)
-        y = _gather_path(params, xg, plan, cfg)
-    else:                                # "einsum": paper-faithful dense view
-        y = _einsum_path(params, xg, plan, cfg)
+    y = get_dispatcher(m.impl)(params, xg, plan, cfg, ctx=gctx)
 
     y = y.reshape(B, S, M).astype(x.dtype)
     aux = {

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.context import MoEContext
 from repro.core.moe import group_tokens
 from repro.core.routers import get_router
 from repro.core.routing import route
@@ -50,7 +51,8 @@ def _moe_project(w, dispatched, dt):
 
 
 def moe_attention_apply(params, x, cfg: ModelConfig, *, positions,
-                        causal: bool = True) -> Tuple[jax.Array, dict]:
+                        causal: bool = True,
+                        ctx: Optional[MoEContext] = None) -> Tuple[jax.Array, dict]:
     m = cfg.moe
     dt = cfg.activation_dtype
     B, S, M = x.shape
@@ -62,7 +64,13 @@ def moe_attention_apply(params, x, cfg: ModelConfig, *, positions,
     router_w = params.get("router")
     if router_w is not None:
         router_w = router_w.astype(jnp.float32)
-    routing = route(xg, router_w, m, capacity)
+    # Attention experts route *projections*, not token content: the
+    # context passed down is positions-only (token_ids stripped), so
+    # e.g. the hash router falls back to its position hash here.
+    actx = None
+    if ctx is not None:
+        actx = ctx.replace(token_ids=None).grouped(G, T)
+    routing = route(xg, router_w, m, capacity, ctx=actx)
     E, C = m.num_experts, capacity
 
     combine = routing.combine                  # materialise the dense view once

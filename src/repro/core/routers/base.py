@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
+from repro.core.context import MoEContext
 from repro.nn import ParamSpec
 
 
@@ -126,8 +127,15 @@ class Router(Protocol):
         ...
 
     def plan(self, x32: jax.Array, w: Optional[jax.Array], m: MoEConfig,
-             capacity: int, combine_dtype=jnp.float32) -> RoutingPlan:
-        """x32: (G, T, M) float32 tokens -> RoutingPlan."""
+             capacity: int, combine_dtype=jnp.float32,
+             ctx: Optional[MoEContext] = None) -> RoutingPlan:
+        """x32: (G, T, M) float32 tokens -> RoutingPlan.
+
+        ``ctx`` carries (G, T)-grouped token ids / positions plus PRNG
+        key, step and train flag — optional side information a router
+        may consume (the ``hash`` router hashes ``ctx.token_ids``);
+        every router must also work with ``ctx=None``.
+        """
         ...
 
 

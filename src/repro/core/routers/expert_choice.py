@@ -85,6 +85,6 @@ class ExpertChoiceRouter:
                          ("embed", "expert"), init)
 
     def plan(self, x32, w, m: MoEConfig, capacity: int,
-             combine_dtype=jnp.float32) -> RoutingPlan:
+             combine_dtype=jnp.float32, ctx=None) -> RoutingPlan:
         logits = jnp.einsum("gtm,me->gte", x32, w.astype(jnp.float32))
         return expert_choice_plan(logits, m, capacity, combine_dtype)

@@ -1,23 +1,35 @@
-"""Stateless hash routing — a *position-hash* variant of the idea in
-Roller et al., 2021 ("Hash Layers").
+"""Stateless hash routing (Roller et al., 2021 — "Hash Layers").
 
 No learned router at all: each token is assigned to experts by a fixed
-integer hash, with uniform combine weight 1/k.  Note the deliberate
-departure from the citation: Roller et al. hash the *token id* so that
-experts specialise per token type; the MoE layer here only sees hidden
-states, so we hash the token's global *position* instead — a fully
-content-independent assignment (a fixed pseudo-random permutation over
-positions).  That makes this the floor baseline for "how much does
-learned/content routing matter", strictly weaker than true Hash Layers;
-token-id hashing needs ids threaded to the layer (see ROADMAP).  It also
-exercises the parameter-free corner of the Router API (``param_spec``
-returns None).
+integer hash, with uniform combine weight 1/k.  Two regimes:
 
-Choice i targets expert ``(hash(pos) + i) % E`` so a token's k choices
-are always distinct experts.  Capacity/slot semantics are identical to
+* **Token-identity hashing** (the paper's actual scheme): when the
+  :class:`~repro.core.context.MoEContext` provides ``token_ids``, the
+  hash is over the token's *vocabulary id*, so every occurrence of a
+  token routes to the same experts regardless of position — experts
+  specialise per token type.  Rows whose identity is unknown
+  (``token_ids < 0``, e.g. image-patch prefix embeddings) fall back
+  per-row to the position hash.
+* **Position hashing** (fallback): with no token ids — or under layers
+  that route non-token activations, e.g. ``moe_attention`` — tokens
+  hash by position, fully content-independent.  When the context
+  provides *absolute* positions the fallback is layout-invariant
+  (prefill and single-step decode hash a given sequence position
+  identically); with no context at all it hashes the synthetic
+  group-local position (a fixed pseudo-random permutation over the
+  group layout).  This is the floor baseline for "how much does
+  learned/content routing matter", strictly weaker than true Hash
+  Layers.
+
+Choice i targets expert ``(hash + i) % E`` so a token's k choices are
+always distinct experts.  Capacity/slot semantics are identical to
 token-choice routers (first-come within the group, overflow dropped).
+This router also exercises the parameter-free corner of the Router API
+(``param_spec`` returns None).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +47,30 @@ def _mix32(x: jax.Array) -> jax.Array:
 
 
 def hash_plan(G: int, T: int, cfg: MoEConfig, capacity: int,
-              combine_dtype=jnp.float32) -> RoutingPlan:
+              combine_dtype=jnp.float32,
+              token_ids: Optional[jax.Array] = None,
+              positions: Optional[jax.Array] = None) -> RoutingPlan:
+    """Build the hash plan.
+
+    ``token_ids``: optional (G, T) int32; rows with id -1 fall back to
+    the position hash.  ``positions``: optional (G, T) int32 *absolute*
+    sequence positions for that fallback — a token at sequence position
+    p hashes the same whether it arrives in a prefill group or as a
+    single decode step.  Without positions the fallback hashes the
+    synthetic group-local position ``g*T + t`` (fixed pseudo-random
+    permutation over the group layout)."""
     E = cfg.num_experts
     k = max(1, min(cfg.top_k, E))
-    pos = (jnp.arange(G, dtype=jnp.uint32)[:, None] * jnp.uint32(T)
-           + jnp.arange(T, dtype=jnp.uint32)[None, :])       # (G,T) global position
+    if positions is not None:
+        pos = positions.astype(jnp.uint32)                   # (G,T) absolute
+    else:
+        pos = (jnp.arange(G, dtype=jnp.uint32)[:, None] * jnp.uint32(T)
+               + jnp.arange(T, dtype=jnp.uint32)[None, :])   # (G,T) group-local
     h = (_mix32(pos) % jnp.uint32(E)).astype(jnp.int32)      # (G,T)
+    if token_ids is not None:
+        known = token_ids >= 0
+        h_id = (_mix32(token_ids.astype(jnp.uint32)) % jnp.uint32(E)).astype(jnp.int32)
+        h = jnp.where(known, h_id, h)
 
     count = jnp.zeros((G, E), jnp.float32)
     experts, slots = [], []
@@ -70,6 +100,9 @@ class HashRouter:
         return None  # stateless: no router weights
 
     def plan(self, x32, w, m: MoEConfig, capacity: int,
-             combine_dtype=jnp.float32) -> RoutingPlan:
+             combine_dtype=jnp.float32, ctx=None) -> RoutingPlan:
         G, T = x32.shape[0], x32.shape[1]
-        return hash_plan(G, T, m, capacity, combine_dtype)
+        ids = ctx.token_ids if ctx is not None else None
+        pos = ctx.positions if ctx is not None else None
+        return hash_plan(G, T, m, capacity, combine_dtype,
+                         token_ids=ids, positions=pos)

@@ -82,5 +82,5 @@ class PrototypeRouter:
                          jnp.float32, ("embed", None, "expert"), init)
 
     def plan(self, x32, w, m: MoEConfig, capacity: int,
-             combine_dtype=jnp.float32) -> RoutingPlan:
+             combine_dtype=jnp.float32, ctx=None) -> RoutingPlan:
         return prototype_plan(prototype_logits(x32, w), m, capacity, combine_dtype)

@@ -71,5 +71,5 @@ class TopKRouter:
                          ("embed", "expert"), init)
 
     def plan(self, x32, w, m: MoEConfig, capacity: int,
-             combine_dtype=jnp.float32) -> RoutingPlan:
+             combine_dtype=jnp.float32, ctx=None) -> RoutingPlan:
         return topk_plan(topk_logits(x32, w), m, capacity, combine_dtype)

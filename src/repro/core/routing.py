@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
+from repro.core.context import MoEContext
 from repro.core.routers import available_routers, get_router, register_router
 from repro.core.routers.base import RoutingPlan
 from repro.core.routers.expert_choice import expert_choice_plan
@@ -45,12 +46,18 @@ def route(
     router_w: Optional[jax.Array],   # router weights, None for stateless routers
     cfg: MoEConfig,
     capacity: int,
+    ctx: Optional[MoEContext] = None,  # (G, T)-grouped side information
 ) -> RoutingPlan:
-    """Build the routing plan for ``cfg.routing`` via the registry."""
+    """Build the routing plan for ``cfg.routing`` via the registry.
+
+    ``ctx`` (token ids / positions regrouped to the (G, T) layout, PRNG
+    key, step, train flag) is optional side information; routers that
+    don't consume it ignore it.
+    """
     x32 = x.astype(jnp.float32)
     cd = jnp.float32 if cfg.combine_dtype == "float32" else jnp.dtype(x.dtype)
     router = get_router(cfg.routing)
-    return router.plan(x32, router_w, cfg, capacity, combine_dtype=cd)
+    return router.plan(x32, router_w, cfg, capacity, combine_dtype=cd, ctx=ctx)
 
 
 __all__ = [

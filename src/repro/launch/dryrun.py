@@ -291,7 +291,9 @@ def main():
     ap.add_argument("--arch", default="all", choices=["all"] + ALL_IDS)
     ap.add_argument("--shape", default="all", choices=["all"] + list(SHAPES))
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
-    ap.add_argument("--moe-impl", default=None, choices=[None, "einsum", "gather", "pallas"])
+    from repro.core.dispatch import available_dispatchers
+    ap.add_argument("--moe-impl", default=None,
+                    choices=[None, *available_dispatchers()])
     ap.add_argument("--expert-axis", default=None)
     ap.add_argument("--group-size", type=int, default=None)
     ap.add_argument("--no-remat", action="store_true")

@@ -57,12 +57,14 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--optimizer", default=None, choices=[None, "adamw", "adafactor"])
+    from repro.core.dispatch import available_dispatchers
     from repro.core.routers import available_routers
     ap.add_argument("--routing", default=None,
                     choices=[None, *available_routers()])
     ap.add_argument("--k", type=int, default=2)
     ap.add_argument("--capacity", default=None, choices=[None, "k", "one"])
-    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--moe-impl", default=None,
+                    choices=[None, *available_dispatchers()])
     ap.add_argument("--aux-loss-coef", type=float, default=None)
     ap.add_argument("--grad-compression", default="none")
     ap.add_argument("--microbatches", type=int, default=1)

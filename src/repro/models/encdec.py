@@ -4,6 +4,11 @@ The speech/audio frontend is a STUB per the assignment: ``encode`` takes
 precomputed frame embeddings (B, S_src, d_model).  The decoder is a
 standard causal transformer with cross-attention; decode uses a KV cache
 for self-attention plus precomputed cross-attention K/V.
+
+When ``cfg.moe.num_experts > 0`` every *decoder* FFN is a MoE layer
+(the encoder stays dense — its inputs are frontend frames, not tokens),
+with the :class:`~repro.core.context.MoEContext` threaded through so
+routing sees target-token identity and absolute decode positions.
 """
 from __future__ import annotations
 
@@ -13,7 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.context import MoEContext
 from repro.core.metrics import empty_aux
+from repro.core.moe import moe_ffn_apply, moe_ffn_specs
 from repro.distributed.sharding import shard
 from repro.models import layers as L
 from repro.models.attention import (
@@ -43,13 +50,16 @@ def enc_block_specs(cfg: ModelConfig):
 
 
 def dec_block_specs(cfg: ModelConfig):
+    moe = cfg.moe.num_experts > 0
     return {
         "ln_self": L.norm_specs(cfg),
         "self_attn": attention_specs(cfg),
         "ln_cross": L.norm_specs(cfg),
         "cross_attn": attention_specs(cfg),
         "ln_ffn": L.norm_specs(cfg),
-        "ffn": L.ffn_specs(cfg),
+        # Decoder layers are uniform (stacked/scanned), so MoE applies to
+        # every decoder FFN when experts are configured.
+        "ffn": moe_ffn_specs(cfg) if moe else L.ffn_specs(cfg),
     }
 
 
@@ -98,7 +108,8 @@ def _scan_or_unroll(body, x, stacked, cfg):
     return x
 
 
-def _dec_block(bp, h, memory_kv, cfg, *, positions, cache=None):
+def _dec_block(bp, h, memory_kv, cfg, *, positions, cache=None,
+               ctx: Optional[MoEContext] = None):
     a = L.norm_apply(bp["ln_self"], h, cfg)
     attn, new_cache = attention_apply(bp["self_attn"], a, cfg,
                                       positions=positions, cache=cache)
@@ -108,33 +119,64 @@ def _dec_block(bp, h, memory_kv, cfg, *, positions, cache=None):
                                kv=memory_kv)
     h = h + cross
     f = L.norm_apply(bp["ln_ffn"], h, cfg)
-    h = h + L.ffn_apply(bp["ffn"], f, cfg)
-    return h, new_cache
+    if cfg.moe.num_experts > 0:
+        ffn, aux = moe_ffn_apply(bp["ffn"], f, cfg, ctx=ctx)
+    else:
+        ffn, aux = L.ffn_apply(bp["ffn"], f, cfg), empty_aux()
+    h = h + ffn
+    return h, aux, new_cache
 
 
-def decode_train(params, tokens, memory, cfg: ModelConfig):
-    """Teacher-forcing decoder forward. memory: encoder output."""
+def _sum_layer_aux(aux):
+    """Stacked per-layer aux -> totals for _loss keys (scan ys layout)."""
+    out = dict(aux)
+    for k in list(out):
+        if k.endswith("_loss"):
+            out[k] = jnp.sum(out[k])
+    return out
+
+
+def decode_train(params, tokens, memory, cfg: ModelConfig,
+                 ctx: Optional[MoEContext] = None):
+    """Teacher-forcing decoder forward. memory: encoder output.
+    Returns (logits, aux)."""
     x = L.embedding_apply(params["embed"], tokens, cfg)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    ctx = (ctx or MoEContext()).with_tokens(tokens, positions)
     x = shard(x, "batch", "seq", "embed")
 
     def body(h, bp):
         mem_kv = project_kv(bp["cross_attn"], memory, cfg)
-        h, _ = _dec_block(bp, h, mem_kv, cfg, positions=positions)
-        return h, None
+        h, aux, _ = _dec_block(bp, h, mem_kv, cfg, positions=positions, ctx=ctx)
+        return h, aux
 
     if cfg.remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    x = _scan_or_unroll(body, x, params["decoder"], cfg)
+    x, aux = _scan_or_unroll_aux(body, x, params["decoder"], cfg)
     x = L.norm_apply(params["final_norm"], x, cfg)
-    return L.unembed_apply(params["embed"], x, cfg)
+    return L.unembed_apply(params["embed"], x, cfg), _sum_layer_aux(aux)
 
 
-def encdec_train_apply(params, frames, tokens, cfg: ModelConfig):
+def _scan_or_unroll_aux(body, x, stacked, cfg):
+    """Like :func:`_scan_or_unroll` but collects per-layer aux dicts."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    auxes = []
+    for i in range(n):
+        bp = jax.tree_util.tree_map(lambda a: a[i], stacked)
+        x, aux = body(x, bp)
+        auxes.append(aux)
+    aux = {k: jnp.stack([a[k] for a in auxes]) for k in auxes[0]}
+    return x, aux
+
+
+def encdec_train_apply(params, frames, tokens, cfg: ModelConfig,
+                       ctx: Optional[MoEContext] = None):
     memory = encode(params, frames, cfg)
-    logits = decode_train(params, tokens, memory, cfg)
-    return logits, empty_aux()
+    logits, aux = decode_train(params, tokens, memory, cfg, ctx=ctx)
+    return logits, aux
 
 
 def init_state(params, memory, cfg: ModelConfig, max_len: int) -> EncDecState:
@@ -162,16 +204,23 @@ def abstract_state(cfg: ModelConfig, batch: int, src_len: int, max_len: int) -> 
     return EncDecState(caches, kv, kv)
 
 
-def decode_step(params, tokens, state: EncDecState, cfg: ModelConfig):
-    """tokens: (B, 1). Returns (logits, new_state)."""
+def decode_step(params, tokens, state: EncDecState, cfg: ModelConfig,
+                ctx: Optional[MoEContext] = None):
+    """tokens: (B, 1). Returns (logits, new_state).
+
+    As in the decoder-LM family, the MoE context carries the absolute
+    decode positions and current token ids so MoE routing matches
+    teacher-forcing behaviour."""
     x = L.embedding_apply(params["embed"], tokens, cfg)
     B, S, _ = x.shape
     length = state.self_cache.length[0]
     positions = jnp.broadcast_to(length + jnp.arange(S)[None, :], (B, S))
+    ctx = (ctx or MoEContext()).with_tokens(tokens, positions)
 
     def body(h, scanned):
         bp, cache, ck, cv = scanned
-        h, new_cache = _dec_block(bp, h, (ck, cv), cfg, positions=positions, cache=cache)
+        h, _, new_cache = _dec_block(bp, h, (ck, cv), cfg, positions=positions,
+                                     cache=cache, ctx=ctx)
         return h, new_cache
 
     x, new_caches = jax.lax.scan(

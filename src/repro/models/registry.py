@@ -2,11 +2,16 @@
 
 Every family exposes:
   specs(cfg)                                   parameter ParamSpec tree
-  forward(params, batch, cfg) -> (logits, aux) training forward; logits
+  forward(params, batch, cfg, ctx)             training forward; logits
                                                align with batch["labels"]
   init_state(cfg, batch, max_len, abstract)    decode-state template
-  decode(params, tokens, state, cfg)           one-token serve step
-  prefill(params, batch, cfg, max_len)         prompt -> (logits, state)
+  decode(params, tokens, state, cfg, ctx)      one-token serve step
+  prefill(params, batch, cfg, max_len, ctx)    prompt -> (logits, state)
+
+``ctx`` is an optional :class:`repro.core.context.MoEContext` built by
+the caller (trainer / serving engine); families fill in token ids and
+positions and thread it to their MoE layers.  Families without MoE
+layers (xlstm / zamba) accept and ignore it.
   input_specs(cfg, shape)                      ShapeDtypeStruct batch for a
                                                ShapeConfig cell (dry-run)
 """
@@ -44,9 +49,10 @@ def _tok_struct(b, s):
 # decoder_lm (also base for vlm / m6 which add prefix embeddings)
 # ---------------------------------------------------------------------------
 
-def _lm_forward(params, batch, cfg: ModelConfig):
+def _lm_forward(params, batch, cfg: ModelConfig, ctx=None):
     extra = batch.get("patch_embeds")
-    logits, aux = TF.lm_apply(params, batch["tokens"], cfg, extra_embeds=extra)
+    logits, aux = TF.lm_apply(params, batch["tokens"], cfg, extra_embeds=extra,
+                              ctx=ctx)
     if extra is not None:
         logits = logits[:, extra.shape[1]:]
     return logits, aux
@@ -66,12 +72,13 @@ def _lm_init_state(cfg, batch, max_len, abstract=False):
     return TF.init_caches(cfg, batch, max_len, abstract=abstract)
 
 
-def _lm_decode(params, tokens, state, cfg):
-    return TF.decode_apply(params, tokens, state, cfg)
+def _lm_decode(params, tokens, state, cfg, ctx=None):
+    return TF.decode_apply(params, tokens, state, cfg, ctx=ctx)
 
 
-def _lm_prefill(params, batch, cfg, max_len):
-    logits, caches, _ = TF.prefill_apply(params, batch["tokens"], cfg, max_len=max_len)
+def _lm_prefill(params, batch, cfg, max_len, ctx=None):
+    logits, caches, _ = TF.prefill_apply(params, batch["tokens"], cfg,
+                                         max_len=max_len, ctx=ctx)
     return logits, caches
 
 
@@ -96,7 +103,8 @@ DECODER_LM = FamilyAPI(
 # xlstm
 # ---------------------------------------------------------------------------
 
-def _xl_forward(params, batch, cfg):
+def _xl_forward(params, batch, cfg, ctx=None):
+    del ctx  # no MoE layers in the xlstm family
     logits, aux, _ = XL.xlstm_apply(params, batch["tokens"], cfg)
     return logits, aux
 
@@ -106,7 +114,8 @@ def _xl_init_state(cfg, batch, max_len, abstract=False):
     return XL.xlstm_init_states(cfg, batch, abstract)
 
 
-def _xl_decode(params, tokens, state, cfg):
+def _xl_decode(params, tokens, state, cfg, ctx=None):
+    del ctx
     logits, _, new_state = XL.xlstm_apply(params, tokens, cfg, states=state)
     return logits, new_state
 
@@ -135,7 +144,8 @@ XLSTM = FamilyAPI(
 # zamba (hybrid)
 # ---------------------------------------------------------------------------
 
-def _zb_forward(params, batch, cfg):
+def _zb_forward(params, batch, cfg, ctx=None):
+    del ctx  # no MoE layers in the zamba family
     logits, aux, _ = ZB.zamba_apply(params, batch["tokens"], cfg)
     return logits, aux
 
@@ -144,7 +154,8 @@ def _zb_init_state(cfg, batch, max_len, abstract=False):
     return ZB.zamba_init_state(cfg, batch, max_len, abstract)
 
 
-def _zb_decode(params, tokens, state, cfg):
+def _zb_decode(params, tokens, state, cfg, ctx=None):
+    del ctx
     logits, _, new_state = ZB.zamba_apply(params, tokens, cfg, state=state)
     return logits, new_state
 
@@ -173,8 +184,9 @@ ZAMBA = FamilyAPI(
 # encdec (seamless) — frames are stub frontend embeddings
 # ---------------------------------------------------------------------------
 
-def _ed_forward(params, batch, cfg):
-    return ED.encdec_train_apply(params, batch["frames"], batch["tokens"], cfg)
+def _ed_forward(params, batch, cfg, ctx=None):
+    return ED.encdec_train_apply(params, batch["frames"], batch["tokens"], cfg,
+                                 ctx=ctx)
 
 
 def _ed_input_specs(cfg: ModelConfig, shape: ShapeConfig):
@@ -191,8 +203,8 @@ def _ed_init_state(cfg, batch, max_len, abstract=False):
     return ED.abstract_state(cfg, batch, max_len, max_len)
 
 
-def _ed_decode(params, tokens, state, cfg):
-    return ED.decode_step(params, tokens, state, cfg)
+def _ed_decode(params, tokens, state, cfg, ctx=None):
+    return ED.decode_step(params, tokens, state, cfg, ctx=ctx)
 
 
 def _ed_decode_input_specs(cfg, shape: ShapeConfig):

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.context import MoEContext
 from repro.core.metrics import empty_aux
 from repro.core.moe import moe_ffn_apply, moe_ffn_specs
 from repro.core.moe_attention import moe_attention_apply, moe_attention_specs
@@ -53,11 +54,18 @@ def block_specs(cfg: ModelConfig, moe_layer: bool):
 
 
 def block_apply(params, x, cfg: ModelConfig, *, positions, moe_layer: bool,
-                cache: Optional[KVCache] = None, use_flash: bool = False):
-    """Pre-norm block. Returns (x, aux, new_cache)."""
+                cache: Optional[KVCache] = None, use_flash: bool = False,
+                ctx: Optional[MoEContext] = None):
+    """Pre-norm block. Returns (x, aux, new_cache).
+
+    ``ctx`` is the MoE side-channel (token ids, absolute positions, PRNG,
+    step, train flag) threaded to routers and dispatchers; dense layers
+    ignore it.
+    """
     h = L.norm_apply(params["ln_attn"], x, cfg)
     if cfg.moe.moe_attention and moe_layer and cache is None:
-        attn_out, attn_aux = moe_attention_apply(params["attn"], h, cfg, positions=positions)
+        attn_out, attn_aux = moe_attention_apply(params["attn"], h, cfg,
+                                                 positions=positions, ctx=ctx)
         new_cache = None
     else:
         attn_out, new_cache = attention_apply(
@@ -68,7 +76,7 @@ def block_apply(params, x, cfg: ModelConfig, *, positions, moe_layer: bool,
 
     h = L.norm_apply(params["ln_ffn"], x, cfg)
     if moe_layer:
-        ffn_out, aux = moe_ffn_apply(params["ffn"], h, cfg)
+        ffn_out, aux = moe_ffn_apply(params["ffn"], h, cfg, ctx=ctx)
         if attn_aux is not None:
             aux = {k: aux[k] + attn_aux[k] if k.endswith("_loss") else aux[k]
                    for k in aux}
@@ -101,8 +109,12 @@ def lm_specs(cfg: ModelConfig):
 
 
 def _run_blocks(params, x, cfg: ModelConfig, *, positions, caches=None,
-                use_flash: bool = False):
-    """Run all layers; returns (x, aux_stacked, new_caches)."""
+                use_flash: bool = False, ctx: Optional[MoEContext] = None):
+    """Run all layers; returns (x, aux_stacked, new_caches).
+
+    ``ctx`` is layer-invariant, so under scan it rides in the body
+    closure (broadcast), not through xs.
+    """
     uniform = cfg.moe.num_experts == 0 or cfg.moe_layer_period == 1
     decode = caches is not None
 
@@ -112,7 +124,7 @@ def _run_blocks(params, x, cfg: ModelConfig, *, positions, caches=None,
             c = caches_index(caches, i) if decode else None
             x, aux, nc = block_apply(bp, x, cfg, positions=positions,
                                      moe_layer=_is_moe_layer(cfg, i), cache=c,
-                                     use_flash=use_flash)
+                                     use_flash=use_flash, ctx=ctx)
             auxes.append(aux)
             new_caches.append(nc)
         aux = {k: sum(a[k] for a in auxes) if k.endswith("_loss")
@@ -131,7 +143,7 @@ def _run_blocks(params, x, cfg: ModelConfig, *, positions, caches=None,
             bp, layer_cache = scanned
             h, aux, new_cache = block_apply(bp, h, cfg, positions=positions,
                                             moe_layer=moe_layer, cache=layer_cache,
-                                            use_flash=use_flash)
+                                            use_flash=use_flash, ctx=ctx)
             return h, (aux, new_cache)
 
         x, (aux, new_caches) = jax.lax.scan(body, x, (params["blocks"], caches))
@@ -139,7 +151,7 @@ def _run_blocks(params, x, cfg: ModelConfig, *, positions, caches=None,
         def body(h, bp):
             h, aux, _ = block_apply(bp, h, cfg, positions=positions,
                                     moe_layer=moe_layer, cache=None,
-                                    use_flash=use_flash)
+                                    use_flash=use_flash, ctx=ctx)
             return h, aux
 
         if cfg.remat:
@@ -164,23 +176,30 @@ def stack_caches(cache_list):
 
 
 def lm_apply(params, tokens, cfg: ModelConfig, *, positions=None,
-             use_flash: bool = False, extra_embeds: Optional[jax.Array] = None):
+             use_flash: bool = False, extra_embeds: Optional[jax.Array] = None,
+             ctx: Optional[MoEContext] = None):
     """tokens: (B, S) int32 -> (logits (B,S,V_pad), aux).
 
     ``extra_embeds``: optional (B, P, d_model) prefix embeddings (image
     patches / audio frames for the VLM / audio / M6 stubs) prepended to
-    the token embeddings.
+    the token embeddings.  ``ctx`` carries caller-side MoE context
+    (train flag / step / PRNG); token ids and positions are filled here,
+    with prefix rows marked identity-unknown (-1).
     """
     x = L.embedding_apply(params["embed"], tokens, cfg)
+    prefix = 0
     if extra_embeds is not None:
         x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        prefix = extra_embeds.shape[1]
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    ctx = (ctx or MoEContext()).with_tokens(tokens, positions, prefix_len=prefix)
     if cfg.pos_embed == "learned":
         x = x + params["pos_embed"][:S].astype(x.dtype)[None]
     x = shard(x, "batch", "seq", "embed")
-    x, aux, _ = _run_blocks(params, x, cfg, positions=positions, use_flash=use_flash)
+    x, aux, _ = _run_blocks(params, x, cfg, positions=positions,
+                            use_flash=use_flash, ctx=ctx)
     x = L.norm_apply(params["final_norm"], x, cfg)
     unembed = params.get("unembed", params["embed"])
     logits = L.unembed_apply(unembed, x, cfg)
@@ -198,17 +217,25 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = Fal
         lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy(), one)
 
 
-def decode_apply(params, tokens, caches, cfg: ModelConfig):
-    """tokens: (B, 1) -> (logits (B,1,V_pad), new_caches)."""
+def decode_apply(params, tokens, caches, cfg: ModelConfig,
+                 ctx: Optional[MoEContext] = None):
+    """tokens: (B, 1) -> (logits (B,1,V_pad), new_caches).
+
+    The MoE context carries the *absolute* decode positions (from the
+    cache length) and the current token ids, so content/identity routing
+    is consistent between prefill and decode.
+    """
     x = L.embedding_apply(params["embed"], tokens, cfg)
     B, S, _ = x.shape
     length = caches.length[0] if hasattr(caches, "length") else caches[0].length
     positions = jnp.broadcast_to(length + jnp.arange(S)[None, :], (B, S))
+    ctx = (ctx or MoEContext()).with_tokens(tokens, positions)
     if cfg.pos_embed == "learned":
         pos_tab = params["pos_embed"].astype(x.dtype)
         x = x + jax.lax.dynamic_slice_in_dim(pos_tab, length, S, axis=0)[None]
     x = shard(x, "batch", "seq", "embed")
-    x, aux, new_caches = _run_blocks(params, x, cfg, positions=positions, caches=caches)
+    x, aux, new_caches = _run_blocks(params, x, cfg, positions=positions,
+                                     caches=caches, ctx=ctx)
     x = L.norm_apply(params["final_norm"], x, cfg)
     unembed = params.get("unembed", params["embed"])
     logits = L.unembed_apply(unembed, x, cfg)
@@ -216,7 +243,7 @@ def decode_apply(params, tokens, caches, cfg: ModelConfig):
 
 
 def prefill_apply(params, tokens, cfg: ModelConfig, *, max_len: int,
-                  use_flash: bool = False):
+                  use_flash: bool = False, ctx: Optional[MoEContext] = None):
     """Full forward + build KV caches for subsequent decode.
 
     Implemented as full-sequence attention followed by writing K/V into a
@@ -229,8 +256,10 @@ def prefill_apply(params, tokens, cfg: ModelConfig, *, max_len: int,
     x = L.embedding_apply(params["embed"], tokens, cfg)
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    ctx = (ctx or MoEContext()).with_tokens(tokens, positions)
     x = shard(x, "batch", "seq", "embed")
-    x, aux, new_caches = _run_blocks(params, x, cfg, positions=positions, caches=caches)
+    x, aux, new_caches = _run_blocks(params, x, cfg, positions=positions,
+                                     caches=caches, ctx=ctx)
     x = L.norm_apply(params["final_norm"], x, cfg)
     unembed = params.get("unembed", params["embed"])
     logits = L.unembed_apply(unembed, x, cfg)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.context import MoEContext
 from repro.distributed.sharding import Rules, use_rules
 from repro.models.registry import get_family
 
@@ -29,17 +30,24 @@ class ServingEngine:
         self.rules = rules
         cfg_ = cfg
         fam = self.fam
+        # Serving-side MoE context (is_training=False).  The family's
+        # decode fills in the *absolute* decode positions (from the KV
+        # cache length) and the current token ids, so content/identity
+        # routing is consistent between prefill and decode instead of
+        # decode-time MoE seeing neither.
+        serve_ctx = MoEContext(is_training=False)
 
         def _decode(params, tokens, state):
             with use_rules(rules):
-                return fam.decode(params, tokens, state, cfg_)
+                return fam.decode(params, tokens, state, cfg_, ctx=serve_ctx)
 
         self._decode = jax.jit(_decode, donate_argnums=(2,))
 
         if fam.prefill is not None:
             def _prefill(params, batch):
                 with use_rules(rules):
-                    return fam.prefill(params, batch, cfg_, max_len=max_len)
+                    return fam.prefill(params, batch, cfg_, max_len=max_len,
+                                       ctx=serve_ctx)
 
             self._prefill = jax.jit(_prefill, static_argnums=())
         else:

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.context import MoEContext
 from repro.models.registry import get_family
 from repro.optim.api import Optimizer
 from repro.optim.clip import clip_by_global_norm
@@ -22,8 +23,8 @@ from repro.train.state import TrainState
 def make_loss_fn(cfg: ModelConfig):
     fam = get_family(cfg)
 
-    def loss_fn(params, batch):
-        logits, aux = fam.forward(params, batch, cfg)
+    def loss_fn(params, batch, ctx: Optional[MoEContext] = None):
+        logits, aux = fam.forward(params, batch, cfg, ctx=ctx)
         loss, metrics = total_loss(logits, batch["labels"], aux)
         return loss, metrics
 
@@ -55,12 +56,18 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, optimizer: Optimizer) -> 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        # The MoE side-channel: routers/dispatchers see the step, a
+        # step-folded PRNG key and the train flag; families add token
+        # ids and positions from the batch.
+        ctx = MoEContext(
+            rng=jax.random.fold_in(jax.random.PRNGKey(tc.seed), state.step),
+            step=state.step, is_training=True)
         if tc.microbatches > 1:
             mb = _split_microbatches(batch, tc.microbatches)
 
             def acc(carry, one):
                 g_acc, m_acc = carry
-                (loss, metrics), grads = grad_fn(state.params, one)
+                (loss, metrics), grads = grad_fn(state.params, one, ctx)
                 g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
                 m_acc = jax.tree_util.tree_map(jnp.add, m_acc,
                                                {"loss": loss, "ce": metrics["ce"]})
@@ -73,7 +80,7 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, optimizer: Optimizer) -> 
             grads = jax.tree_util.tree_map(lambda g: g / tc.microbatches, grads)
             metrics = {k: v / tc.microbatches for k, v in msum.items()}
         else:
-            (loss, metrics), grads = grad_fn(state.params, batch)
+            (loss, metrics), grads = grad_fn(state.params, batch, ctx)
 
         grads, gnorm = clip_by_global_norm(grads, tc.grad_clip_norm)
         grads, ef = compress_grads(grads, tc.grad_compression, state.error_feedback)
@@ -93,7 +100,7 @@ def make_eval_step(cfg: ModelConfig) -> Callable:
     loss_fn = make_loss_fn(cfg)
 
     def eval_step(params, batch):
-        _, metrics = loss_fn(params, batch)
+        _, metrics = loss_fn(params, batch, MoEContext(is_training=False))
         return metrics
 
     return eval_step

@@ -1,0 +1,374 @@
+"""Dispatcher API: registry, cross-backend equivalence (fwd+bwd, every
+router), MoEContext threading, and the explicit expert-parallel
+``alltoall`` backend on a multi-device host mesh."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.context import MoEContext
+from repro.core.dispatch import (
+    available_dispatchers,
+    get_dispatcher,
+    register_dispatcher,
+)
+from repro.core.moe import group_tokens, moe_ffn_apply, moe_ffn_specs
+from repro.nn import init
+
+ALL_ROUTERS = ("topk", "prototype", "expert_choice", "hash")
+ALL_DISPATCHERS = ("einsum", "gather", "pallas", "alltoall")
+
+
+def _cfg(routing="topk", impl="einsum", **kw):
+    moe_kw = dict(num_experts=8, routing=routing, top_k=2, num_prototypes=2,
+                  group_size=64, impl=impl, capacity_factor=2.0)
+    moe_kw.update(kw)
+    return ModelConfig(d_model=32, d_ff=48, dtype="float32",
+                       moe=MoEConfig(**moe_kw))
+
+
+def _run_sub(code: str, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+class TestRegistry:
+    def test_builtin_keys(self):
+        assert set(ALL_DISPATCHERS) <= set(available_dispatchers())
+
+    def test_resolves_all_four_backends(self):
+        for name in ALL_DISPATCHERS:
+            assert get_dispatcher(name).name == name
+
+    def test_unknown_key_lists_registry(self):
+        with pytest.raises(ValueError, match="alltoall.*einsum"):
+            get_dispatcher("nope")
+
+    def test_config_validates_impl_key(self):
+        with pytest.raises(ValueError, match="unknown moe impl"):
+            MoEConfig(num_experts=4, impl="definitely-not-registered")
+        # dense configs (num_experts=0) skip validation entirely
+        MoEConfig(num_experts=0, impl="whatever")
+
+    def test_plugin_registration(self):
+        from repro.core.dispatch import _REGISTRY
+        from repro.core.dispatch.gather import GatherDispatcher
+
+        try:
+            @register_dispatcher
+            class MyDispatcher(GatherDispatcher):
+                name = "my_backend"
+
+            assert get_dispatcher("my_backend").name == "my_backend"
+            MoEConfig(num_experts=4, impl="my_backend")
+        finally:
+            _REGISTRY.pop("my_backend", None)
+
+
+# ---------------------------------------------------------------------------
+# Cross-dispatcher equivalence: every backend == the einsum reference,
+# forward and backward, for every registered router.
+# ---------------------------------------------------------------------------
+
+class TestEquivalence:
+    @pytest.mark.parametrize("routing", ALL_ROUTERS)
+    @pytest.mark.parametrize("impl", ["gather", "pallas", "alltoall"])
+    def test_forward_matches_einsum(self, routing, impl):
+        cfg_e, cfg_o = _cfg(routing), _cfg(routing, impl=impl)
+        params = init(moe_ffn_specs(cfg_e), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32))
+        y0, a0 = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg_e))(params, x)
+        y1, a1 = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg_o))(params, x)
+        tol = 1e-5 if impl in ("gather", "alltoall") else 1e-4
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=tol)
+        # routing metrics are dispatcher-independent (the plan is shared)
+        assert float(a0["moe_cv"]) == pytest.approx(float(a1["moe_cv"]))
+        assert float(a0["moe_dropped_fraction"]) == pytest.approx(
+            float(a1["moe_dropped_fraction"]))
+
+    @pytest.mark.parametrize("routing", ALL_ROUTERS)
+    @pytest.mark.parametrize("impl", ["gather", "pallas", "alltoall"])
+    def test_backward_matches_einsum(self, routing, impl):
+        cfg_e, cfg_o = _cfg(routing), _cfg(routing, impl=impl)
+        params = init(moe_ffn_specs(cfg_e), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32))
+
+        def grads(cfg):
+            return jax.grad(
+                lambda p: jnp.mean(moe_ffn_apply(p, x, cfg)[0] ** 2))(params)
+
+        g_e, g_o = grads(cfg_e), grads(cfg_o)
+        for k in g_e:
+            a, b = np.asarray(g_e[k]), np.asarray(g_o[k])
+            np.testing.assert_allclose(
+                a, b, atol=1e-4 * max(np.abs(a).max(), 1e-9), err_msg=k)
+
+    @pytest.mark.parametrize("impl", ["gather", "pallas", "alltoall"])
+    def test_dropped_token_parity(self, impl):
+        """Under heavy capacity pressure every backend drops the *same*
+        tokens (zero rows in identical places) as the einsum reference."""
+        cfg_e = _cfg("topk", capacity_factor=0.05)
+        cfg_o = _cfg("topk", impl=impl, capacity_factor=0.05)
+        params = init(moe_ffn_specs(cfg_e), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+        y0, a0 = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg_e))(params, x)
+        y1, a1 = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg_o))(params, x)
+        assert float(a0["moe_dropped_fraction"]) > 0.3
+        assert float(a1["moe_dropped_fraction"]) == pytest.approx(
+            float(a0["moe_dropped_fraction"]))
+        z0 = np.linalg.norm(np.asarray(y0)[0], axis=-1) == 0.0
+        z1 = np.linalg.norm(np.asarray(y1)[0], axis=-1) == 0.0
+        np.testing.assert_array_equal(z0, z1)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoEContext threading
+# ---------------------------------------------------------------------------
+
+class TestContext:
+    def test_context_is_a_pytree(self):
+        ctx = MoEContext(token_ids=jnp.zeros((2, 8), jnp.int32),
+                         positions=jnp.zeros((2, 8), jnp.int32),
+                         is_training=True)
+        leaves, treedef = jax.tree_util.tree_flatten(ctx)
+        ctx2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert ctx2.is_training and ctx2.token_ids.shape == (2, 8)
+
+    def test_layer_regroups_context(self):
+        """Identity-routing (hash) changes when token ids are provided —
+        proof the context reaches the router through the layer."""
+        cfg = _cfg("hash")
+        params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32))
+        ids = jnp.full((2, 50), 7, jnp.int32)   # all the same token id
+        ctx = MoEContext(token_ids=ids)
+        y0, a0 = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg))(params, x)
+        y1, a1 = jax.jit(
+            lambda p, xx, c: moe_ffn_apply(p, xx, cfg, ctx=c))(params, x, ctx)
+        # all-identical ids hash to ONE expert pair -> drops under capacity
+        assert float(a1["moe_dropped_fraction"]) > float(a0["moe_dropped_fraction"])
+
+    def test_lm_apply_threads_token_ids(self):
+        """End to end: a decoder LM with hash routing routes by token id
+        (two prompts with permuted tokens produce identical expert loads)."""
+        from repro.models import transformer as TF
+
+        cfg = ModelConfig(num_layers=1, d_model=32, d_ff=48, num_heads=4,
+                          num_kv_heads=4, vocab_size=64, dtype="float32",
+                          moe=MoEConfig(num_experts=8, routing="hash", top_k=1,
+                                        group_size=256, capacity_factor=8.0))
+        params = init(TF.lm_specs(cfg), jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0, 64)
+        perm = toks[:, ::-1]
+        # capture the plan via the aux cv metric: same multiset of ids ->
+        # same expert loads -> identical cv, which position-hash (fixed
+        # pseudo-random permutation over positions) would not give.
+        _, a1 = TF.lm_apply(params, toks, cfg)
+        _, a2 = TF.lm_apply(params, perm, cfg)
+        assert float(jnp.sum(a1["moe_cv"])) == pytest.approx(
+            float(jnp.sum(a2["moe_cv"])), abs=1e-6)
+
+    def test_serving_engine_threads_decode_context(self):
+        """ServingEngine threads a MoEContext into prefill and decode
+        (smoke: hash-routed MoE generates without NaNs; the layout
+        invariance of the absolute-position fallback itself is asserted
+        in test_routers.TestHashGolden)."""
+        from repro.serving.engine import ServingEngine
+
+        cfg = ModelConfig(num_layers=2, d_model=32, d_ff=48, num_heads=4,
+                          num_kv_heads=4, vocab_size=64, dtype="float32",
+                          max_seq_len=64,
+                          moe=MoEConfig(num_experts=4, routing="hash", top_k=1,
+                                        group_size=32, capacity_factor=4.0))
+        from repro.models.registry import get_family
+
+        params = init(get_family(cfg).specs(cfg), jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, params, max_len=32)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64)
+        out, _ = eng.generate(prompts, num_tokens=4)
+        assert out.shape == (2, 4)
+        assert not bool(jnp.isnan(out.astype(jnp.float32)).any())
+
+
+# ---------------------------------------------------------------------------
+# Structural guarantee: the alltoall backend never materialises the dense
+# (G,T,E,C) tensors — in fallback mode here, under shard_map below.
+# ---------------------------------------------------------------------------
+
+def _walk_avals(jaxpr):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield v.aval
+        for p in eqn.params.values():
+            for pv in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(pv, "jaxpr", pv)
+                if hasattr(inner, "eqns"):
+                    yield from _walk_avals(inner)
+
+
+def _dense_shape_present(fn, args, dense_shape):
+    closed = jax.make_jaxpr(fn)(*args)
+    return any(getattr(a, "shape", None) == dense_shape
+               for a in _walk_avals(closed.jaxpr))
+
+
+@pytest.mark.parametrize("routing", ALL_ROUTERS)
+def test_alltoall_no_dense_intermediate(routing):
+    cfg = _cfg(routing, impl="alltoall")
+    params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32))
+    xg, G = group_tokens(x, cfg.moe)
+    T = xg.shape[1]
+    dense = (G, T, cfg.moe.num_experts, cfg.moe.capacity(T))
+    assert not _dense_shape_present(
+        lambda p, xx: moe_ffn_apply(p, xx, cfg)[0], (params, x), dense)
+    assert not _dense_shape_present(
+        jax.grad(lambda p, xx: jnp.sum(moe_ffn_apply(p, xx, cfg)[0] ** 2)),
+        (params, x), dense)
+
+
+# ---------------------------------------------------------------------------
+# The real thing: shard_map + all_to_all on an 8-device host mesh.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 host devices (CI mesh-8 matrix job sets "
+                           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_alltoall_in_process_on_8_devices():
+    """When the test process itself owns >= 8 devices (the CI mesh-8
+    job), run the shard_map path in-process: Rules sharding + explicit
+    all_to_all against the einsum reference."""
+    from repro.distributed.sharding import make_rules, use_rules
+    from repro.launch.mesh import make_debug_mesh
+
+    mesh = make_debug_mesh(2, 4)
+    cfg = _cfg("topk", impl="alltoall", group_size=32)
+    rules = make_rules(cfg, mesh)
+    assert rules.params["expert"] == "model"
+    params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32))
+    cfg_e = cfg.replace_moe(impl="einsum")
+    y0, _ = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg_e))(params, x)
+
+    def fwd(p, xx):
+        with use_rules(rules):
+            return moe_ffn_apply(p, xx, cfg)[0]
+
+    with mesh:
+        y1 = jax.jit(fwd)(params, x)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(jax.device_get(y1)),
+                               atol=2e-5)
+
+    def loss(c, r):
+        def g(p):
+            with use_rules(r):
+                return jnp.sum(moe_ffn_apply(p, x, c)[0] ** 2)
+        return g
+
+    g_e = jax.grad(loss(cfg_e, None))(params)
+    with mesh:
+        g_a = jax.jit(jax.grad(loss(cfg, rules)))(params)
+    for k in g_e:
+        a, b = np.asarray(g_e[k]), np.asarray(jax.device_get(g_a[k]))
+        np.testing.assert_allclose(a, b, atol=1e-4 * max(np.abs(a).max(), 1e-9),
+                                   err_msg=k)
+
+
+@pytest.mark.skipif(jax.device_count() >= 8,
+                    reason="multi-device parent runs the in-process mesh test "
+                           "instead; the subprocess variant belongs to the "
+                           "single-device CI job")
+def test_alltoall_on_mesh_matches_einsum_all_routers():
+    """2x4 (data, model) mesh: the explicit expert-parallel dispatch
+    matches the einsum reference forward AND backward for every router,
+    and its jaxpr (including the shard_map body) holds no dense
+    (G,T,E,C) or per-shard (Gl,T,E,C) tensor."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.core.moe import group_tokens, moe_ffn_apply, moe_ffn_specs
+    from repro.distributed.sharding import make_rules, use_rules
+    from repro.launch.mesh import make_debug_mesh
+    from repro.nn import init
+
+    assert jax.device_count() == 8
+    mesh = make_debug_mesh(2, 4)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                yield v.aval
+            for p in eqn.params.values():
+                for pv in (p if isinstance(p, (list, tuple)) else [p]):
+                    inner = getattr(pv, "jaxpr", pv)
+                    if hasattr(inner, "eqns"):
+                        yield from walk(inner)
+
+    for routing in ("topk", "prototype", "expert_choice", "hash"):
+        cfg = ModelConfig(d_model=32, d_ff=48, dtype="float32",
+                          moe=MoEConfig(num_experts=8, routing=routing,
+                                        top_k=2, num_prototypes=2,
+                                        group_size=32, capacity_factor=2.0,
+                                        impl="alltoall"))
+        rules = make_rules(cfg, mesh)
+        assert rules.params["expert"] == "model"
+        params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32))  # 8 groups
+        cfg_e = cfg.replace_moe(impl="einsum")
+
+        def fwd(p, xx):
+            with use_rules(rules):
+                return moe_ffn_apply(p, xx, cfg)[0]
+
+        def loss(c, r):
+            def g(p, xx):
+                with use_rules(r):
+                    return jnp.sum(moe_ffn_apply(p, xx, c)[0] ** 2)
+            return g
+
+        y0 = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg_e)[0])(params, x)
+        with mesh:
+            y1 = jax.jit(fwd)(params, x)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(jax.device_get(y1)),
+                                   atol=2e-5)
+
+        g_e = jax.grad(loss(cfg_e, None))(params, x)
+        with mesh:
+            g_a = jax.jit(jax.grad(loss(cfg, rules)))(params, x)
+        for k in g_e:
+            a = np.asarray(g_e[k]); b = np.asarray(jax.device_get(g_a[k]))
+            np.testing.assert_allclose(a, b, atol=1e-4 * max(np.abs(a).max(), 1e-9),
+                                       err_msg=routing + "/" + k)
+
+        # structural: no dense one-hot tensors, global or per-shard
+        xg, G = group_tokens(x, cfg.moe)
+        T = xg.shape[1]
+        E, C = cfg.moe.num_experts, cfg.moe.capacity(T)
+        with use_rules(rules):
+            closed = jax.make_jaxpr(lambda p, xx: moe_ffn_apply(p, xx, cfg)[0])(params, x)
+        shapes = {getattr(a, "shape", None) for a in walk(closed.jaxpr)}
+        assert (G, T, E, C) not in shapes, (routing, "global dense")
+        assert (G // 8, T, E, C) not in shapes, (routing, "per-shard dense")
+        # the shard_map body must actually contain the two all_to_alls
+        txt = str(closed)
+        assert "all_to_all" in txt, routing
+        print(routing, "mesh-ok")
+    """
+    # 4 routers x (fwd + bwd) compiles are heavy on a 2-core CI box:
+    # give the subprocess real headroom over the ~8 min observed runtime.
+    out = _run_sub(code, timeout=1500)
+    for routing in ALL_ROUTERS:
+        assert f"{routing} mesh-ok" in out

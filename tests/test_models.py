@@ -108,6 +108,33 @@ def test_encdec_decode_matches_teacher_forcing():
                                    atol=3e-4)
 
 
+def test_encdec_moe_decode_matches_teacher_forcing():
+    """MoE decoder FFN (hash routing by token id, no drops): decode-time
+    routing sees the same token identity the teacher-forcing pass saw, so
+    step-by-step decode reproduces the full forward exactly."""
+    from repro.configs.base import MoEConfig
+
+    cfg = ModelConfig(family="encdec", num_layers=2, num_encoder_layers=2,
+                      d_model=48, num_heads=4, num_kv_heads=4, d_ff=64,
+                      vocab_size=73, norm="layernorm", ffn_activation="relu",
+                      dtype="float32",
+                      moe=MoEConfig(num_experts=4, routing="hash", top_k=1,
+                                    group_size=32, capacity_factor=16.0))
+    params = init(ED.encdec_specs(cfg), jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 48))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 7), 0, 73)
+    full, aux = jax.jit(lambda p, f, t: ED.encdec_train_apply(p, f, t, cfg))(
+        params, frames, toks)
+    assert abs(float(aux["moe_dropped_fraction"].sum())) < 1e-6
+    memory = ED.encode(params, frames, cfg)
+    state = ED.init_state(params, memory, cfg, max_len=8)
+    for i in range(7):
+        lg, state = jax.jit(lambda p, t, s: ED.decode_step(p, t, s, cfg))(
+            params, toks[:, i:i + 1], state)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]),
+                                   atol=3e-4)
+
+
 def test_vlm_prefix_positions():
     cfg = ModelConfig(num_layers=2, d_model=32, num_heads=4, num_kv_heads=4,
                       d_ff=64, vocab_size=61, num_image_tokens=4, dtype="float32")

@@ -200,6 +200,58 @@ class TestHashGolden:
         # uniform average gates: 1/k each, summing to 1 per token
         np.testing.assert_allclose(np.asarray(plan.gate), 0.5)
 
+    def test_identical_tokens_route_identically(self):
+        """True Hash Layers: token *identity* decides the experts, so
+        every occurrence of a token id routes the same way regardless of
+        its position (position hashing cannot do this)."""
+        m = MoEConfig(num_experts=4, routing="hash", top_k=2)
+        ids = jnp.array([[5, 9, 5, 3, 9, 5, 3, 5]], jnp.int32)
+        plan = hash_plan(1, 8, m, capacity=8, token_ids=ids)
+        e = np.asarray(plan.expert_index)[0]                 # (T, k)
+        per_id = {}
+        for tid in (3, 5, 9):
+            rows = e[np.asarray(ids)[0] == tid]
+            assert (rows == rows[0]).all(), tid              # within the batch
+            per_id[tid] = rows[0]
+        # ... and across completely different position layouts
+        ids2 = jnp.array([[1, 3, 1, 5, 9, 1, 1, 5]], jnp.int32)
+        plan2 = hash_plan(1, 8, m, capacity=8, token_ids=ids2)
+        e2 = np.asarray(plan2.expert_index)[0]
+        for tid in (3, 5, 9):
+            rows2 = e2[np.asarray(ids2)[0] == tid]
+            np.testing.assert_array_equal(rows2[0], per_id[tid])
+        # the position hash would NOT be constant per id here
+        pos_plan = hash_plan(1, 8, m, capacity=8)
+        ep = np.asarray(pos_plan.expert_index)[0]
+        assert not all((ep[np.asarray(ids)[0] == t] ==
+                        ep[np.asarray(ids)[0] == t][0]).all() for t in (5, 9))
+
+    def test_unknown_ids_fall_back_to_position_hash(self):
+        """Rows with token_id < 0 (e.g. image-patch prefix embeddings)
+        use the position hash; known rows use the identity hash."""
+        m = MoEConfig(num_experts=4, routing="hash", top_k=1)
+        ids = jnp.array([[-1, -1, 7, 7, -1, 7, -1, 7]], jnp.int32)
+        plan = hash_plan(1, 8, m, capacity=8, token_ids=ids)
+        pos_plan = hash_plan(1, 8, m, capacity=8)
+        e = np.asarray(plan.expert_index)[0, :, 0]
+        ep = np.asarray(pos_plan.expert_index)[0, :, 0]
+        mask = np.asarray(ids)[0] < 0
+        np.testing.assert_array_equal(e[mask], ep[mask])     # fallback rows
+        assert (e[~mask] == e[~mask][0]).all()               # identity rows
+
+    def test_position_fallback_is_layout_invariant(self):
+        """With absolute positions, the fallback hash is consistent
+        between a prefill-style group layout and single-token decode
+        steps: sequence position p routes identically in both."""
+        m = MoEConfig(num_experts=4, routing="hash", top_k=1)
+        pos = jnp.arange(8, dtype=jnp.int32)[None, :]
+        prefill = hash_plan(1, 8, m, capacity=8, positions=pos)
+        pe = np.asarray(prefill.expert_index)[0, :, 0]
+        for p in range(8):
+            step = hash_plan(1, 1, m, capacity=1,
+                             positions=jnp.array([[p]], jnp.int32))
+            assert int(step.expert_index[0, 0, 0]) == int(pe[p]), p
+
     def test_stateless_no_router_param(self):
         cfg = ModelConfig(d_model=16, d_ff=32, dtype="float32",
                           moe=MoEConfig(num_experts=4, routing="hash",
