@@ -9,12 +9,24 @@ of the MoE layer forward — the dispatcher axis runs over the
 ``repro.core.dispatch`` registry (einsum / gather / pallas / alltoall):
 
 * ``route_ms``  — RoutingPlan construction only (the index view);
+* ``sort_ms``   — sorted/ragged view construction (``dropless`` only:
+  argsort by expert id + segment offsets; 0 elsewhere);
 * ``ffn_ms``    — expert FFN on an already-dispatched buffer (kernel
-  FFN for the pallas dispatcher, einsum FFN otherwise);
+  FFN for the pallas dispatcher, ragged grouped GEMM over the sorted
+  buffer for dropless, einsum FFN otherwise);
 * ``layer_ms``  — the full layer forward through the dispatcher;
-* ``dispatch_combine_ms`` — layer minus route minus ffn: the token
+* ``dispatch_combine_ms`` — layer minus route/sort/ffn: the token
   movement cost (the einsum backend pays O(T*E*C*M) one-hot
-  contractions here, index-view backends pay O(k*T*M)).
+  contractions here, index-view backends pay O(k*T*M));
+* ``dropped_fraction`` — the layer's dropped-token metric for the cell
+  (identically 0.0 for ``dropless``, which runs capacity_factor=None;
+  capacity-ful cells run the paper's Capacity-1x convention).
+
+Caveat for the ``EC Top-C x dropless`` cell: for expert-choice, capacity
+IS the routing rule, so its capacity-infinity limit is every expert
+selecting every token — that cell measures a dense all-experts model by
+construction (see docs/moe_architecture.md), which is why its ffn time
+towers over the token-choice dropless cells.
 
 Note: on a single device (this benchmark) the ``alltoall`` dispatcher
 has no expert-sharded mesh and degrades to its gather fallback, so its
@@ -39,7 +51,7 @@ STRATEGIES = [("topk", 1, "Top-1"), ("topk", 2, "Top-2"), ("topk", 4, "Top-4"),
 
 SWEEP_STRATEGIES = STRATEGIES + [("expert_choice", 2, "EC Top-C"),
                                  ("hash", 1, "Hash-1")]
-SWEEP_DISPATCHERS = ("einsum", "gather", "pallas", "alltoall")
+SWEEP_DISPATCHERS = ("einsum", "gather", "pallas", "alltoall", "dropless")
 
 
 def run(batch=8, seq=256, experts=32):
@@ -66,7 +78,9 @@ def time_moe_layer(cfg, batch, seq, iters=16):
     """Per-phase forward timings of one MoE layer (see module docstring)."""
     from repro.core import moe
     from repro.core.dispatch import expert_ffn
+    from repro.core.dispatch.dropless import plan_block_rows
     from repro.core.routing import route
+    from repro.kernels.moe_dropless import ops as dropless_ops
     from repro.nn import init
 
     m = cfg.moe
@@ -83,21 +97,45 @@ def time_moe_layer(cfg, batch, seq, iters=16):
         plan = route(xgg, None if w is None else w.astype(jnp.float32), m, capacity)
         return jnp.sum(plan.masked_gate) + plan.aux_loss
 
-    buf = jax.random.normal(jax.random.PRNGKey(2),
-                            (m.num_experts, G * capacity, cfg.d_model),
-                            cfg.activation_dtype)
-    ffn_only = jax.jit(lambda p, b: jnp.sum(
-        expert_ffn(p, b, cfg, use_kernel=m.impl == "pallas")))
-    layer = jax.jit(lambda p, xx: jnp.sum(moe.moe_ffn_apply(p, xx, cfg)[0]))
+    sort_ms = 0.0
+    if m.impl == "dropless":
+        w = params.get("router")
+        plan = route(xg, None if w is None else w.astype(jnp.float32),
+                     m, capacity)
+        bx = plan_block_rows(plan)
+        # sort split: ragged-view construction off a fixed plan
+        sort_fn = jax.jit(lambda pl: jnp.sum(pl.ragged(bx).gate))
+        sort_ms = _median_ms(sort_fn, plan, iters=iters)
+        rag = plan.ragged(bx)
+        R = rag.token.shape[1]
+        buf = jax.random.normal(jax.random.PRNGKey(2), (G * R, cfg.d_model),
+                                cfg.activation_dtype)
+        be = rag.block_expert.reshape(-1)
+        gate_w = params.get("gate")
+        ffn_only = jax.jit(lambda p, b: jnp.sum(dropless_ops.ragged_ffn(
+            b, be, p["up"], gate_w, p["down"], cfg.ffn_activation, block_x=bx)))
+    else:
+        buf = jax.random.normal(jax.random.PRNGKey(2),
+                                (m.num_experts, G * capacity, cfg.d_model),
+                                cfg.activation_dtype)
+        ffn_only = jax.jit(lambda p, b: jnp.sum(
+            expert_ffn(p, b, cfg, use_kernel=m.impl == "pallas")))
+    # one compile serves both the timing loop and the dropped metric
+    layer = jax.jit(lambda p, xx: (
+        lambda y, aux: (jnp.sum(y), aux["moe_dropped_fraction"]))(
+            *moe.moe_ffn_apply(p, xx, cfg)))
+    dropped = float(layer(params, x)[1])
 
     route_ms = _median_ms(jax.jit(route_only), params, x, iters=iters)
     ffn_ms = _median_ms(ffn_only, params, buf, iters=iters)
-    layer_ms = _median_ms(layer, params, x, iters=iters)
+    layer_ms = _median_ms(lambda p, xx: layer(p, xx)[0], params, x, iters=iters)
     return {
         "route_ms": route_ms,
+        "sort_ms": sort_ms,
         "ffn_ms": ffn_ms,
         "layer_ms": layer_ms,
-        "dispatch_combine_ms": max(layer_ms - route_ms - ffn_ms, 0.0),
+        "dispatch_combine_ms": max(layer_ms - route_ms - sort_ms - ffn_ms, 0.0),
+        "dropped_fraction": dropped,
         "capacity": capacity,
         "groups": G,
     }
@@ -110,6 +148,9 @@ def run_sweep(batch=8, seq=256, experts=32, dispatchers=SWEEP_DISPATCHERS):
         out[label] = {}
         for impl in dispatchers:
             cfg = variant(base, routing, k, capacity_mode="one").replace_moe(impl=impl)
+            if impl == "dropless":
+                # the backend's native mode: capacity-free, zero drops
+                cfg = cfg.replace_moe(capacity_factor=None)
             out[label][impl] = time_moe_layer(cfg, batch, seq)
     return out
 
@@ -125,11 +166,13 @@ def main():
     save_result("table2_speed", out)
 
     sweep = run_sweep()
-    print("sweep,strategy,dispatcher,layer_ms,route_ms,dispatch_combine_ms,ffn_ms")
+    print("sweep,strategy,dispatcher,layer_ms,route_ms,sort_ms,"
+          "dispatch_combine_ms,ffn_ms,dropped_fraction")
     for label, impls in sweep.items():
         for impl, r in impls.items():
             print(f"sweep,{label},{impl},{r['layer_ms']:.2f},{r['route_ms']:.2f},"
-                  f"{r['dispatch_combine_ms']:.2f},{r['ffn_ms']:.2f}")
+                  f"{r['sort_ms']:.2f},{r['dispatch_combine_ms']:.2f},"
+                  f"{r['ffn_ms']:.2f},{r['dropped_fraction']:.4f}")
     save_result("BENCH_table2_speed_sweep", sweep)
     return out
 

@@ -27,7 +27,11 @@ class MoEConfig:
     prototype_top_k: int = 1             # k' inside each prototype (paper: 1)
     # Capacity convention (M6-T 3.2): "k" => C = k*T/N*gamma ; "one" => C = 1*T/N*gamma
     capacity_mode: str = "k"
-    capacity_factor: float = 1.25        # gamma (paper Table 5)
+    # gamma (paper Table 5).  None => *dropless*: capacity is effectively
+    # infinite (no token is ever dropped) and requires an execution
+    # backend that never allocates (E, C) buffers (impl="dropless" —
+    # validated in __post_init__ against the dispatcher registry).
+    capacity_factor: Optional[float] = 1.25
     aux_loss_coef: float = 0.01          # 0 disables the balancing loss
     router_z_loss_coef: float = 0.0      # beyond-paper stability option
     router_dtype: str = "float32"        # routers always f32 (stability)
@@ -55,7 +59,23 @@ class MoEConfig:
             from repro.core.routers import get_router
 
             get_router(self.routing)      # raises with the registry key list
-            get_dispatcher(self.impl)     # likewise for execution backends
+            dispatcher = get_dispatcher(self.impl)  # likewise for backends
+            if self.capacity_factor is None and not getattr(
+                    dispatcher, "supports_dropless", False):
+                from repro.core.dispatch import available_dispatchers
+                capable = [n for n in available_dispatchers() if getattr(
+                    get_dispatcher(n), "supports_dropless", False)]
+                raise ValueError(
+                    f"capacity_factor=None (dropless) needs a capacity-free "
+                    f"execution backend, but impl={self.impl!r} allocates "
+                    f"(E, C) buffers; dropless-capable dispatchers: "
+                    f"{', '.join(capable) or '(none registered)'}")
+            if self.capacity_factor is None and self.moe_attention:
+                raise ValueError(
+                    "capacity_factor=None (dropless) is incompatible with "
+                    "moe_attention=True: attention experts run the dense "
+                    "einsum path, whose (G, T, E, C) view would be "
+                    "O(G*T^2*E) at the dropless capacity C=T")
 
     @property
     def active_k(self) -> int:
@@ -76,8 +96,22 @@ class MoEConfig:
         )
         return self.num_experts // self.num_prototypes
 
+    @property
+    def dropless(self) -> bool:
+        """True when capacity_factor=None: no token is ever dropped."""
+        return self.capacity_factor is None
+
     def capacity(self, tokens_per_shard: int) -> int:
-        """Per-expert capacity C = k*T/N*gamma (Eq. 2), or 1x variant."""
+        """Per-expert capacity C = k*T/N*gamma (Eq. 2), or 1x variant.
+
+        Dropless mode returns T: a token's K choices target distinct
+        experts, so no expert can ever hold more than T slots per group —
+        every choice is valid and the routing quality is exactly the
+        capacity-infinity limit.  Only the dense (G,T,E,C) views would
+        pay for this bound, and dropless backends never build them.
+        """
+        if self.capacity_factor is None:
+            return max(tokens_per_shard, 1)
         k_eff = 1 if self.capacity_mode == "one" else max(self.active_k, 1)
         c = int(k_eff * tokens_per_shard / max(self.num_experts, 1) * self.capacity_factor)
         return max(c, 1)

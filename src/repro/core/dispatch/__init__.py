@@ -17,7 +17,12 @@ carry expert parallelism.  Built-ins:
 * ``alltoall`` — explicit expert parallelism: ``shard_map`` over the
   mesh's expert axis with ``jax.lax.all_to_all`` dispatch/return
   collectives and a per-shard grouped FFN (Fig. 7 at 480-GPU scale, the
-  Switch-Transformer execution model).
+  Switch-Transformer execution model);
+* ``dropless`` — capacity-free execution: tokens sorted by expert id
+  into the plan's ragged view and run through a blocked grouped GEMM
+  (Pallas scalar-prefetch kernel on TPU) — no ``(E, C)`` buffers, no
+  dropped tokens under ``capacity_factor=None`` (which requires a
+  backend with ``supports_dropless = True``, enforced by MoEConfig).
 
 Adding a backend is a small plugin::
 
@@ -64,7 +69,13 @@ def available_dispatchers() -> Tuple[str, ...]:
 
 
 # Built-ins self-register on import.
-from repro.core.dispatch import alltoall, einsum, gather, pallas  # noqa: E402,F401
+from repro.core.dispatch import (  # noqa: E402,F401
+    alltoall,
+    dropless,
+    einsum,
+    gather,
+    pallas,
+)
 
 __all__ = [
     "Dispatcher", "expert_ffn", "register_dispatcher", "get_dispatcher",

@@ -36,7 +36,13 @@ from repro.core.routers.base import RoutingPlan
 
 @runtime_checkable
 class Dispatcher(Protocol):
-    """An MoE execution backend, selected by ``MoEConfig.impl``."""
+    """An MoE execution backend, selected by ``MoEConfig.impl``.
+
+    Backends that never allocate per-expert ``(E, C)`` capacity buffers
+    may additionally declare ``supports_dropless = True``;
+    ``MoEConfig.__post_init__`` only accepts ``capacity_factor=None``
+    (dropless routing, capacity effectively infinite) for such backends.
+    """
 
     name: str
 

@@ -1,0 +1,92 @@
+"""Capacity-free dropless dispatch: sorted ragged grouped GEMM.
+
+Capacity-ful backends allocate an ``(E, C)`` slot buffer per group and
+*drop* whatever overflows it — the paper's central quality/efficiency
+lever, and the reason capacity-factor tuning exists at all.  This
+backend removes the capacity dimension instead (MegaBlocks-style):
+
+1. take the plan's :class:`~repro.core.routers.base.RaggedView` — valid
+   choices sorted by expert id, each expert's segment padded to a
+   multiple of ``block_rows`` so a row block never straddles experts;
+2. gather the sorted token rows (``O(R*M)`` movement, R = valid choices
+   + block padding — proportional to actual load, no ``gamma`` slack and
+   no ``(G, T, E, C)`` intermediate anywhere);
+3. run the expert FFN as a ragged/blocked grouped GEMM
+   (``repro.kernels.moe_dropless``: Pallas scalar-prefetch kernel on
+   TPU, sorted-gather reference elsewhere; ``custom_vjp`` so it trains);
+4. combine by gate-weighted scatter-add back into token order.
+
+With ``capacity_factor=None`` every routed choice is valid, so the
+execution quality is exactly the capacity-infinity limit of the router.
+With a finite capacity the plan's overflowed choices carry gate 0 and
+empty rows, so outputs (including which tokens drop) match the einsum
+reference bit-for-bit in assignment — the cross-backend contract holds.
+
+Expert parallelism is implicit (GSPMD over the sharded group axis, like
+``gather``); the sorted layout intentionally keeps experts' weights
+replicated-or-sharded by the same rules as every other backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.context import MoEContext
+from repro.core.dispatch import register_dispatcher
+from repro.core.routers.base import RoutingPlan
+from repro.distributed.sharding import shard
+from repro.kernels.moe_dropless import ops as dropless_ops
+from repro.kernels.moe_dropless.ops import pick_block_rows
+
+
+def plan_block_rows(plan: RoutingPlan, max_block: int = 128) -> int:
+    """Row-block granularity for a plan's ragged view: scales down with
+    the choice count so segment padding never dwarfs real rows (a decode
+    step routes a handful of choices; a training group routes thousands)."""
+    if plan.token_at_slot is not None:
+        n = plan.token_at_slot.shape[1] * plan.token_at_slot.shape[2]
+    else:
+        n = plan.expert_index.shape[1] * plan.expert_index.shape[2]
+    return pick_block_rows(n, plan.num_experts, max_block)
+
+
+def dropless_dispatch(params, xg: jax.Array, plan: RoutingPlan,
+                      cfg: ModelConfig, block_rows: int = 0) -> jax.Array:
+    dt = cfg.activation_dtype
+    G, T, M = xg.shape
+    block_rows = block_rows or plan_block_rows(plan)
+    rag = plan.ragged(block_rows)
+    R = rag.token.shape[1]
+
+    tok = jnp.maximum(rag.token, 0)                      # (G, R); -1 -> row 0
+    xs = jnp.take_along_axis(xg, tok[..., None], axis=1).astype(dt)
+    xs = shard(xs, "groups", None, None)
+
+    out = dropless_ops.ragged_ffn(
+        xs.reshape(G * R, M), rag.block_expert.reshape(-1),
+        params["up"].astype(dt),
+        params["gate"].astype(dt) if "gate" in params else None,
+        params["down"].astype(dt), cfg.ffn_activation, block_x=block_rows)
+    out = out.reshape(G, R, M)
+
+    # Empty rows (padding / capacity-dropped choices) carry gate 0, so
+    # their garbage outputs vanish in the scatter-add combine.
+    vals = out * rag.gate[..., None].astype(dt)
+    gi = jnp.arange(G)[:, None]
+    return jnp.zeros((G, T, M), dt).at[gi, tok].add(vals)
+
+
+@register_dispatcher
+class DroplessDispatcher:
+    name = "dropless"
+    supports_dropless = True          # consulted by MoEConfig.__post_init__
+    max_block_rows = 128              # ceiling for the adaptive block size
+
+    def __call__(self, params, xg, plan: RoutingPlan, cfg: ModelConfig,
+                 ctx: Optional[MoEContext] = None) -> jax.Array:
+        return dropless_dispatch(
+            params, xg, plan, cfg,
+            block_rows=plan_block_rows(plan, self.max_block_rows))

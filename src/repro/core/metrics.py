@@ -1,9 +1,25 @@
-"""Aggregation of per-layer MoE load-balance metrics (paper 3.1, Fig. 1)."""
+"""Per-layer MoE load-balance metrics (paper 3.1, Fig. 1) and their
+aggregation across layers."""
 from __future__ import annotations
 
 from typing import Dict, List
 
+import jax
 import jax.numpy as jnp
+
+
+def dropped_fraction(expert_loads: jax.Array, total_slots: int) -> jax.Array:
+    """Fraction of routed choices that capacity dropped.
+
+    ``expert_loads`` counts the choices that *survived* capacity (summed
+    over experts); ``total_slots`` is the number of choices the router
+    made.  Computed as dropped/total rather than ``1 - kept/total`` so a
+    zero-drop plan reports *exactly* 0.0 (XLA lowers division by a
+    constant to a reciprocal multiply, which would turn ``1 - 1.0`` into
+    ~1e-8 noise — the dropless backend asserts on exact zero).
+    """
+    kept = jnp.sum(expert_loads)
+    return jnp.maximum(float(total_slots) - kept, 0.0) / float(total_slots)
 
 
 def merge_aux(aux_list: List[Dict]) -> Dict:

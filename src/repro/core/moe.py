@@ -9,10 +9,13 @@ registries plus parameter specs and token grouping:
   one-hot einsums, dense ``(G,T,E,C)`` view, implicit GSPMD parallelism),
   ``gather`` (flat slot-id scatter/gather off the index view, O(k*T*M)
   token movement), ``pallas`` (gather dispatch + the Pallas grouped-GEMM
-  expert-FFN kernel), and ``alltoall`` (explicit expert parallelism:
+  expert-FFN kernel), ``alltoall`` (explicit expert parallelism:
   ``shard_map`` over the mesh's expert axis with ``lax.all_to_all``
   collectives — Fig. 7's system design written down as collectives
-  rather than recovered by the compiler).
+  rather than recovered by the compiler), and ``dropless``
+  (capacity-free: the plan's sorted ragged view feeding a blocked
+  grouped GEMM — with ``capacity_factor=None`` no token is ever
+  dropped and no ``(E, C)`` buffer exists).
 
 Every (router, dispatcher) pair composes: the plan is computed once, so
 all backends execute the same assignment and are numerically

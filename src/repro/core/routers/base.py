@@ -22,6 +22,11 @@ view — ``token_at_slot``/``gate_at_slot`` of shape ``(G, E, C)`` — which
 the gather/pallas dispatch prefers, keeping token movement ``O(E*C*M)``
 rather than ``O(T*K*M)``.
 
+A third, *ragged* view (:class:`RaggedView`, built on demand by
+:meth:`RoutingPlan.ragged` and shared by every router) orders the valid
+choices expert-major with block-aligned segment offsets — the
+capacity-free layout the ``dropless`` execution backend consumes.
+
 Invariants every router must uphold (asserted by the test-suite):
 
 1. each valid ``(expert, slot)`` pair is unique within a group — a slot
@@ -45,7 +50,49 @@ import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
 from repro.core.context import MoEContext
+from repro.core.metrics import dropped_fraction
 from repro.nn import ParamSpec
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("sort_order", "token", "gate", "expert_offsets",
+                      "block_expert"),
+         meta_fields=("num_experts", "block_rows"))
+@dataclasses.dataclass(frozen=True)
+class RaggedView:
+    """Sorted, capacity-free execution layout of a :class:`RoutingPlan`.
+
+    The view lists every *valid* choice exactly once, ordered expert-major
+    (all of expert 0's rows, then expert 1's, ...), with each expert's
+    segment padded up to a multiple of ``block_rows`` so that a fixed-size
+    row block never straddles two experts — the layout a blocked/ragged
+    grouped GEMM consumes directly (MegaBlocks-style).  There is no
+    capacity dimension and no ``(G, T, E, C)`` intermediate: the row count
+    ``R`` is ``O(T*K)`` (token-choice) or ``O(E*C)`` (slot-major), not
+    ``O(E * C * gamma)``.
+
+    Empty rows (segment padding, plus capacity-dropped choices when the
+    plan was built with a finite capacity) carry ``token == -1`` and
+    ``gate == 0`` — they flow through the grouped FFN like any other row
+    and their outputs are discarded by the gate-weighted combine.
+    """
+
+    # Flat index into the plan's own choice space: t*K + k for
+    # index-view plans, e*Cs + c for slot-major plans (-1 = empty row).
+    # Consumers that need to invert the sort must branch on which view
+    # built it (plan.token_at_slot is None); `token`/`gate` are uniform.
+    sort_order: jax.Array      # (G, R) int32
+    token: jax.Array           # (G, R) int32 source token per row; -1 = empty
+    gate: jax.Array            # (G, R) f32 combine weight; 0 on empty rows
+    expert_offsets: jax.Array  # (G, E+1) int32 block-aligned segment starts
+    block_expert: jax.Array    # (G, R // block_rows) int32 expert per row block
+    num_experts: int
+    block_rows: int
+
+    @property
+    def row_valid(self) -> jax.Array:
+        """(G, R) bool — rows holding a real (non-padding) choice."""
+        return self.token >= 0
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -109,6 +156,79 @@ class RoutingPlan:
         c = jnp.where(self.valid, self.slot_index, C)
         dense = jnp.zeros((G, T, E, C + 1), values.dtype)
         return dense.at[g, t, e, c].add(values)[..., :C]
+
+    # -- sorted / ragged view (capacity-free dispatch) ---------------------
+
+    def ragged(self, block_rows: int = 128) -> RaggedView:
+        """Lazily build the sorted/ragged view (see :class:`RaggedView`).
+
+        Shared by every router: token-choice plans are sorted by expert id
+        off the index view; slot-major plans (expert-choice) are already
+        expert-major and only need block padding.  Computed on demand —
+        only the ``dropless`` execution path pays for it.
+        """
+        if self.token_at_slot is not None:
+            return self._ragged_slot_major(block_rows)
+        return self._ragged_index_view(block_rows)
+
+    def _ragged_index_view(self, bx: int) -> RaggedView:
+        G, T, K = self.expert_index.shape
+        E = self.num_experts
+        n = T * K
+        # Static row budget: every expert segment wastes < bx rows of
+        # padding, so n + E*(bx-1) always fits, rounded up to a block.
+        R = -(-(n + E * (bx - 1)) // bx) * bx
+
+        e_flat = jnp.where(self.valid, self.expert_index, E).reshape(G, n)
+        g_flat = self.masked_gate.astype(jnp.float32).reshape(G, n)
+
+        def one(e, g):
+            order = jnp.argsort(e)                     # stable: invalid last
+            e_sorted = e[order]
+            counts = jnp.zeros(E + 1, jnp.int32).at[e].add(1)[:E]
+            padded = -(-counts // bx) * bx
+            offsets = jnp.concatenate(
+                [jnp.zeros(1, jnp.int32), jnp.cumsum(padded)])
+            starts = jnp.concatenate(
+                [jnp.zeros(1, jnp.int32), jnp.cumsum(counts)])
+            seg = jnp.minimum(e_sorted, E - 1)
+            dest = offsets[seg] + (jnp.arange(n, dtype=jnp.int32) - starts[seg])
+            dest = jnp.where(e_sorted < E, dest, R)    # park invalid rows
+            order32 = order.astype(jnp.int32)
+            sort_order = jnp.full(R + 1, -1, jnp.int32).at[dest].set(order32)[:R]
+            token = jnp.full(R + 1, -1, jnp.int32).at[dest].set(order32 // K)[:R]
+            gate = jnp.zeros(R + 1, jnp.float32).at[dest].set(g[order])[:R]
+            block_expert = jnp.clip(
+                jnp.searchsorted(offsets, jnp.arange(R // bx, dtype=jnp.int32) * bx,
+                                 side="right") - 1, 0, E - 1).astype(jnp.int32)
+            return sort_order, token, gate, offsets, block_expert
+
+        so, tok, gate, off, be = jax.vmap(one)(e_flat, g_flat)
+        return RaggedView(so, tok, gate, off, be, E, bx)
+
+    def _ragged_slot_major(self, bx: int) -> RaggedView:
+        """Slot-major plans are already expert-major: segment e is its
+        ``Cs`` slots, padded to a block multiple."""
+        G, E, Cs = self.token_at_slot.shape
+        Cp = -(-Cs // bx) * bx
+        pad = Cp - Cs
+        filled = self.token_at_slot >= 0
+        gate = jnp.where(filled, self.gate_at_slot, 0.0).astype(jnp.float32)
+        so = jnp.broadcast_to(
+            jnp.arange(E * Cs, dtype=jnp.int32).reshape(E, Cs), (G, E, Cs))
+        so = jnp.where(filled, so, -1)
+
+        def padded(x, fill):
+            return jnp.pad(x, ((0, 0), (0, 0), (0, pad)),
+                           constant_values=fill).reshape(G, E * Cp)
+
+        offsets = jnp.broadcast_to(
+            jnp.arange(E + 1, dtype=jnp.int32) * Cp, (G, E + 1))
+        block_expert = jnp.broadcast_to(
+            (jnp.arange(E * Cp // bx, dtype=jnp.int32) * bx) // Cp,
+            (G, E * Cp // bx)).astype(jnp.int32)
+        return RaggedView(padded(so, -1), padded(self.token_at_slot, -1),
+                          padded(gate, 0.0), offsets, block_expert, E, bx)
 
 
 @runtime_checkable
@@ -193,5 +313,6 @@ def index_load_metrics(expert_index: jax.Array, valid: jax.Array,
     loads = jnp.zeros((num_experts,), jnp.float32).at[flat_e].add(flat_v)
     mean = jnp.mean(loads)
     cv = jnp.std(loads) / (mean + 1e-9)
-    dropped = 1.0 - jnp.sum(loads) / float(total_slots)
-    return {"cv": cv, "dropped_fraction": dropped, "expert_loads": loads}
+    return {"cv": cv,
+            "dropped_fraction": dropped_fraction(loads, total_slots),
+            "expert_loads": loads}

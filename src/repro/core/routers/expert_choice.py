@@ -17,6 +17,12 @@ fine for encoders/non-autoregressive training, but for causal LMs the
 train-time routing is not reproducible at autoregressive decode time.
 CE numbers from causal-LM ablations (e.g. examples/prototyping_ablation)
 are therefore not directly comparable with token-choice routers.
+
+Second caveat: capacity is this router's *routing rule*, not an
+execution buffer, so ``capacity_factor=None`` (dropless) resolves to
+c_eff = T — every expert picks every token, the dense all-experts limit
+at ~E/k x the FLOPs.  Legal (it is the consistent capacity-infinity
+limit) but rarely what you want; keep a finite capacity_factor for EC.
 """
 from __future__ import annotations
 
@@ -64,7 +70,8 @@ def expert_choice_plan(logits: jax.Array, cfg: MoEConfig, capacity: int,
     # loads and cv are compile-time constants — no scatter needed.
     # "dropped" reports the genuinely interesting failure mode: tokens
     # no expert picked.
-    unrouted = 1.0 - jnp.mean(jnp.any(valid, axis=-1).astype(jnp.float32))
+    routed = jnp.sum(jnp.any(valid, axis=-1).astype(jnp.float32))
+    unrouted = base.dropped_fraction(routed, G * T)
     metrics = {
         "cv": jnp.zeros((), jnp.float32),
         "dropped_fraction": unrouted,

@@ -85,6 +85,9 @@ def hash_plan(G: int, T: int, cfg: MoEConfig, capacity: int,
     slot_index = jnp.stack(slots, axis=-1)
     valid = slot_index < capacity
     gate = jnp.full((G, T, k), 1.0 / k, jnp.float32)         # uniform average
+    if cfg.normalize_gates:
+        # keep the uniform average over *surviving* choices (1/(kept k))
+        gate = base.normalize_gates(gate, valid)
 
     zero = jnp.zeros((), jnp.float32)
     metrics = base.index_load_metrics(expert_index, valid, E, G * T * k)

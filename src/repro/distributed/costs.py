@@ -31,6 +31,25 @@ def cost_analysis_dict(compiled) -> Dict[str, float]:
     return cost
 
 
+def moe_rows_per_token(m, tokens_per_group: int) -> float:
+    """Expert-buffer rows processed per routed token (E*C / T_g).
+
+    Capacity-ful: k_eff * gamma (padded capacity slots compute too).
+    Dropless (capacity_factor=None): the sorted ragged buffer — routed
+    choices (active_k per token) plus block-alignment padding, using the
+    same adaptive block size the dispatcher picks.  capacity_mode does
+    not clamp anything in dropless mode.
+    """
+    if m.capacity_factor is None:
+        from repro.kernels.moe_dropless.ops import padded_rows, pick_block_rows
+
+        n = m.active_k * tokens_per_group
+        bx = pick_block_rows(n, m.num_experts)
+        return padded_rows(n, m.num_experts, bx) / float(tokens_per_group)
+    k_eff = 1 if m.capacity_mode == "one" else m.active_k
+    return k_eff * m.capacity_factor
+
+
 def _moe_terms(cfg: ModelConfig, tokens_per_group: int) -> Dict[str, float]:
     """Per-token FLOPs for router, dispatch/combine, expert FFN."""
     m = cfg.moe
@@ -39,8 +58,7 @@ def _moe_terms(cfg: ModelConfig, tokens_per_group: int) -> Dict[str, float]:
         n_mats = 3 if cfg.ffn_activation in ("swiglu", "geglu") else 2
         return {"router": 0.0, "dispatch": 0.0,
                 "expert": 2.0 * d * cfg.d_ff * n_mats}
-    k_eff = 1 if m.capacity_mode == "one" else m.active_k
-    cap_total = k_eff * m.capacity_factor  # E*C / T_g
+    cap_total = moe_rows_per_token(m, tokens_per_group)
     router = 2.0 * d * m.num_experts
     if m.impl == "einsum":
         # dispatch 'gtec,gtm->egcm' + combine: 2 * (E*C) * M each
@@ -222,8 +240,7 @@ def bytes_for(cfg: ModelConfig, shape: ShapeConfig, n_params: float, *,
                 attn_quad = 6.0 * B * cfg.num_heads * S * S * 4.0 * n_attn
         moe_traffic = 0.0
         if cfg.moe.num_experts:
-            k_eff = 1 if cfg.moe.capacity_mode == "one" else cfg.moe.active_k
-            cap = k_eff * cfg.moe.capacity_factor
+            cap = moe_rows_per_token(cfg.moe, cfg.moe.group_size)
             per_tok = (2 * cap * d * ab                      # dispatch+return buffers
                        + 2 * cap * cfg.moe.num_experts * 0)  # combine fused
             combine = 2.0 * cap * cfg.moe.group_size * ab    # (T,E,C) r+w per token

@@ -1,0 +1,3 @@
+from repro.kernels.moe_dropless import ops
+from repro.kernels.moe_dropless.ops import ragged_ffn
+from repro.kernels.moe_dropless.ref import ragged_ffn_ref

@@ -1,0 +1,98 @@
+"""jit'd public wrapper for the ragged grouped-FFN kernel.
+
+Forward runs the Pallas kernel on TPU; on every other backend the
+pure-jnp sorted-gather reference runs instead (the issue of streaming
+weight tiles per row block is a TPU memory-system question — interpret
+mode would only re-derive the reference semantics, more slowly).  The
+wrapper carries a ``custom_vjp`` whose backward always differentiates
+the reference (same math, f32 accumulation), so the dropless backend is
+trainable on any platform.
+
+``block_expert`` is integer routing metadata: its cotangent is the empty
+``float0`` tangent type, never a real gradient.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.moe_dropless.kernel import ragged_ffn_kernel
+from repro.kernels.moe_dropless.ref import ragged_ffn_ref
+
+
+def pick_block_rows(n_choices: int, num_experts: int, max_block: int = 128) -> int:
+    """Row-block granularity for the ragged layout: largest power of two
+    <= max_block whose worst-case segment padding (one block per expert)
+    does not exceed the real rows.  Keeps small-T execution — decode
+    steps route a handful of choices — from paying E*max_block padded
+    rows; floor 8 preserves TPU sublane alignment."""
+    bx = max_block
+    while bx > 8 and num_experts * bx > max(n_choices, 1):
+        bx //= 2
+    return bx
+
+
+def padded_rows(n_choices: int, num_experts: int, block_rows: int) -> int:
+    """Static row count of the sorted+padded ragged buffer (the same
+    bound RoutingPlan._ragged_index_view allocates)."""
+    n = n_choices + num_experts * (block_rows - 1)
+    return -(-n // block_rows) * block_rows
+
+
+def _run(x, block_expert, w_up, w_gate, w_down, activation, block_x, block_i):
+    if jax.default_backend() != "tpu":
+        return ragged_ffn_ref(x, block_expert, w_up, w_gate, w_down, activation)
+    I = w_up.shape[-1]
+    bi = min(block_i, I)
+    while bi > 1 and I % bi:
+        bi //= 2
+    # loop invariant: bi divides I on exit (worst case bi == 1)
+    return ragged_ffn_kernel(x, block_expert, w_up, w_gate, w_down, activation,
+                             block_x=block_x, block_i=bi)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _ragged_ffn(x, block_expert, w_up, w_gate, w_down, activation, block_x, block_i):
+    return _run(x, block_expert, w_up, w_gate, w_down, activation, block_x, block_i)
+
+
+def _ragged_ffn_fwd(x, block_expert, w_up, w_gate, w_down, activation, block_x, block_i):
+    y = _run(x, block_expert, w_up, w_gate, w_down, activation, block_x, block_i)
+    return y, (x, block_expert, w_up, w_gate, w_down)
+
+
+def _ragged_ffn_bwd(activation, block_x, block_i, res, g):
+    x, block_expert, w_up, w_gate, w_down = res
+    ct_be = np.zeros(block_expert.shape, jax.dtypes.float0)
+    if w_gate is None:
+        _, vjp = jax.vjp(
+            lambda xx, up, down: ragged_ffn_ref(xx, block_expert, up, None,
+                                                down, activation),
+            x, w_up, w_down)
+        dx, dup, ddown = vjp(g)
+        return dx, ct_be, dup, None, ddown
+    _, vjp = jax.vjp(
+        lambda xx, up, gate, down: ragged_ffn_ref(xx, block_expert, up, gate,
+                                                  down, activation),
+        x, w_up, w_gate, w_down)
+    dx, dup, dgate, ddown = vjp(g)
+    return dx, ct_be, dup, dgate, ddown
+
+
+_ragged_ffn.defvjp(_ragged_ffn_fwd, _ragged_ffn_bwd)
+
+
+@partial(jax.jit, static_argnames=("activation", "block_x", "block_i"))
+def ragged_ffn(x: jax.Array, block_expert: jax.Array, w_up: jax.Array,
+               w_gate: Optional[jax.Array], w_down: jax.Array,
+               activation: str = "swiglu", block_x: int = 128,
+               block_i: int = 512) -> jax.Array:
+    return _ragged_ffn(x, block_expert, w_up, w_gate, w_down, activation,
+                       block_x, block_i)
+
+
+__all__ = ["ragged_ffn", "ragged_ffn_ref", "pick_block_rows", "padded_rows"]

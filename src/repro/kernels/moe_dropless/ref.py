@@ -1,0 +1,38 @@
+"""Pure-jnp reference for the ragged grouped FFN (sorted-gather form).
+
+Same blocked view of the sorted token buffer as the kernel: rows reshape
+to (NB, bx, M) blocks, each block gathers its expert's weight matrices
+(``w[block_expert]``) and runs the dense FFN — f32 accumulation, so this
+also serves as the ``custom_vjp`` backward and the non-TPU forward path.
+The weight gather materialises (NB, M, I) — a factor ``bx`` smaller than
+a per-row gather — which is the price of expressing raggedness in pure
+jnp; the Pallas kernel streams the same tiles through VMEM instead.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ragged_ffn_ref(x: jax.Array, block_expert: jax.Array, w_up: jax.Array,
+                   w_gate: Optional[jax.Array], w_down: jax.Array,
+                   activation: str = "swiglu") -> jax.Array:
+    """x: (N, M) sorted rows; block_expert: (NB,) with N % NB == 0."""
+    N, M = x.shape
+    nb = block_expert.shape[0]
+    bx = N // nb
+    xb = x.reshape(nb, bx, M).astype(jnp.float32)
+    up = w_up[block_expert].astype(jnp.float32)          # (NB, M, I)
+    h = jnp.einsum("bxm,bmi->bxi", xb, up)
+    if w_gate is not None:
+        g = jnp.einsum("bxm,bmi->bxi", xb,
+                       w_gate[block_expert].astype(jnp.float32))
+        h = jax.nn.silu(g) * h if activation == "swiglu" else jax.nn.gelu(g) * h
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jnp.maximum(h, 0.0)
+    down = w_down[block_expert].astype(jnp.float32)      # (NB, I, M)
+    return jnp.einsum("bxi,bim->bxm", h, down).reshape(N, M).astype(x.dtype)

@@ -25,11 +25,23 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    from repro.core.dispatch import available_dispatchers
+    ap.add_argument("--moe-impl", default=None,
+                    choices=[None, *available_dispatchers()],
+                    help="override the MoE execution backend for serving")
+    ap.add_argument("--capacity-factor", default=None,
+                    help="gamma, or 'none' for dropless serving")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.moe_impl and cfg.moe.num_experts:
+        cfg = cfg.replace_moe(impl=args.moe_impl)
+    if args.capacity_factor is not None and cfg.moe.num_experts:
+        from repro.launch.train import parse_capacity_factor
+        cfg = cfg.replace_moe(
+            capacity_factor=parse_capacity_factor(args.capacity_factor))
     fam = get_family(cfg)
     specs = fam.specs(cfg)
     params = init_params(specs, jax.random.PRNGKey(args.seed))

@@ -43,9 +43,16 @@ def build(args):
         cfg = cfg.replace_moe(capacity_mode=args.capacity)
     if args.moe_impl and cfg.moe.num_experts:
         cfg = cfg.replace_moe(impl=args.moe_impl)
+    if args.capacity_factor is not None and cfg.moe.num_experts:
+        cfg = cfg.replace_moe(capacity_factor=parse_capacity_factor(args.capacity_factor))
     if args.aux_loss_coef is not None:
         cfg = cfg.replace_moe(aux_loss_coef=args.aux_loss_coef)
     return cfg
+
+
+def parse_capacity_factor(value: str):
+    """'none' => dropless (capacity_factor=None); otherwise a float gamma."""
+    return None if value.lower() in ("none", "dropless", "inf") else float(value)
 
 
 def main(argv=None):
@@ -63,6 +70,9 @@ def main(argv=None):
                     choices=[None, *available_routers()])
     ap.add_argument("--k", type=int, default=2)
     ap.add_argument("--capacity", default=None, choices=[None, "k", "one"])
+    ap.add_argument("--capacity-factor", default=None,
+                    help="gamma, or 'none' for dropless (requires a "
+                         "capacity-free --moe-impl such as 'dropless')")
     ap.add_argument("--moe-impl", default=None,
                     choices=[None, *available_dispatchers()])
     ap.add_argument("--aux-loss-coef", type=float, default=None)

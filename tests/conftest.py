@@ -1,10 +1,115 @@
 import os
+import subprocess
 import sys
+import textwrap
 
 # Tests see 1 device (the dry-run sets its own XLA_FLAGS in-process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Shared fixtures (hoisted out of test_dispatch / test_routers /
+# test_distributed, which used to carry near-identical private copies).
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def run_sub():
+    """Run a python snippet in a subprocess that owns 8 virtual host
+    devices (XLA_FLAGS=--xla_force_host_platform_device_count=8), so the
+    main test process keeps its single device."""
+
+    def run(code: str, timeout: int = 560) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+        env.pop("JAX_PLATFORMS", None)
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, env=env,
+                             timeout=timeout)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return out.stdout
+
+    return run
+
+
+@pytest.fixture
+def moe_model_cfg():
+    """Factory for the toy MoE ModelConfig the dispatch/layer tests share:
+    8 experts, d_model=32, d_ff=48, f32, capacity_factor 2.0."""
+    from repro.configs.base import ModelConfig, MoEConfig
+
+    def make(routing="topk", impl="einsum", d_model=32, d_ff=48, **moe_kw):
+        kw = dict(num_experts=8, routing=routing, top_k=2, num_prototypes=2,
+                  group_size=64, impl=impl, capacity_factor=2.0)
+        kw.update(moe_kw)
+        return ModelConfig(d_model=d_model, d_ff=d_ff, dtype="float32",
+                           moe=MoEConfig(**kw))
+
+    return make
+
+
+@pytest.fixture
+def moe_cfg():
+    """Factory for the bare MoEConfig the router tests share."""
+    from repro.configs.base import MoEConfig
+
+    def make(routing="topk", **kw):
+        base = dict(num_experts=8, routing=routing, top_k=2, num_prototypes=2,
+                    aux_loss_coef=0.01)
+        base.update(kw)
+        return MoEConfig(**base)
+
+    return make
+
+
+@pytest.fixture
+def toy_batch():
+    """Factory for the (B, S, M) toy activation batch."""
+
+    def make(B=2, S=50, M=32, seed=1):
+        return jax.random.normal(jax.random.PRNGKey(seed), (B, S, M))
+
+    return make
+
+
+@pytest.fixture
+def mesh8():
+    """2x4 (data, model) debug mesh; skips unless the test process owns
+    >= 8 devices (the CI mesh-8 matrix job sets
+    XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 host devices (CI mesh-8 matrix job sets "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro.launch.mesh import make_debug_mesh
+
+    return make_debug_mesh(2, 4)
+
+
+def _walk_avals(jaxpr):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield v.aval
+        for p in eqn.params.values():
+            for pv in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(pv, "jaxpr", pv)
+                if hasattr(inner, "eqns"):
+                    yield from _walk_avals(inner)
+
+
+@pytest.fixture(scope="session")
+def dense_shape_present():
+    """Structural probe: does fn's jaxpr (recursing into sub-jaxprs, e.g.
+    shard_map bodies) hold an intermediate of exactly `dense_shape`?"""
+
+    def present(fn, args, dense_shape) -> bool:
+        closed = jax.make_jaxpr(fn)(*args)
+        return any(getattr(a, "shape", None) == dense_shape
+                   for a in _walk_avals(closed.jaxpr))
+
+    return present

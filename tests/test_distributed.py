@@ -1,36 +1,16 @@
 """Sharding rules, ZeRO specs, HLO parsing, costs validation, and a
-small-mesh end-to-end pjit train step (runs in a subprocess with 8 virtual
-devices so the main test process keeps 1 device)."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
+small-mesh end-to-end pjit train step (run through conftest's shared
+`run_sub` fixture: a subprocess with 8 virtual devices, so the main test
+process keeps 1 device)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, MoEConfig, ShapeConfig
-from repro.configs.registry import get_config, get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_smoke_config
 from repro.distributed.costs import flops_for
-from repro.distributed.hlo import collective_bytes, op_histogram
 
 
-def _run_sub(code: str) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
-
-
-def test_rules_divisibility_fallbacks():
+def test_rules_divisibility_fallbacks(run_sub):
     """granite: 40 experts / 24 heads don't divide 16 -> replicated, with
     expert-TP fallback sharding the per-expert ffn dim instead."""
     code = """
@@ -57,10 +37,10 @@ def test_rules_divisibility_fallbacks():
     assert rules3.params["mlp"] is None
     print("rules-ok")
     """
-    assert "rules-ok" in _run_sub(code)
+    assert "rules-ok" in run_sub(code)
 
 
-def test_pjit_train_step_multidevice_matches_single():
+def test_pjit_train_step_multidevice_matches_single(run_sub):
     """2x4 mesh pjit train step == single-device step (same batch/seed)."""
     code = """
     import jax, jax.numpy as jnp, numpy as np
@@ -105,7 +85,7 @@ def test_pjit_train_step_multidevice_matches_single():
                                s1.params, jax.device_get(s2.params))
     print("MAXDIFF", max(jax.tree_util.tree_leaves(d)))
     """
-    out = _run_sub(code)
+    out = run_sub(code)
     loss_line = [l for l in out.splitlines() if l.startswith("LOSS")][0]
     l1, l2 = map(float, loss_line.split()[1:])
     assert abs(l1 - l2) < 1e-4
@@ -113,7 +93,7 @@ def test_pjit_train_step_multidevice_matches_single():
     assert maxdiff < 1e-4
 
 
-def test_elastic_checkpoint_reshard():
+def test_elastic_checkpoint_reshard(run_sub):
     """Save on a (2,4) mesh, restore on (4,2) — elastic restart."""
     code = """
     import jax, jax.numpy as jnp, numpy as np, tempfile, os
@@ -132,10 +112,10 @@ def test_elastic_checkpoint_reshard():
     assert got["x"].sharding.spec == P("model", "data")
     print("elastic-ok")
     """
-    assert "elastic-ok" in _run_sub(code)
+    assert "elastic-ok" in run_sub(code)
 
 
-def test_hlo_collective_parser_trip_counts():
+def test_hlo_collective_parser_trip_counts(run_sub):
     code = """
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -157,7 +137,7 @@ def test_hlo_collective_parser_trip_counts():
     assert cb["all-gather"] == 6 * 64 * 64 * 4, cb   # trip-count weighted
     print("parser-ok")
     """
-    assert "parser-ok" in _run_sub(code)
+    assert "parser-ok" in run_sub(code)
 
 
 @pytest.mark.parametrize("arch", ["qwen3-8b", "olmoe-1b-7b", "zamba2-7b",

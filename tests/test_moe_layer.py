@@ -105,3 +105,70 @@ def test_capacity_k_vs_one_flops_shape():
     cfg_1 = cfg_k.replace_moe(capacity_mode="one")
     T = 64
     assert cfg_1.moe.capacity(T) * cfg_k.moe.top_k == cfg_k.moe.capacity(T) * 1
+
+
+# ---------------------------------------------------------------------------
+# Dropped-token accounting: the `dropped_fraction` metric
+# (repro.core.metrics) against a dense-reference count.
+# ---------------------------------------------------------------------------
+
+class TestDroppedFractionAccounting:
+    def _plan(self, cfg, x):
+        from repro.core.routing import route
+        m = cfg.moe
+        params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+        xg, G = group_tokens(x, m)
+        w = params.get("router")
+        plan = route(xg, None if w is None else w.astype(jnp.float32),
+                     m, m.capacity(xg.shape[1]))
+        return plan, params
+
+    @pytest.mark.parametrize("routing", ["topk", "prototype", "hash"])
+    @pytest.mark.parametrize("cf", [0.05, 0.25, 0.5, 1.0, 4.0])
+    def test_agrees_with_dense_reference_count(self, routing, cf):
+        """As capacity shrinks, the index-view metric equals the count
+        from the dense dispatch view: 1 - kept/routed choices."""
+        cfg = _cfg(routing, capacity_factor=cf)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+        plan, _ = self._plan(cfg, x)
+        dense_kept = float(np.asarray(plan.dispatch).sum())
+        G, T, K = plan.expert_index.shape   # K = routed choices per token
+        assert float(plan.metrics["dropped_fraction"]) == pytest.approx(
+            1.0 - dense_kept / (G * T * K), abs=1e-6)
+
+    @pytest.mark.parametrize("cf", [0.05, 0.5])
+    def test_expert_choice_counts_unrouted_tokens(self, cf):
+        """EC's metric counts tokens *no* expert picked (its failure
+        mode), not overflowed choices — check against the dense view."""
+        cfg = _cfg("expert_choice", capacity_factor=cf)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+        plan, _ = self._plan(cfg, x)
+        picked = np.asarray(plan.dispatch).sum(axis=(2, 3)) > 0   # (G,T)
+        assert float(plan.metrics["dropped_fraction"]) == pytest.approx(
+            1.0 - picked.mean(), abs=1e-6)
+
+    @pytest.mark.parametrize("impl", ["einsum", "gather", "pallas",
+                                      "alltoall", "dropless"])
+    def test_layer_metric_is_dispatcher_independent(self, impl):
+        """The aux metric out of the layer equals the plan-level count
+        for every backend (the plan is shared; execution can't change
+        accounting)."""
+        cfg = _cfg("topk", impl=impl, capacity_factor=0.1)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+        plan, params = self._plan(cfg, x)
+        want = float(plan.metrics["dropped_fraction"])
+        assert want > 0.3
+        _, aux = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg))(params, x)
+        assert float(aux["moe_dropped_fraction"]) == pytest.approx(want)
+
+    @pytest.mark.parametrize("routing", ["topk", "prototype",
+                                         "expert_choice", "hash"])
+    def test_identically_zero_for_dropless(self, routing):
+        """capacity_factor=None: exactly 0.0, not approximately —
+        repro.core.metrics.dropped_fraction computes dropped/total, which
+        XLA cannot turn into reciprocal-multiply rounding noise."""
+        cfg = _cfg(routing, impl="dropless", capacity_factor=None)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+        params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+        _, aux = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg))(params, x)
+        assert float(aux["moe_dropped_fraction"]) == 0.0

@@ -1,0 +1,209 @@
+"""Hypothesis property tests for the RoutingPlan contract.
+
+For every registered router and randomly drawn shapes, assert the
+invariants all dispatch backends rely on (see routers/base.py):
+
+* ``expert_index`` in range, ``slot_index`` unique per (group, expert);
+* gates non-negative, zero on invalid choices, and renormalised to sum
+  to 1 per token when ``normalize_gates=True``;
+* token-permutation equivariance of the routing *decision* (which
+  experts, which gates) — slot assignment is first-come and therefore
+  order-dependent, so it is checked only in the no-overflow regime;
+* the dense ``combine``/``dispatch`` scatter views agree with the index
+  view entry by entry;
+* the sorted/ragged view conserves the valid choices exactly (the
+  dropless backend's correctness precondition).
+
+Deterministic golden/edge-case tests live in test_routers.py; this
+module explores the shape/seed space around them.
+"""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
+from hypothesis import given, settings, strategies as st
+
+# The invariant logic lives in plain `check_*` helpers (callable without
+# hypothesis — scripts/dev boxes without the dependency can drive them
+# over a fixed grid); the test_* wrappers below add the randomised
+# search.
+
+from repro.configs.base import MoEConfig
+from repro.core.context import MoEContext
+from repro.core.routers import get_router
+from repro.core.routing import route
+
+ALL_ROUTERS = ("topk", "prototype", "expert_choice", "hash")
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _cfg(routing, E, k, **kw):
+    base = dict(num_experts=E, routing=routing, top_k=k, aux_loss_coef=0.01)
+    if routing == "prototype":
+        # Z prototypes of E/Z experts; k' choices inside each
+        base.update(num_prototypes=2 if E % 2 == 0 else 1,
+                    prototype_top_k=min(k, E // (2 if E % 2 == 0 else 1)))
+    base.update(kw)
+    return MoEConfig(**base)
+
+
+def _route(routing, m, x, capacity, ids=None):
+    router = get_router(routing)
+    spec = router.param_spec(m, x.shape[-1], jax.nn.initializers.normal(1.0))
+    w = None
+    if spec is not None:
+        w = jax.random.normal(jax.random.PRNGKey(7), spec.shape)
+    ctx = None
+    if ids is not None:
+        ctx = MoEContext(token_ids=ids)
+    return route(x, w, m, capacity, ctx=ctx)
+
+
+@st.composite
+def plan_cases(draw):
+    routing = draw(st.sampled_from(ALL_ROUTERS))
+    E = draw(st.sampled_from([2, 4, 8]))
+    G = draw(st.integers(1, 2))
+    T = draw(st.integers(3, 24))
+    k = draw(st.integers(1, min(E, 3)))
+    cap = draw(st.integers(1, T))
+    seed = draw(st.integers(0, 2**16))
+    return routing, G, T, E, k, cap, seed
+
+
+def check_index_view_invariants(case):
+    routing, G, T, E, k, cap, seed = case
+    m = _cfg(routing, E, k)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (G, T, 12))
+    ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (G, T), 0, 97)
+    plan = _route(routing, m, x, cap, ids=ids)
+
+    e = np.asarray(plan.expert_index)
+    s = np.asarray(plan.slot_index)
+    v = np.asarray(plan.valid)
+    g = np.asarray(plan.masked_gate)
+    assert ((e >= 0) & (e < plan.num_experts)).all()
+    assert (g >= 0).all() and (g[~v] == 0).all()
+    assert (s[v] < plan.capacity).all()
+    # each valid (expert, slot) pair is unique within a group
+    for gi in range(G):
+        pairs = np.stack([e[gi][v[gi]], s[gi][v[gi]]], -1)
+        assert len(np.unique(pairs, axis=0)) == len(pairs)
+    # per-expert load never exceeds capacity * groups
+    loads = np.asarray(plan.metrics["expert_loads"])
+    assert loads.max() <= plan.capacity * G + 1e-6
+    assert 0.0 <= float(plan.metrics["dropped_fraction"]) <= 1.0
+
+
+def check_normalized_gates_sum_to_one(case):
+    routing, G, T, E, k, cap, seed = case
+    m = _cfg(routing, E, k, normalize_gates=True)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (G, T, 12))
+    ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (G, T), 0, 97)
+    plan = _route(routing, m, x, cap, ids=ids)
+    mass = np.asarray(plan.masked_gate.sum(-1))
+    has_any = np.asarray(plan.valid.any(-1))
+    np.testing.assert_allclose(mass[has_any], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(mass[~has_any], 0.0, atol=1e-7)
+
+
+def check_token_permutation_equivariance(case):
+    """Permuting the tokens of a group permutes the routing decision:
+    expert choices and gates follow their token.  Checked with capacity
+    >= T (no overflow), because slot assignment — and with it `valid` —
+    is first-come within the group by design."""
+    routing, G, T, E, k, _, seed = case
+    m = _cfg(routing, E, k)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, T, 12))
+    ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (1, T), 0, 97)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 2), T)
+    plan = _route(routing, m, x, T, ids=ids)
+    plan_p = _route(routing, m, x[:, perm], T, ids=ids[:, perm])
+
+    e0 = np.asarray(plan.expert_index)[0][np.asarray(perm)]
+    g0 = np.asarray(plan.masked_gate)[0][np.asarray(perm)]
+    v0 = np.asarray(plan.valid)[0][np.asarray(perm)]
+    np.testing.assert_array_equal(np.asarray(plan_p.expert_index)[0], e0)
+    np.testing.assert_array_equal(np.asarray(plan_p.valid)[0], v0)
+    np.testing.assert_allclose(np.asarray(plan_p.masked_gate)[0], g0,
+                               atol=1e-6)
+
+
+def check_dense_views_consistent_with_index_view(case):
+    routing, G, T, E, k, cap, seed = case
+    m = _cfg(routing, E, k)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (G, T, 12))
+    plan = _route(routing, m, x, cap)
+
+    combine = np.asarray(plan.combine)
+    dispatch = np.asarray(plan.dispatch)
+    assert combine.shape == (*plan.expert_index.shape[:2], E, plan.capacity)
+    assert ((combine > 0) == dispatch).all()
+    assert (dispatch.sum(axis=1) <= 1).all()          # slot occupancy
+    # entry-by-entry: scatter the index view by hand
+    want = np.zeros_like(combine)
+    e = np.asarray(plan.expert_index)
+    s = np.asarray(plan.slot_index)
+    v = np.asarray(plan.valid)
+    g = np.asarray(plan.masked_gate)
+    for gi, ti, ki in zip(*np.nonzero(v)):
+        want[gi, ti, e[gi, ti, ki], s[gi, ti, ki]] += g[gi, ti, ki]
+    np.testing.assert_allclose(combine, want, atol=1e-6)
+
+
+def check_ragged_view_conserves_valid_choices(case, bx):
+    """The dropless precondition, over random shapes and block sizes:
+    the ragged view is exactly the multiset of valid (expert, token,
+    gate) choices, each in its block-aligned expert segment."""
+    routing, G, T, E, k, cap, seed = case
+    m = _cfg(routing, E, k)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (G, T, 12))
+    plan = _route(routing, m, x, cap)
+    rag = plan.ragged(block_rows=bx)
+
+    e = np.asarray(plan.expert_index)
+    v = np.asarray(plan.valid)
+    g = np.asarray(plan.masked_gate)
+    tok = np.asarray(rag.token)
+    gate = np.asarray(rag.gate)
+    off = np.asarray(rag.expert_offsets)
+    for gi in range(G):
+        tv, kv = np.nonzero(v[gi])
+        want = sorted(zip(e[gi][tv, kv], tv, np.round(g[gi][tv, kv], 5)))
+        rows = np.nonzero(tok[gi] >= 0)[0]
+        row_e = np.searchsorted(off[gi], rows, side="right") - 1
+        got = sorted(zip(row_e, tok[gi][rows], np.round(gate[gi][rows], 5)))
+        assert got == want
+        assert (off[gi] % bx == 0).all()
+        assert (gate[gi][tok[gi] < 0] == 0.0).all()
+
+
+@given(plan_cases())
+@settings(**SETTINGS)
+def test_index_view_invariants(case):
+    check_index_view_invariants(case)
+
+
+@given(plan_cases())
+@settings(**SETTINGS)
+def test_normalized_gates_sum_to_one(case):
+    check_normalized_gates_sum_to_one(case)
+
+
+@given(plan_cases())
+@settings(**SETTINGS)
+def test_token_permutation_equivariance(case):
+    check_token_permutation_equivariance(case)
+
+
+@given(plan_cases())
+@settings(**SETTINGS)
+def test_dense_views_consistent_with_index_view(case):
+    check_dense_views_consistent_with_index_view(case)
+
+
+@given(plan_cases(), st.sampled_from([2, 4, 16]))
+@settings(**SETTINGS)
+def test_ragged_view_conserves_valid_choices(case, bx):
+    check_ragged_view_conserves_valid_choices(case, bx)

@@ -1,5 +1,8 @@
 """Router API: registry, RoutingPlan invariants, golden values, and the
-structural guarantee that index-view paths never build (G,T,E,C) tensors."""
+structural guarantee that index-view paths never build (G,T,E,C) tensors.
+
+Shared config/batch factories and the jaxpr structural probe live in
+conftest.py; `plan_for` builds a plan the way the layer would."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,22 +19,14 @@ from repro.nn import init
 ALL_ROUTERS = ("topk", "prototype", "expert_choice", "hash")
 
 
-def _moe_cfg(routing, **kw):
-    base = dict(num_experts=8, routing=routing, top_k=2, num_prototypes=2,
-                aux_loss_coef=0.01)
-    base.update(kw)
-    return MoEConfig(**base)
-
-
-def _plan_for(routing, G=2, T=24, M=16, capacity=8, seed=0):
-    m = _moe_cfg(routing)
+def plan_for(m, G=2, T=24, M=16, capacity=8, seed=0):
     x = jax.random.normal(jax.random.PRNGKey(seed), (G, T, M))
-    router = get_router(routing)
+    router = get_router(m.routing)
     spec = router.param_spec(m, M, jax.nn.initializers.normal(1.0))
     w = None
     if spec is not None:
         w = jax.random.normal(jax.random.PRNGKey(seed + 1), spec.shape)
-    return route(x, w, m, capacity), m
+    return route(x, w, m, capacity)
 
 
 class TestRegistry:
@@ -68,8 +63,9 @@ class TestPlanInvariants:
     """The RoutingPlan contract every router must uphold."""
 
     @pytest.mark.parametrize("routing", ALL_ROUTERS)
-    def test_index_view_contract(self, routing):
-        plan, m = _plan_for(routing)
+    def test_index_view_contract(self, routing, moe_cfg):
+        m = moe_cfg(routing)
+        plan = plan_for(m)
         G, T, K = plan.expert_index.shape
         e = np.asarray(plan.expert_index)
         s = np.asarray(plan.slot_index)
@@ -88,8 +84,8 @@ class TestPlanInvariants:
             assert len(np.unique(pairs, axis=0)) == len(pairs)
 
     @pytest.mark.parametrize("routing", ALL_ROUTERS)
-    def test_dense_views_agree_with_index_view(self, routing):
-        plan, m = _plan_for(routing)
+    def test_dense_views_agree_with_index_view(self, routing, moe_cfg):
+        plan = plan_for(moe_cfg(routing))
         combine = np.asarray(plan.combine)
         dispatch = np.asarray(plan.dispatch)
         assert combine.shape == (*plan.expert_index.shape[:2],
@@ -102,10 +98,10 @@ class TestPlanInvariants:
             dispatch.sum(axis=(0, 1, 3)).astype(np.float32))
 
     @pytest.mark.parametrize("routing", ALL_ROUTERS)
-    def test_plan_crosses_jit_boundary(self, routing):
+    def test_plan_crosses_jit_boundary(self, routing, moe_cfg):
         """RoutingPlan is a registered pytree with static shape metadata,
         so route() can be jitted directly (as RoutingResult could)."""
-        m = _moe_cfg(routing)
+        m = moe_cfg(routing)
         x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 12))
         router = get_router(routing)
         spec = router.param_spec(m, 12, jax.nn.initializers.normal(1.0))
@@ -116,8 +112,8 @@ class TestPlanInvariants:
         assert plan.combine.shape == (1, 16, m.num_experts, 8)
 
     @pytest.mark.parametrize("routing", ["topk", "prototype"])
-    def test_normalize_gates_sums_to_one(self, routing):
-        m = _moe_cfg(routing, normalize_gates=True)
+    def test_normalize_gates_sums_to_one(self, routing, moe_cfg):
+        m = moe_cfg(routing, normalize_gates=True)
         x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 12))
         router = get_router(routing)
         spec = router.param_spec(m, 12, jax.nn.initializers.normal(1.0))
@@ -129,8 +125,8 @@ class TestPlanInvariants:
         np.testing.assert_allclose(mass[has_any], 1.0, rtol=1e-5)
 
     @pytest.mark.parametrize("routing", ALL_ROUTERS)
-    def test_capacity_overflow_marks_invalid(self, routing):
-        plan, _ = _plan_for(routing, T=32, capacity=2)
+    def test_capacity_overflow_marks_invalid(self, routing, moe_cfg):
+        plan = plan_for(moe_cfg(routing), T=32, capacity=2)
         s = np.asarray(plan.slot_index)
         v = np.asarray(plan.valid)
         assert (~v[s >= 2]).all()
@@ -269,48 +265,29 @@ class TestHashGolden:
 # Structural guarantee: index-view paths never materialise (G,T,E,C)
 # ---------------------------------------------------------------------------
 
-def _walk_avals(jaxpr):
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield v.aval
-        for p in eqn.params.values():
-            for pv in (p if isinstance(p, (list, tuple)) else [p]):
-                inner = getattr(pv, "jaxpr", pv)
-                if hasattr(inner, "eqns"):
-                    yield from _walk_avals(inner)
-
-
-def _dense_shape_present(fn, args, dense_shape):
-    closed = jax.make_jaxpr(fn)(*args)
-    return any(getattr(a, "shape", None) == dense_shape
-               for a in _walk_avals(closed.jaxpr))
-
-
 @pytest.mark.parametrize("routing", ALL_ROUTERS)
-def test_gather_path_has_no_dense_intermediate(routing):
-    cfg = ModelConfig(d_model=32, d_ff=48, dtype="float32",
-                      moe=MoEConfig(num_experts=8, routing=routing, top_k=2,
-                                    num_prototypes=2, group_size=64,
-                                    capacity_factor=2.0, impl="gather"))
+def test_gather_path_has_no_dense_intermediate(routing, moe_model_cfg,
+                                               toy_batch, dense_shape_present):
+    cfg = moe_model_cfg(routing, impl="gather")
     params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
-    x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32))
+    x = toy_batch()
     xg, G = group_tokens(x, cfg.moe)
     T = xg.shape[1]
     dense = (G, T, cfg.moe.num_experts, cfg.moe.capacity(T))
 
-    assert not _dense_shape_present(
+    assert not dense_shape_present(
         lambda p, xx: moe_ffn_apply(p, xx, cfg)[0], (params, x), dense)
     # ... including through the backward pass
-    assert not _dense_shape_present(
+    assert not dense_shape_present(
         jax.grad(lambda p, xx: jnp.sum(moe_ffn_apply(p, xx, cfg)[0] ** 2)),
         (params, x), dense)
     if routing == "expert_choice":
         # slot-major dispatch: no (G, T*E, M) token blowup from the
         # K = E token-choice columns either
         blown = (G, T * cfg.moe.num_experts, cfg.d_model)
-        assert not _dense_shape_present(
+        assert not dense_shape_present(
             lambda p, xx: moe_ffn_apply(p, xx, cfg)[0], (params, x), blown)
     # control: the einsum path does materialise exactly that tensor
     cfg_e = cfg.replace_moe(impl="einsum")
-    assert _dense_shape_present(
+    assert dense_shape_present(
         lambda p, xx: moe_ffn_apply(p, xx, cfg_e)[0], (params, x), dense)
