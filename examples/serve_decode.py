@@ -1,5 +1,6 @@
-"""Serving example: batched generation against an OLMoE-style MoE model
-(smoke scale) with prefill + KV-cache decode.
+"""Serving example: static batched generation against an OLMoE-style MoE
+model (smoke scale), then the same model behind the continuous-batching
+engine on a mixed-length Poisson trace with streaming completions.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -8,10 +9,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import ServeConfig
 from repro.configs.registry import get_smoke_config
 from repro.models.registry import get_family
 from repro.nn import init
+from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import ServingEngine
+from repro.serving.trace import latency_line, synthetic_trace
 
 
 def main():
@@ -27,6 +31,21 @@ def main():
         print(f"batch={batch}: prefill {stats['prefill_s']*1e3:.0f}ms, "
               f"decode {stats['decode_tokens_per_s']:.1f} tok/s "
               f"(first tokens: {jnp.asarray(toks)[0, :8].tolist()})")
+
+    # continuous batching: mixed prompt/generation lengths, Poisson
+    # arrivals, slots refilled as requests complete
+    serve = ServeConfig(max_slots=4, kv_block_size=16, prefill_chunk=16,
+                        max_len=128)
+    cont = ContinuousEngine(cfg, params, serve, temperature=0.8)
+    requests = synthetic_trace(10, cfg.vocab_size, seed=0, qps=100.0,
+                               prompt_lens=(8, 32), gen_lens=(8, 16, 48))
+
+    def stream(st):
+        print(f"  req {st.request.uid}: {len(st.generated)} tokens in "
+              f"{st.latency_ms():.0f}ms")
+
+    _, stats = cont.run(requests, on_finish=stream)
+    print("continuous:", latency_line(stats))
 
 
 if __name__ == "__main__":

@@ -103,22 +103,21 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, template, shardings=None):
-        """Restore into the structure of ``template`` (a pytree of arrays
-        or ShapeDtypeStructs).  ``shardings``: optional matching tree of
-        Shardings for elastic placement on the current mesh."""
+    def _restore_tree(self, step: int, template, shardings, lookup):
+        """Shared leaf loader: ``lookup(by_key, leaf_key)`` maps a
+        template leaf key to its manifest entry (or None)."""
         path = os.path.join(self.directory, f"step_{step}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         assert manifest["complete"], f"checkpoint {path} incomplete"
-        flat_t, treedef = _flatten_with_paths(template)
+        flat_t, _ = _flatten_with_paths(template)
         by_key = {l["key"]: l for l in manifest["leaves"]}
         leaves = []
         flat_s = None
         if shardings is not None:
             flat_s = [s for _, s in _flatten_with_paths(shardings)[0]]
         for i, (key, tmpl) in enumerate(flat_t):
-            entry = by_key.get(key)
+            entry = lookup(by_key, key)
             if entry is None:
                 raise KeyError(f"checkpoint missing leaf {key}")
             arr = np.load(os.path.join(path, entry["file"]), allow_pickle=False)
@@ -136,8 +135,38 @@ class Checkpointer:
         _, tdef = jax.tree_util.tree_flatten(template)
         return jax.tree_util.tree_unflatten(tdef, leaves)
 
+    def restore(self, step: int, template, shardings=None):
+        """Restore into the structure of ``template`` (a pytree of arrays
+        or ShapeDtypeStructs).  ``shardings``: optional matching tree of
+        Shardings for elastic placement on the current mesh."""
+        return self._restore_tree(step, template, shardings,
+                                  lambda by_key, key: by_key.get(key))
+
     def restore_latest(self, template, shardings=None):
         step = self.latest_step()
         if step is None:
             return None, None
         return self.restore(step, template, shardings), step
+
+    # -- params-only restore (serving) --------------------------------------
+
+    def restore_params(self, step: int, params_template, shardings=None):
+        """Restore only the ``params`` subtree of a ``TrainState``-layout
+        checkpoint (or a bare-params checkpoint) into ``params_template``.
+
+        Serving has no business rebuilding an optimizer just to obtain a
+        restore template: this reads the leaves whose manifest keys are
+        ``.params<leaf>`` (the :class:`~repro.train.state.TrainState`
+        attribute path) — falling back to the bare leaf key so
+        params-only checkpoints restore too — and never touches the
+        optimizer/step leaves on disk.
+        """
+        return self._restore_tree(
+            step, params_template, shardings,
+            lambda by_key, key: by_key.get(".params" + key) or by_key.get(key))
+
+    def restore_params_latest(self, params_template, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return self.restore_params(step, params_template, shardings), step

@@ -192,6 +192,41 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching serving shapes (``repro.serving.continuous``).
+
+    All three sizes are *static*: the engine's jit'd step functions close
+    over them, so requests entering and leaving the pool never trigger a
+    recompile.  ``max_len`` bounds prompt_len + max_new_tokens per
+    request (KV block tables are sized ceil(max_len / kv_block_size)).
+    """
+
+    max_slots: int = 8           # decode slots (concurrent requests)
+    kv_block_size: int = 16      # tokens per KV block (paged cache page)
+    prefill_chunk: int = 32      # prompt tokens ingested per mixed step
+    max_len: int = 256           # per-request context bound
+    # Total KV blocks in the pool.  None => fully provisioned
+    # (max_slots * ceil(max_len / kv_block_size)): admission can never
+    # deadlock mid-flight.  Smaller pools exercise queueing on blocks.
+    num_blocks: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_slots < 1 or self.kv_block_size < 1 or self.prefill_chunk < 1:
+            raise ValueError("max_slots, kv_block_size, prefill_chunk must be >= 1")
+        if self.max_len < 2:
+            raise ValueError("max_len must be >= 2 (one prompt + one generated)")
+
+    @property
+    def blocks_per_slot(self) -> int:
+        return -(-self.max_len // self.kv_block_size)
+
+    @property
+    def resolved_num_blocks(self) -> int:
+        return self.num_blocks if self.num_blocks is not None else (
+            self.max_slots * self.blocks_per_slot)
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     """One (input-shape) cell: what gets lowered and at what size."""
 

@@ -93,3 +93,84 @@ def decode_attention_kernel(q, k, v, lengths, *, block_kv: int = 1024,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: KV lives in a shared block pool, per-row block tables
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale, bs, n_b):
+    """Same online-softmax recurrence as ``_kernel``; the KV block for
+    grid step (i, h, b) is DMA'd from pool block ``tbl_ref[i, b]`` (the
+    BlockSpec index maps read the scalar-prefetched table from SMEM, the
+    MegaBlocks-style trick the dropless FFN kernel uses for weights)."""
+    i = pl.program_id(0)
+    b = pl.program_id(2)
+
+    @pl.when(b == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[i]
+    @pl.when(b * bs < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bs, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bs)
+        cols = b * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(b == n_b - 1)
+    def _finish():
+        # length-0 rows never accumulate: l stays 0 -> output exactly 0
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pool, v_pool, block_tables, lengths, *,
+                                  interpret: bool = False):
+    """q: (N, Hkv, G, D); k_pool/v_pool: (P, Hkv, bs, D); block_tables:
+    (N, MB) int32 pool block ids per row; lengths: (N,) int32.
+    Returns (N, Hkv, G, D)."""
+    N, Hkv, G, D = q.shape
+    _, _, bs, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    grid = (N, Hkv, MB)
+
+    kernel = functools.partial(_paged_kernel, scale=D ** -0.5, bs=bs, n_b=MB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda i, h, b, tbl, lens: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda i, h, b, tbl, lens: (tbl[i, b], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda i, h, b, tbl, lens: (tbl[i, b], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda i, h, b, tbl, lens: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, Hkv, G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)

@@ -1,4 +1,6 @@
-"""jit'd wrapper: standard (B, Hq, D) query / (B, T, Hkv, D) cache layout."""
+"""jit'd wrappers: dense (B, T, Hkv, D) cache layout and the paged
+(block-pool + block-table) layout used by the continuous-batching
+serving engine."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,8 +8,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import decode_attention_kernel
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_kernel,
+    paged_decode_attention_kernel,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)
 
 
 def _interpret() -> bool:
@@ -29,4 +37,31 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, Hq, D)
 
 
-__all__ = ["decode_attention", "decode_attention_ref"]
+@jax.jit
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           block_tables: jax.Array,
+                           lengths: jax.Array) -> jax.Array:
+    """q: (N, Hq, D) one query per row (decode slot or prefill-chunk
+    token); k_pool/v_pool: (P, Hkv, bs, D) shared block pool;
+    block_tables: (N, MB) int32 pool block ids covering each row's
+    context in order; lengths: (N,) valid context per row (0 => masked
+    row, output 0).  Returns (N, Hq, D).
+
+    On TPU the Pallas kernel streams only the table-addressed pool
+    blocks (no dense gather); elsewhere the pure-jnp gather reference
+    runs (the kernel's scalar-prefetch indirection is a TPU
+    memory-system question — interpret mode would re-derive the
+    reference semantics through a full pool gather anyway).
+    """
+    N, Hq, D = q.shape
+    Hkv = k_pool.shape[1]
+    if jax.default_backend() != "tpu":
+        return paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths)
+    G = Hq // Hkv
+    qg = q.reshape(N, Hkv, G, D)
+    out = paged_decode_attention_kernel(qg, k_pool, v_pool, block_tables, lengths)
+    return out.reshape(N, Hq, D)
+
+
+__all__ = ["decode_attention", "decode_attention_ref",
+           "paged_decode_attention", "paged_decode_attention_ref"]

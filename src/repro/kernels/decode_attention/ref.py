@@ -1,8 +1,11 @@
-"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+"""Pure-jnp oracles for single-token GQA decode attention: dense cache
+and paged (block-table) cache variants."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite mask: rows with length 0 must not produce NaN
 
 
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -19,3 +22,35 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(jnp.float32))
     return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """q: (N, Hq, D) one query row per (slot | prefill-chunk) token;
+    k_pool/v_pool: (P, Hkv, bs, D) the shared block pool; block_tables:
+    (N, MB) int32 pool block ids covering each row's context in order;
+    lengths: (N,) valid context per row (0 => inactive row, output 0).
+    Returns (N, Hq, D).
+
+    Each row attends to positions [0, length) of its own slot's context,
+    read through the block table — scattered pool blocks, no dense
+    per-slot slab.  Masking uses a finite NEG_INF so fully-masked rows
+    stay NaN-free (NaN would poison other tokens through the einsum
+    dispatcher's zero-weight combine products).
+    """
+    N, Hq, D = q.shape
+    _, Hkv, bs, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    G = Hq // Hkv
+    # gather this row's context: (N, MB, Hkv, bs, D) -> (N, Hkv, MB*bs, D)
+    k = jnp.transpose(k_pool[block_tables], (0, 2, 1, 3, 4)).reshape(N, Hkv, MB * bs, D)
+    v = jnp.transpose(v_pool[block_tables], (0, 2, 1, 3, 4)).reshape(N, Hkv, MB * bs, D)
+    qg = q.reshape(N, Hkv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("nkgd,nktd->nkgt", qg, k.astype(jnp.float32)) * (D ** -0.5)
+    valid = jnp.arange(MB * bs)[None, :] < lengths[:, None]         # (N, T)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("nkgt,nktd->nkgd", probs, v.astype(jnp.float32))
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
+    return out.reshape(N, Hq, D).astype(q.dtype)

@@ -1,7 +1,17 @@
-"""Serving driver: load (or init) a model and serve batched requests.
+"""Serving driver: static lockstep batching or continuous batching, over
+synthetic prompts or a request trace.
 
+  # static lockstep batch (the original smoke mode)
   PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+      --engine static --batch 4 --prompt-len 16 --gen 32
+
+  # continuous batching over a synthetic Poisson mixed-length trace
+  PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --smoke \
+      --engine continuous --requests 16 --qps 40
+
+  # trace-driven (JSONL of {"prompt_len", "gen_len", "arrival_ms"})
+  PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b --smoke \
+      --engine continuous --trace trace.jsonl
 """
 from __future__ import annotations
 
@@ -11,20 +21,45 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ServeConfig
 from repro.configs.registry import ALL_IDS, get_config, get_smoke_config
 from repro.models.registry import get_family
 from repro.nn import abstract, init as init_params
+from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import ServingEngine
+from repro.serving.trace import (
+    latency_line,
+    load_trace,
+    run_trace_static,
+    static_max_len,
+    synthetic_trace,
+)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmoe-1b-7b", choices=ALL_IDS)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="static", choices=["static", "continuous"])
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static engine batch size (trace groups / smoke batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # trace-driven mode
+    ap.add_argument("--trace", default=None,
+                    help="JSONL trace of {prompt_len, gen_len, arrival_ms}; "
+                         "omit for a synthetic mixed-length Poisson trace")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="synthesize a trace of this many requests (>0 "
+                         "switches to trace mode without --trace)")
+    ap.add_argument("--qps", type=float, default=50.0,
+                    help="synthetic trace Poisson arrival rate")
+    # continuous-batching shapes
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--kv-block", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=256)
     from repro.core.dispatch import available_dispatchers
     ap.add_argument("--moe-impl", default=None,
                     choices=[None, *available_dispatchers()],
@@ -46,30 +81,72 @@ def main(argv=None):
     specs = fam.specs(cfg)
     params = init_params(specs, jax.random.PRNGKey(args.seed))
     if args.ckpt_dir:
-        # restore params from a train.py checkpoint (TrainState layout,
-        # default AdamW) — elastic across device topologies
-        from repro.configs.base import TrainConfig
-        from repro.optim import make_optimizer, warmup_constant
-        from repro.train.state import init_train_state
-
-        tc = TrainConfig()
-        opt = make_optimizer(tc, warmup_constant(tc.learning_rate))
-        template = jax.eval_shape(
-            lambda p: init_train_state(p, opt, tc.grad_compression), abstract(specs))
+        # params-only restore: no throwaway optimizer, no TrainState —
+        # the Checkpointer maps the params subtree out of a train.py
+        # checkpoint (or a bare-params one) directly.
         ckpt = Checkpointer(args.ckpt_dir)
-        state, step = ckpt.restore_latest(template)
-        if state is not None:
-            params = state.params
-            print(f"restored checkpoint step {step}")
+        restored, step = ckpt.restore_params_latest(abstract(specs))
+        if restored is not None:
+            params = restored
+            print(f"restored params-only from checkpoint step {step}")
 
-    max_len = args.prompt_len + args.gen + 1
-    engine = ServingEngine(cfg, params, max_len=max_len)
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
-                                 0, cfg.vocab_size)
-    toks, stats = engine.generate(prompts, args.gen, temperature=args.temperature,
-                                  seed=args.seed)
-    print("generated:", np.asarray(toks)[:, :16])
-    print({k: round(v, 4) for k, v in stats.items()})
+    trace_mode = args.trace is not None or args.requests > 0
+
+    if not trace_mode:
+        # original smoke mode: one uniform batch
+        max_len = args.prompt_len + args.gen + 1
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+        if args.engine == "static":
+            engine = ServingEngine(cfg, params, max_len=max_len)
+            toks, stats = engine.generate(prompts, args.gen,
+                                          temperature=args.temperature,
+                                          seed=args.seed)
+        else:
+            serve = ServeConfig(max_slots=args.max_slots,
+                                kv_block_size=args.kv_block,
+                                prefill_chunk=args.prefill_chunk,
+                                max_len=max(args.max_len, max_len))
+            engine = ContinuousEngine(cfg, params, serve,
+                                      temperature=args.temperature,
+                                      seed=args.seed)
+            toks, stats = engine.generate(prompts, args.gen)
+        print("generated:", np.asarray(toks)[:, :16])
+        print({k: round(float(v), 4) for k, v in stats.items()})
+        return
+
+    # trace-driven serving
+    if args.trace is not None:
+        requests = load_trace(args.trace, cfg.vocab_size, seed=args.seed)
+    else:
+        requests = synthetic_trace(args.requests, cfg.vocab_size,
+                                   seed=args.seed, qps=args.qps)
+    longest = max(r.total_len for r in requests)
+    static_len = static_max_len(requests)
+    print(f"serving {len(requests)} requests "
+          f"({'trace ' + args.trace if args.trace else 'synthetic Poisson'}), "
+          f"engine={args.engine}")
+
+    if args.engine == "static":
+        engine = ServingEngine(cfg, params, max_len=static_len)
+        _, stats = run_trace_static(engine, requests, args.batch,
+                                    temperature=args.temperature,
+                                    seed=args.seed)
+    else:
+        serve = ServeConfig(max_slots=args.max_slots,
+                            kv_block_size=args.kv_block,
+                            prefill_chunk=args.prefill_chunk,
+                            max_len=max(args.max_len, longest))
+        engine = ContinuousEngine(cfg, params, serve,
+                                  temperature=args.temperature, seed=args.seed)
+
+        def stream(st):
+            head = st.generated[:8]
+            print(f"  req {st.request.uid}: {len(st.generated)} tokens, "
+                  f"latency {st.latency_ms():.0f}ms, first {head}")
+
+        _, stats = engine.run(requests, on_finish=stream)
+    print(latency_line(stats))
 
 
 if __name__ == "__main__":

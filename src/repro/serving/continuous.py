@@ -1,0 +1,387 @@
+"""Continuous-batching serving engine: mixed prefill/decode steps over a
+paged KV cache.
+
+The static :class:`~repro.serving.engine.ServingEngine` runs one batch
+in lockstep: one prompt length, one generation length, the whole batch
+finishes together.  This engine instead keeps a fixed pool of
+``max_slots`` decode slots full: requests are admitted FCFS as slots and
+KV blocks free up, prompts are ingested in ``prefill_chunk``-token
+chunks *interleaved with* one decode step for every active slot, and
+finished requests are evicted immediately so their slot is refilled.
+
+Every engine step is one call of a jit'd function of **static shape**:
+
+    rows = [max_slots decode rows] + [prefill_chunk chunk rows]
+
+Row ``i < max_slots`` is slot ``i``'s decode token (masked when the slot
+is idle or mid-prefill); the tail rows carry the current chunk of the
+oldest prefilling request (masked when nothing is prefilling — a
+decode-only variant with ``rows = max_slots`` also exists, so steady
+state does not pay for empty chunk rows).  Each row carries its token
+id, slot, absolute position and context length; K/V are projected,
+written into the slot's pool blocks, and attention reads back through
+the block table (:func:`repro.kernels.decode_attention.paged_decode_attention`)
+— writing the chunk's K/V *before* the attention read makes per-row
+"attend to my own prefix" exactly causal attention, which is what lets
+prefill and decode share one kernel and one compiled step.  Requests
+entering/leaving only change *values* (tables, lengths, tokens), never
+shapes: no recompilation as traffic churns.
+
+Per-row absolute positions and token ids ride to the MoE layers through
+:class:`~repro.core.context.MoEContext`, so hash/content routing stays
+correct under slot reuse (a reused slot's rows carry the new request's
+identity, not the previous occupant's).
+
+Recurrent families (xlstm) keep O(1) state keyed by slot: every step is
+a decode step of shape ``(max_slots, 1)``; "prefill" feeds prompt tokens
+one per step into the slot's state, which is zero-reset at admission.
+Hybrid zamba (shared-attention cache with a single batch-wide length
+scalar) and encdec (per-request encoder memory) are not supported yet.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.core.context import MoEContext
+from repro.core.moe import moe_ffn_apply
+from repro.distributed.sharding import Rules, shard, use_rules
+from repro.kernels.decode_attention import paged_decode_attention
+from repro.models import layers as L
+from repro.models.attention import _project_qkv
+from repro.models.registry import get_family
+from repro.models.transformer import _is_moe_layer
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import Request, RequestState, Status
+from repro.serving.scheduler import Scheduler
+
+_PAGED_FAMILIES = ("decoder_lm", "vlm", "m6")
+_RECURRENT_FAMILIES = ("xlstm",)
+
+
+# ---------------------------------------------------------------------------
+# Paged transformer forward (one mixed prefill/decode step)
+# ---------------------------------------------------------------------------
+
+def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
+                 lengths, row_tables, wb, wo, kp, vp, ctx):
+    """One pre-norm block over the flat row batch ``x: (1, N, d)``.
+
+    K/V for every row are written into the pool at (wb, wo) *before* the
+    paged-attention read, so chunk rows see their same-step predecessors
+    — exact causal semantics for prefill and decode alike.  Masked rows
+    write into the garbage block and read length 0.
+    """
+    N = x.shape[1]
+    h = L.norm_apply(bp["ln_attn"], x, cfg)
+    q, k, v = _project_qkv(bp["attn"], h, cfg, positions)       # (1, N, H*, D)
+    kp = kp.at[wb, :, wo].set(k[0].astype(kp.dtype))            # (N, Hkv, D) scatter
+    vp = vp.at[wb, :, wo].set(v[0].astype(vp.dtype))
+    out = paged_decode_attention(q[0], kp, vp, row_tables, lengths)  # (N, Hq, D)
+    attn_out = L.dense_apply(bp["attn"]["wo"], out.reshape(1, N, -1), cfg)
+    x = x + attn_out
+    x = shard(x, "batch", "seq", "embed")
+
+    h = L.norm_apply(bp["ln_ffn"], x, cfg)
+    if moe_layer:
+        ffn_out, _ = moe_ffn_apply(bp["ffn"], h, cfg, ctx=ctx)
+    else:
+        ffn_out = L.ffn_apply(bp["ffn"], h, cfg)
+    x = x + ffn_out
+    x = shard(x, "batch", "seq", "embed")
+    return x, kp, vp
+
+
+def _paged_forward(params, cfg: ModelConfig, tokens, ctx_ids, positions,
+                   lengths, row_tables, wb, wo, k_pools, v_pools, *,
+                   temperature: float, key):
+    """Flat-row step: embed -> blocks (scan or unrolled) -> sample.
+
+    Returns (next_token per row (N,), new k_pools, new v_pools)."""
+    x = L.embedding_apply(params["embed"], tokens[None], cfg)   # (1, N, d)
+    pos2 = positions[None]
+    if cfg.pos_embed == "learned":
+        x = x + params["pos_embed"].astype(x.dtype)[positions][None]
+    ctx = MoEContext(is_training=False).replace(token_ids=ctx_ids[None],
+                                                positions=pos2)
+    x = shard(x, "batch", "seq", "embed")
+
+    blocks = params["blocks"]
+    if isinstance(blocks, (list, tuple)):       # unrolled (mixed layer kinds)
+        ks, vs = [], []
+        for i, bp in enumerate(blocks):
+            x, kp, vp = _paged_block(
+                bp, x, cfg, moe_layer=_is_moe_layer(cfg, i), positions=pos2,
+                lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
+                kp=k_pools[i], vp=v_pools[i], ctx=ctx)
+            ks.append(kp)
+            vs.append(vp)
+        k_pools, v_pools = jnp.stack(ks), jnp.stack(vs)
+    else:
+        moe_layer = _is_moe_layer(cfg, 0)
+
+        def body(h, scanned):
+            bp, kp, vp = scanned
+            h, kp, vp = _paged_block(
+                bp, h, cfg, moe_layer=moe_layer, positions=pos2,
+                lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
+                kp=kp, vp=vp, ctx=ctx)
+            return h, (kp, vp)
+
+        x, (k_pools, v_pools) = jax.lax.scan(body, x, (blocks, k_pools, v_pools))
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    unembed = params.get("unembed", params["embed"])
+    logits = L.unembed_apply(unembed, x, cfg)[0].astype(jnp.float32)  # (N, V)
+    if temperature <= 0.0:
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        next_tok = jax.random.categorical(key, logits / temperature,
+                                          axis=-1).astype(jnp.int32)
+    return next_tok, k_pools, v_pools
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class ContinuousEngine:
+    """Continuous-batching engine over a fixed slot pool.
+
+    ``temperature`` is engine-level (0 = greedy, matching the static
+    engine's sampling math token for token).  Drive it either with
+    :meth:`run` (trace of :class:`Request`, virtual clock, per-request
+    latencies) or the batch-parity convenience :meth:`generate`.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig = ServeConfig(),
+                 *, temperature: float = 0.0, seed: int = 0,
+                 rules: Optional[Rules] = None):
+        if cfg.family in _PAGED_FAMILIES:
+            self.mode = "paged"
+            if cfg.attn_logit_softcap > 0:
+                raise NotImplementedError(
+                    "paged decode attention does not implement logit softcap")
+            if cfg.moe.moe_attention:
+                raise NotImplementedError(
+                    "moe_attention has no cached decode path")
+        elif cfg.family in _RECURRENT_FAMILIES:
+            self.mode = "recurrent"
+        else:
+            raise NotImplementedError(
+                f"continuous batching not implemented for family "
+                f"{cfg.family!r} (zamba's shared-attention cache keeps one "
+                f"batch-wide length; encdec needs per-request encoder memory)")
+        self.cfg = cfg
+        self.fam = get_family(cfg)
+        self.params = params
+        self.serve = serve
+        self.temperature = float(temperature)
+        self.rules = rules
+        self._key = jax.random.PRNGKey(seed)
+        self.steps = 0
+
+        if self.mode == "paged":
+            self.cache: Optional[PagedKVCache] = PagedKVCache(cfg, serve)
+            self.scheduler = Scheduler(serve.max_slots, serve.max_len, self.cache)
+            temp = self.temperature
+
+            def step_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
+                        lengths, row_tables, wb, wo, key):
+                with use_rules(rules):
+                    return _paged_forward(p, cfg, tokens, ctx_ids, positions,
+                                          lengths, row_tables, wb, wo,
+                                          k_pools, v_pools,
+                                          temperature=temp, key=key)
+
+            # Two static shapes only: N = max_slots (decode-only) and
+            # N = max_slots + prefill_chunk (mixed) — jit caches both.
+            self._step_fn = jax.jit(step_fn, donate_argnums=(1, 2))
+        else:
+            self.cache = None
+            self.scheduler = Scheduler(serve.max_slots, serve.max_len, None)
+            self._state = self.fam.init_state(cfg, serve.max_slots, serve.max_len)
+            temp = self.temperature
+            serve_ctx = MoEContext(is_training=False)
+            fam = self.fam
+
+            def rec_step(p, state, tokens, key):
+                with use_rules(rules):
+                    logits, new_state = fam.decode(p, tokens, state, cfg,
+                                                   ctx=serve_ctx)
+                lg = logits[:, -1, :].astype(jnp.float32)
+                if temp <= 0.0:
+                    tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                else:
+                    tok = jax.random.categorical(key, lg / temp,
+                                                 axis=-1).astype(jnp.int32)
+                return tok, new_state
+
+            def reset_slot(state, slot):
+                return jax.tree_util.tree_map(
+                    lambda a: a.at[slot].set(jnp.zeros_like(a[slot])), state)
+
+            self._step_fn = jax.jit(rec_step, donate_argnums=(1,))
+            self._reset_fn = jax.jit(reset_slot, donate_argnums=(0,))
+
+    # -- one engine step ----------------------------------------------------
+
+    def step(self, clock_ms: float = 0.0) -> List[RequestState]:
+        """Admit, run one mixed prefill/decode step, process samples.
+        Returns the requests that finished during this step."""
+        admitted = self.scheduler.admit(clock_ms)
+        if self.mode == "recurrent":
+            for st in admitted:
+                self._state = self._reset_fn(self._state, jnp.int32(st.slot))
+        if not self.scheduler.running:
+            return []
+        self._key, sub = jax.random.split(self._key)
+        if self.mode == "paged":
+            finished = self._paged_host_step(sub, clock_ms)
+        else:
+            finished = self._recurrent_host_step(sub, clock_ms)
+        self.steps += 1
+        return finished
+
+    def _paged_host_step(self, key, clock_ms: float) -> List[RequestState]:
+        serve, cache, sched = self.serve, self.cache, self.scheduler
+        S = serve.max_slots
+        pre = sched.prefilling
+        chunk = 0
+        if pre is not None:
+            chunk = min(serve.prefill_chunk,
+                        pre.request.prompt_len - pre.prefill_pos)
+        N = S + (serve.prefill_chunk if pre is not None else 0)
+
+        tokens = np.zeros(N, np.int32)
+        ctx_ids = np.full(N, -1, np.int32)
+        positions = np.zeros(N, np.int32)
+        lengths = np.zeros(N, np.int32)
+        wb = np.full(N, cache.garbage_block, np.int32)
+        wo = np.zeros(N, np.int32)
+        row_tables = np.full((N, serve.blocks_per_slot), cache.garbage_block,
+                             np.int32)
+        sample_rows: List[Tuple[int, RequestState]] = []
+
+        for slot, st in sched.running.items():
+            if st.status is not Status.DECODE:
+                continue
+            pos = st.context_len
+            tokens[slot] = ctx_ids[slot] = st.last_token
+            positions[slot] = pos
+            lengths[slot] = pos + 1
+            wb[slot], wo[slot] = cache.write_coords(slot, pos)
+            row_tables[slot] = cache.block_table[st.slot]
+            sample_rows.append((slot, st))
+
+        if pre is not None:
+            prompt = pre.request.prompt
+            for j in range(chunk):
+                row, p = S + j, pre.prefill_pos + j
+                tokens[row] = ctx_ids[row] = prompt[p]
+                positions[row] = p
+                lengths[row] = p + 1
+                wb[row], wo[row] = cache.write_coords(pre.slot, p)
+                row_tables[row] = cache.block_table[pre.slot]
+                if p == pre.request.prompt_len - 1:
+                    sample_rows.append((row, pre))
+
+        next_tok, k_pools, v_pools = self._step_fn(
+            self.params, cache.k_pool, cache.v_pool, tokens, ctx_ids,
+            positions, lengths, row_tables, wb, wo, key)
+        cache.update_pools(k_pools, v_pools)
+
+        if pre is not None:
+            pre.prefill_pos += chunk
+            if pre.prefill_pos == pre.request.prompt_len:
+                pre.status = Status.DECODE
+        return self._collect_samples(np.asarray(next_tok), sample_rows, clock_ms)
+
+    def _recurrent_host_step(self, key, clock_ms: float) -> List[RequestState]:
+        S = self.serve.max_slots
+        tokens = np.zeros((S, 1), np.int32)
+        sample_rows: List[Tuple[int, RequestState]] = []
+        prefill_advanced: List[RequestState] = []
+        for slot, st in self.scheduler.running.items():
+            if st.status is Status.PREFILL:
+                tokens[slot, 0] = st.request.prompt[st.prefill_pos]
+                prefill_advanced.append(st)
+                if st.prefill_pos + 1 == st.request.prompt_len:
+                    sample_rows.append((slot, st))
+            else:
+                tokens[slot, 0] = st.last_token
+                sample_rows.append((slot, st))
+
+        next_tok, self._state = self._step_fn(self.params, self._state,
+                                              tokens, key)
+        for st in prefill_advanced:
+            st.prefill_pos += 1
+            if st.prefill_pos == st.request.prompt_len:
+                st.status = Status.DECODE
+        return self._collect_samples(np.asarray(next_tok), sample_rows, clock_ms)
+
+    def _collect_samples(self, next_tok: np.ndarray, sample_rows, clock_ms: float
+                         ) -> List[RequestState]:
+        finished = []
+        for row, st in sample_rows:
+            st.generated.append(int(next_tok[row]))
+            if st.first_token_ms is None:
+                st.first_token_ms = clock_ms
+            if st.done():
+                self.scheduler.finish(st, clock_ms)
+                finished.append(st)
+        return finished
+
+    # -- drivers ------------------------------------------------------------
+
+    def run(self, requests: List[Request], *,
+            on_finish: Optional[Callable[[RequestState], None]] = None
+            ) -> Tuple[Dict[int, List[int]], Dict[str, float]]:
+        """Serve a trace to completion.  The clock is wall time since the
+        call, fast-forwarded over idle gaps to the next arrival (so a
+        sparse trace doesn't busy-wait); request latency = finish - arrival
+        on that clock.  Returns ({uid: generated tokens}, stats)."""
+        for r in requests:
+            self.scheduler.add(r)
+        t0 = time.perf_counter()
+        steps0 = self.steps
+        clock = 0.0
+        done: List[RequestState] = []
+        while self.scheduler.has_work():
+            clock = max(clock, (time.perf_counter() - t0) * 1e3)
+            if not self.scheduler.running:
+                nxt = self.scheduler.next_arrival_ms()
+                if nxt is not None and nxt > clock:
+                    clock = nxt                      # idle: jump to next arrival
+            for st in self.step(clock):
+                done.append(st)
+                if on_finish is not None:
+                    on_finish(st)
+        total_ms = max(clock, (time.perf_counter() - t0) * 1e3)
+        self.scheduler.check_conservation()
+
+        from repro.serving.trace import latency_stats
+
+        stats = latency_stats([st.latency_ms() for st in done], total_ms,
+                              sum(len(st.generated) for st in done))
+        stats["steps"] = float(self.steps - steps0)
+        return {st.request.uid: list(st.generated) for st in done}, stats
+
+    def generate(self, prompts: jax.Array, num_tokens: int, seed: int = 0):
+        """Static-engine-compatible entry: (B, S) prompts, all admitted at
+        t=0, each generating ``num_tokens``.  Returns ((B, num_tokens)
+        int32, stats) — token-identical to ``ServingEngine.generate``
+        under greedy decoding."""
+        del seed  # sampling key is engine-level; greedy needs none
+        prompts = np.asarray(prompts)
+        reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=num_tokens)
+                for i in range(prompts.shape[0])]
+        out, stats = self.run(reqs)
+        toks = jnp.asarray(np.stack([out[i] for i in range(prompts.shape[0])]),
+                           jnp.int32)
+        return toks, stats

@@ -78,8 +78,9 @@ class ServingEngine:
         key, sub = jax.random.split(key)
         tok = self._sample(logits, sub, temperature)
         out = [tok]
+        n_decode = max(num_tokens - 1, 0)
         t0 = time.time()
-        for _ in range(num_tokens - 1):
+        for _ in range(n_decode):
             logits, state = self._decode(self.params, tok[:, None], state)
             key, sub = jax.random.split(key)
             tok = self._sample(logits, sub, temperature)
@@ -89,6 +90,10 @@ class ServingEngine:
         stats = {
             "prefill_s": t_prefill,
             "decode_s": t_decode,
-            "decode_tokens_per_s": (num_tokens - 1) * B / max(t_decode, 1e-9),
+            # num_tokens == 1 never enters the decode loop: reporting
+            # (num_tokens - 1) * B over a near-zero timer would be 0/eps
+            # noise — return an explicit 0.0 instead.
+            "decode_tokens_per_s": (n_decode * B / max(t_decode, 1e-9)
+                                    if n_decode else 0.0),
         }
         return jnp.stack(out, axis=1), stats

@@ -1,0 +1,128 @@
+"""Block-based paged KV cache for continuous-batching transformer serving.
+
+Instead of one dense ``(B, max_len, Hkv, D)`` slab per batch, K/V live in
+a shared pool of fixed-size blocks:
+
+    k_pool, v_pool : (num_layers, P, Hkv, block_size, D)
+
+where ``P = num_blocks + 1`` — the last block is a *garbage* block that
+masked (inactive) rows write into, so the jit'd step never needs a
+dynamic write mask.  Each decode slot owns an ordered list of pool
+blocks; the ``(max_slots, blocks_per_slot)`` block table maps a slot's
+logical context position ``p`` to pool coordinates
+``(table[slot, p // bs], p % bs)``.  Attention reads straight through
+the table (:func:`repro.kernels.decode_attention.paged_decode_attention`),
+so blocks never need to be contiguous and freeing is defrag-free: a
+freed block goes back on the free list and can be handed to any slot.
+
+The allocator is host-side (plain Python): allocation happens at
+admission, outside jit, and only the table *contents* change shape-free
+between steps.  Pool layout is head-major ``(..., Hkv, bs, D)`` so the
+Pallas kernel DMAs contiguous ``(bs, D)`` tiles per (block, head) and
+the per-step write is a single advanced-index scatter.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` block ids with leak and
+    double-free detection (serving runs for ever; a leaked block is a
+    slow OOM, a double-freed one is silent cross-request corruption)."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._allocated: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV pool exhausted: requested {n} blocks, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._allocated.update(out)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._allocated:
+                raise RuntimeError(f"double-free of KV block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+    def check_conservation(self) -> None:
+        assert len(self._free) + len(self._allocated) == self.num_blocks, (
+            len(self._free), len(self._allocated), self.num_blocks)
+        assert not (set(self._free) & self._allocated)
+
+
+class PagedKVCache:
+    """Device block pools + host block table for one model.
+
+    ``slot`` lifecycle: :meth:`allocate_slot` at admission reserves every
+    block the request can ever touch (``ceil(total_len / bs)``), so a
+    running request can never hit an out-of-blocks condition mid-flight;
+    :meth:`free_slot` at eviction returns them.  Stale pool contents need
+    no zeroing — attention masks by per-row length, and a reused block is
+    overwritten before the slot's length grows past it.
+    """
+
+    def __init__(self, cfg: ModelConfig, serve: ServeConfig):
+        self.cfg = cfg
+        self.serve = serve
+        self.block_size = serve.kv_block_size
+        self.num_blocks = serve.resolved_num_blocks
+        self.garbage_block = self.num_blocks          # index P-1, never allocated
+        self.allocator = BlockAllocator(self.num_blocks)
+        hd = cfg.resolved_head_dim
+        pool_shape = (cfg.num_layers, self.num_blocks + 1, cfg.num_kv_heads,
+                      self.block_size, hd)
+        dtype = cfg.activation_dtype
+        self.k_pool = jnp.zeros(pool_shape, dtype)
+        self.v_pool = jnp.zeros(pool_shape, dtype)
+        # host-side table; unassigned entries point at the garbage block
+        # (always a valid pool index, always masked by length)
+        self.block_table = np.full((serve.max_slots, serve.blocks_per_slot),
+                                   self.garbage_block, dtype=np.int32)
+        self._slot_blocks: Dict[int, List[int]] = {}
+
+    def blocks_needed(self, total_len: int) -> int:
+        return -(-total_len // self.block_size)
+
+    def can_allocate_slot(self, total_len: int) -> bool:
+        return self.allocator.can_alloc(self.blocks_needed(total_len))
+
+    def allocate_slot(self, slot: int, total_len: int) -> None:
+        assert slot not in self._slot_blocks, f"slot {slot} already allocated"
+        blocks = self.allocator.alloc(self.blocks_needed(total_len))
+        self._slot_blocks[slot] = blocks
+        self.block_table[slot, :] = self.garbage_block
+        self.block_table[slot, :len(blocks)] = blocks
+
+    def free_slot(self, slot: int) -> None:
+        self.allocator.free(self._slot_blocks.pop(slot))
+        self.block_table[slot, :] = self.garbage_block
+
+    def write_coords(self, slot: int, position: int) -> Tuple[int, int]:
+        """Pool (block, offset) for logical ``position`` of ``slot``."""
+        b, o = divmod(position, self.block_size)
+        return int(self.block_table[slot, b]), o
+
+    def update_pools(self, k_pool: jax.Array, v_pool: jax.Array) -> None:
+        """Adopt the step function's donated-output pools."""
+        self.k_pool = k_pool
+        self.v_pool = v_pool

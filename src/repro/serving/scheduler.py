@@ -1,0 +1,117 @@
+"""FCFS admission scheduler for the continuous-batching engine.
+
+The scheduler owns request lifecycle: a FIFO waiting queue, a fixed pool
+of ``max_slots`` decode slots, and (for paged transformer serving)
+coordination with the :class:`~repro.serving.kv_cache.PagedKVCache`
+allocator.  Admission is strict FCFS — a request at the head that does
+not fit (no free slot, or not enough free KV blocks for its worst-case
+``prompt + max_new_tokens`` footprint) blocks everything behind it; no
+reordering means no starvation.
+
+Eviction happens on EOS or on reaching ``max_new_tokens``; the slot and
+its blocks return to the free pools in the same step, so the next
+admission can reuse them immediately (slots stay full under load — the
+whole point of continuous batching).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.request import Request, RequestState, Status
+
+
+class Scheduler:
+    def __init__(self, max_slots: int, max_len: int,
+                 kv_cache: Optional[PagedKVCache] = None):
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.kv_cache = kv_cache
+        self.waiting: Deque[RequestState] = deque()
+        self.running: Dict[int, RequestState] = {}     # slot -> state
+        self.free_slots: List[int] = list(range(max_slots - 1, -1, -1))
+        self._admit_seq = 0                            # FCFS tiebreaker
+
+    # -- intake -------------------------------------------------------------
+
+    def add(self, request: Request) -> RequestState:
+        if request.total_len > self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt_len + max_new_tokens = "
+                f"{request.total_len} exceeds serve max_len {self.max_len}")
+        if self.kv_cache is not None:
+            need = self.kv_cache.blocks_needed(request.total_len)
+            if need > self.kv_cache.allocator.num_blocks:
+                # would never fit even an empty pool: admission (FCFS,
+                # head blocks the queue) would spin for ever
+                raise ValueError(
+                    f"request {request.uid}: needs {need} KV blocks but the "
+                    f"pool only has {self.kv_cache.allocator.num_blocks}")
+        st = RequestState(request)
+        self.waiting.append(st)
+        return st
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, clock_ms: float) -> List[RequestState]:
+        """Admit FCFS from the queue: arrived requests only, while a slot
+        (and, when paged, enough KV blocks) is available."""
+        admitted = []
+        while self.waiting and self.free_slots:
+            st = self.waiting[0]
+            if st.request.arrival_ms > clock_ms:
+                break
+            if (self.kv_cache is not None
+                    and not self.kv_cache.can_allocate_slot(st.request.total_len)):
+                break
+            self.waiting.popleft()
+            slot = self.free_slots.pop()
+            if self.kv_cache is not None:
+                self.kv_cache.allocate_slot(slot, st.request.total_len)
+            st.slot = slot
+            st.status = Status.PREFILL
+            st.prefill_pos = 0
+            st.admitted_ms = clock_ms
+            st.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            self.running[slot] = st
+            admitted.append(st)
+        return admitted
+
+    # -- eviction -----------------------------------------------------------
+
+    def finish(self, st: RequestState, clock_ms: float) -> None:
+        assert st.slot in self.running and self.running[st.slot] is st
+        del self.running[st.slot]
+        self.free_slots.append(st.slot)
+        if self.kv_cache is not None:
+            self.kv_cache.free_slot(st.slot)
+        # the scheduler deliberately keeps no reference to finished
+        # states (a server runs for ever); callers that need completion
+        # records collect the states step()/finish() hand back
+        st.status = Status.FINISHED
+        st.finished_ms = clock_ms
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def prefilling(self) -> Optional[RequestState]:
+        """The request currently being chunk-prefilled (FCFS: at most the
+        single earliest-admitted PREFILL request makes progress per step)."""
+        cands = [st for st in self.running.values() if st.status is Status.PREFILL]
+        return min(cands, key=lambda s: s.admit_seq) if cands else None
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def next_arrival_ms(self) -> Optional[float]:
+        return self.waiting[0].request.arrival_ms if self.waiting else None
+
+    def check_conservation(self) -> None:
+        """Slot/block invariants: every slot is exactly free or running,
+        and the block allocator accounts for every block exactly once."""
+        assert len(self.free_slots) + len(self.running) == self.max_slots
+        assert set(self.free_slots).isdisjoint(self.running.keys())
+        if self.kv_cache is not None:
+            self.kv_cache.allocator.check_conservation()

@@ -1,0 +1,143 @@
+"""Request traces: JSONL loading, synthetic Poisson generation, and a
+static-batching trace runner for comparison against the continuous engine.
+
+Trace format (one JSON object per line):
+
+    {"prompt_len": 24, "gen_len": 48, "arrival_ms": 130.5}
+
+Prompt *contents* are synthesized deterministically from the request uid
+(serving cost does not depend on token values), so a trace file carries
+only shapes and timing — easy to share, easy to generate.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+def _prompt_tokens(uid: int, prompt_len: int, vocab_size: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed * 100003 + uid)
+    return rng.integers(0, vocab_size, size=prompt_len, dtype=np.int64).astype(np.int32)
+
+
+def load_trace(path: str, vocab_size: int, seed: int = 0) -> List[Request]:
+    reqs = []
+    with open(path) as f:
+        for uid, line in enumerate(l for l in f if l.strip()):
+            d = json.loads(line)
+            reqs.append(Request(
+                uid=uid,
+                prompt=_prompt_tokens(uid, int(d["prompt_len"]), vocab_size, seed),
+                max_new_tokens=int(d["gen_len"]),
+                arrival_ms=float(d.get("arrival_ms", 0.0))))
+    # the scheduler queue is FCFS in list order: an out-of-order trace
+    # file must not let a late arrival block (or fast-forward past) an
+    # earlier one
+    reqs.sort(key=lambda r: (r.arrival_ms, r.uid))
+    return reqs
+
+
+def synthetic_trace(num_requests: int, vocab_size: int, *, seed: int = 0,
+                    qps: float = 50.0, prompt_lens: Tuple[int, int] = (8, 48),
+                    gen_lens: Tuple[int, ...] = (4, 8, 16, 64),
+                    ) -> List[Request]:
+    """Poisson arrivals at ``qps``, uniform prompt lengths in
+    ``prompt_lens``, generation lengths drawn from the (deliberately
+    long-tailed) ``gen_lens`` choices — the mixed-length workload where
+    static lockstep batching pays the whole batch for its longest member.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1000.0 / qps, size=num_requests))
+    reqs = []
+    for uid in range(num_requests):
+        p = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        g = int(rng.choice(gen_lens))
+        reqs.append(Request(
+            uid=uid, prompt=_prompt_tokens(uid, p, vocab_size, seed),
+            max_new_tokens=g, arrival_ms=float(arrivals[uid])))
+    return reqs
+
+
+def save_trace(path: str, requests: List[Request]) -> None:
+    with open(path, "w") as f:
+        for r in requests:
+            f.write(json.dumps({"prompt_len": r.prompt_len,
+                                "gen_len": r.max_new_tokens,
+                                "arrival_ms": r.arrival_ms}) + "\n")
+
+
+def static_max_len(requests: List[Request]) -> int:
+    """Cache bound for serving ``requests`` with the lockstep engine: a
+    group can pair the longest *prompt* with another request's longest
+    *gen* (dynamic_update_slice would silently clamp past a smaller
+    cache)."""
+    return (max(r.prompt_len for r in requests)
+            + max(r.max_new_tokens for r in requests) + 1)
+
+
+def latency_stats(lats: List[float], total_ms: float, generated: int
+                  ) -> Dict[str, float]:
+    """Shared serving metrics: one definition so the static and
+    continuous engines' reported numbers stay comparable."""
+    lats = sorted(lats)
+    return {
+        "total_ms": total_ms,
+        "generated_tokens": float(generated),
+        "generated_tokens_per_s": generated / max(total_ms / 1e3, 1e-9),
+        "p50_ms": lats[len(lats) // 2] if lats else 0.0,
+        "p95_ms": lats[min(int(len(lats) * 0.95), len(lats) - 1)] if lats else 0.0,
+    }
+
+
+def run_trace_static(engine, requests: List[Request], batch: int, *,
+                     temperature: float = 0.0, seed: int = 0
+                     ) -> Tuple[Dict[int, List[int]], Dict[str, float]]:
+    """Serve a trace with the lockstep :class:`ServingEngine`: FCFS
+    groups of ``batch``, prompts right-padded to the group's longest,
+    every request generating the group's *longest* ``gen_len`` (lockstep
+    batching cannot stop per-request — that waste is the baseline the
+    continuous engine removes).  Only each request's first ``gen_len``
+    tokens count as useful output.  Latency clock: wall time since call,
+    fast-forwarded to a group's last arrival when the server is idle.
+    """
+    import time
+
+    need = static_max_len(requests)
+    assert engine.max_len >= need, (
+        f"static engine max_len {engine.max_len} < worst-case group "
+        f"prompt+gen {need}")
+    t0 = time.perf_counter()
+    clock = 0.0
+    out: Dict[int, List[int]] = {}
+    lats: List[float] = []
+    order = sorted(requests, key=lambda r: (r.arrival_ms, r.uid))
+    useful = 0
+    for i in range(0, len(order), batch):
+        group = order[i:i + batch]
+        clock = max(clock, (time.perf_counter() - t0) * 1e3,
+                    max(r.arrival_ms for r in group))
+        S = max(r.prompt_len for r in group)
+        gen = max(r.max_new_tokens for r in group)
+        prompts = np.zeros((len(group), S), np.int32)
+        for j, r in enumerate(group):
+            prompts[j, :r.prompt_len] = r.prompt   # right-padded
+        toks, _ = engine.generate(prompts, gen, temperature=temperature,
+                                  seed=seed)
+        toks = np.asarray(toks)
+        clock = max(clock, (time.perf_counter() - t0) * 1e3)
+        for j, r in enumerate(group):
+            out[r.uid] = toks[j, :r.max_new_tokens].tolist()
+            useful += r.max_new_tokens
+            lats.append(clock - r.arrival_ms)
+    return out, latency_stats(lats, clock, useful)
+
+
+def latency_line(stats: Dict[str, float]) -> str:
+    return (f"{stats['generated_tokens']:.0f} tokens in "
+            f"{stats['total_ms'] / 1e3:.2f}s "
+            f"({stats['generated_tokens_per_s']:.1f} tok/s), "
+            f"latency p50 {stats['p50_ms']:.0f}ms p95 {stats['p95_ms']:.0f}ms")
