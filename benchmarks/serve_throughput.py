@@ -1,4 +1,5 @@
-"""Static vs. continuous batching on a mixed-length request trace.
+"""Static vs. continuous batching on a mixed-length request trace, plus
+the speculative-decoding sweep.
 
 The static engine pays lockstep: every batch member decodes until the
 batch's *longest* generation finishes, so a long-tailed gen-length mix
@@ -7,8 +8,17 @@ completion and refills the slot from the queue.  Same model, same
 requests, same useful-token count — the artifact records tokens/s and
 latency percentiles for both.
 
+The speculative sweep then runs the continuous engine speculative
+off / ngram-drafter / model-drafter on the same synthetic mixed-length
+trace (greedy, so every cell is token-identical by construction),
+recording acceptance rate, mean emitted tokens per verify step and the
+throughput speedup over non-speculative continuous batching.  Every
+speculative run re-asserts slot/block/reservation conservation after
+*every* engine step (``check_invariants=True``).
+
   PYTHONPATH=src python benchmarks/serve_throughput.py
   -> experiments/BENCH_serve_throughput.json
+  -> experiments/BENCH_spec_decode.json
 """
 from __future__ import annotations
 
@@ -18,11 +28,13 @@ import os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
+import dataclasses
+
 import jax
 import numpy as np
 
 from common import bench_config, save_result
-from repro.configs.base import ServeConfig
+from repro.configs.base import ServeConfig, SpecConfig
 from repro.models.registry import get_family
 from repro.nn import init
 from repro.serving.continuous import ContinuousEngine
@@ -33,6 +45,49 @@ MAX_SLOTS = 4
 TRACE_KW = dict(seed=0, qps=1e6,                # saturated: measure batching, not arrivals
                 prompt_lens=(8, 24),
                 gen_lens=(8, 8, 8, 64))         # long tail: lockstep's worst case
+SPEC_GAMMA = 4
+
+
+def spec_sweep(cfg, params, requests, serve: ServeConfig):
+    """Speculative off / ngram / model on one trace; greedy throughout,
+    so outputs are token-identical across cells (asserted).
+
+    The sweep serves with the ``dropless`` dispatcher: token-identity
+    needs batch-composition-invariant routing, and a finite
+    capacity_factor computes per-expert capacity from the row count —
+    which differs between decode (max_slots rows) and verify
+    (max_slots*(gamma+1) rows) steps, so capacity-limited cells could
+    legitimately diverge (see docs/serving.md).  Same params either
+    way: dispatchers are execution backends, not parameters."""
+    cfg = cfg.replace_moe(impl="dropless", capacity_factor=None)
+    # a deliberately tiny draft model (shared vocab, ~1/4 the target's
+    # width): what the "model" drafter buys depends entirely on how well
+    # it predicts the target — with both randomly initialised they
+    # disagree, so this cell is the honest floor (the ngram cell needs
+    # no such luck: it drafts from the slot's own context)
+    dcfg = cfg.replace(name="draft", num_layers=1, d_model=32, d_ff=64,
+                       num_heads=2, num_kv_heads=2,
+                       moe=dataclasses.replace(cfg.moe, num_experts=0))
+    dparams = init(get_family(dcfg).specs(dcfg), jax.random.PRNGKey(7))
+    cells = {
+        "off": (None, None),
+        "ngram": (SpecConfig(drafter="ngram", gamma=SPEC_GAMMA), None),
+        "model": (SpecConfig(drafter="model", gamma=SPEC_GAMMA), (dcfg, dparams)),
+    }
+    results, outs = {}, {}
+    for name, (spec, draft_model) in cells.items():
+        sv = dataclasses.replace(serve, spec=spec)
+        eng = ContinuousEngine(cfg, params, sv, draft_model=draft_model,
+                               check_invariants=True)
+        eng.run(requests)                       # warmup/compile
+        outs[name], stats = eng.run(requests)
+        results[name] = stats
+    for name in ("ngram", "model"):             # greedy => identical outputs
+        assert outs[name] == outs["off"], f"{name} diverged from baseline"
+        results[name]["speedup_vs_off"] = (
+            results[name]["generated_tokens_per_s"]
+            / results["off"]["generated_tokens_per_s"])
+    return results
 
 
 def main():
@@ -69,6 +124,21 @@ def main():
           f"p50 {c['p50_ms']:.0f}ms p95 {c['p95_ms']:.0f}ms "
           f"({results['speedup_tokens_per_s']:.2f}x)")
     path = save_result("BENCH_serve_throughput", results)
+    print("wrote", path)
+
+    # -- speculative decoding sweep (same trace, continuous engine) --------
+    spec_results = {
+        "trace": results["trace"],
+        "gamma": SPEC_GAMMA,
+        "cells": spec_sweep(cfg, params, requests, serve),
+    }
+    for name in ("ngram", "model"):
+        c = spec_results["cells"][name]
+        print(f"spec[{name}]: {c['generated_tokens_per_s']:.1f} tok/s "
+              f"({c['speedup_vs_off']:.2f}x), acceptance "
+              f"{c['acceptance_rate']:.2f}, "
+              f"{c['spec_tokens_per_step']:.2f} tok/verify-step")
+    path = save_result("BENCH_spec_decode", spec_results)
     print("wrote", path)
 
 

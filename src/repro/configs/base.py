@@ -192,6 +192,43 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding (``repro.serving.speculative``).
+
+    A drafter proposes up to ``gamma`` cheap continuation tokens per
+    decode slot; the engine then scores all ``gamma + 1`` positions in a
+    single verify step (they are ordinary prefill-chunk-style rows) and
+    accepts a prefix of the drafts under the greedy / rejection-sampling
+    rule — temperature 0 stays token-identical to non-speculative
+    decoding, temperature > 0 preserves the target distribution.
+    """
+
+    # Drafter: a key into the repro.serving.speculative registry.
+    # Built-ins: "ngram" (prompt-lookup self-drafting from the slot's own
+    # prompt + generated context, no extra params) and "model" (a small
+    # draft model sharing the target's vocab).
+    drafter: str = "ngram"
+    gamma: int = 4               # max draft tokens per slot per verify step
+    # Registered config id (configs/registry ALL_IDS) for the "model"
+    # drafter's draft model; smoke-sized at serve time.  Tests and
+    # benchmarks may instead hand the engine a (cfg, params) pair.
+    draft: Optional[str] = None
+    max_ngram: int = 3           # longest context suffix the ngram drafter matches
+
+    def __post_init__(self):
+        if self.gamma < 1:
+            raise ValueError("SpecConfig.gamma must be >= 1")
+        if self.max_ngram < 1:
+            raise ValueError("SpecConfig.max_ngram must be >= 1")
+        # Lazy import, mirroring MoEConfig's router/dispatcher checks:
+        # the drafter registry lives above configs in the layer graph and
+        # plugins must have a chance to register before validation.
+        from repro.serving.speculative import get_drafter_cls
+
+        get_drafter_cls(self.drafter)   # raises with the registry key list
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Continuous-batching serving shapes (``repro.serving.continuous``).
 
@@ -209,12 +246,20 @@ class ServeConfig:
     # (max_slots * ceil(max_len / kv_block_size)): admission can never
     # deadlock mid-flight.  Smaller pools exercise queueing on blocks.
     num_blocks: Optional[int] = None
+    # Speculative decoding; None => one token per slot per decode step.
+    spec: Optional[SpecConfig] = None
+    # Admission policy: a key into the repro.serving.scheduler registry
+    # ("fcfs" | "sjf" | "prefill_first").
+    sched_policy: str = "fcfs"
 
     def __post_init__(self):
         if self.max_slots < 1 or self.kv_block_size < 1 or self.prefill_chunk < 1:
             raise ValueError("max_slots, kv_block_size, prefill_chunk must be >= 1")
         if self.max_len < 2:
             raise ValueError("max_len must be >= 2 (one prompt + one generated)")
+        from repro.serving.scheduler import get_policy
+
+        get_policy(self.sched_policy)   # raises with the registry key list
 
     @property
     def blocks_per_slot(self) -> int:

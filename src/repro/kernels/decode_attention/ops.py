@@ -41,11 +41,13 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            block_tables: jax.Array,
                            lengths: jax.Array) -> jax.Array:
-    """q: (N, Hq, D) one query per row (decode slot or prefill-chunk
-    token); k_pool/v_pool: (P, Hkv, bs, D) shared block pool;
-    block_tables: (N, MB) int32 pool block ids covering each row's
-    context in order; lengths: (N,) valid context per row (0 => masked
-    row, output 0).  Returns (N, Hq, D).
+    """q: (N, Hq, D) one query per row (decode slot, prefill-chunk
+    token, or speculative verify row — rows are position-addressed, so
+    several rows of one slot at consecutive positions sharing a block
+    table are just more rows); k_pool/v_pool: (P, Hkv, bs, D) shared
+    block pool; block_tables: (N, MB) int32 pool block ids covering each
+    row's context in order; lengths: (N,) valid context per row (0 =>
+    masked row, output 0).  Returns (N, Hq, D).
 
     On TPU the Pallas kernel streams only the table-addressed pool
     blocks (no dense gather); elsewhere the pure-jnp gather reference

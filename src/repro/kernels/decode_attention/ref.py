@@ -27,7 +27,8 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
                                v_pool: jax.Array, block_tables: jax.Array,
                                lengths: jax.Array) -> jax.Array:
-    """q: (N, Hq, D) one query row per (slot | prefill-chunk) token;
+    """q: (N, Hq, D) one query row per (slot | prefill-chunk |
+    speculative-verify) token;
     k_pool/v_pool: (P, Hkv, bs, D) the shared block pool; block_tables:
     (N, MB) int32 pool block ids covering each row's context in order;
     lengths: (N,) valid context per row (0 => inactive row, output 0).

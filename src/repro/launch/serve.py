@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs.base import ServeConfig
+from repro.configs.base import ServeConfig, SpecConfig
 from repro.configs.registry import ALL_IDS, get_config, get_smoke_config
 from repro.models.registry import get_family
 from repro.nn import abstract, init as init_params
@@ -60,6 +60,25 @@ def main(argv=None):
     ap.add_argument("--kv-block", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
+    from repro.serving.scheduler import available_policies
+    ap.add_argument("--sched-policy", default="fcfs",
+                    choices=available_policies(),
+                    help="admission policy (fcfs | sjf | prefill_first)")
+    # speculative decoding (continuous engine only)
+    from repro.serving.speculative import available_drafters
+    ap.add_argument("--spec-drafter", default=None,
+                    choices=[None, *available_drafters()],
+                    help="enable speculative decoding with this drafter")
+    ap.add_argument("--spec-gamma", type=int, default=4,
+                    help="max draft tokens per slot per verify step")
+    ap.add_argument("--spec-draft", default=None, choices=[None, *ALL_IDS],
+                    help="draft model config id for --spec-drafter model "
+                         "(smoke-sized; must share the target vocab)")
+    ap.add_argument("--spec-draft-ckpt", default=None,
+                    help="checkpoint dir for the draft model's params "
+                         "(params-only restore; without it the draft model "
+                         "is randomly initialised, which costs — not buys — "
+                         "throughput)")
     from repro.core.dispatch import available_dispatchers
     ap.add_argument("--moe-impl", default=None,
                     choices=[None, *available_dispatchers()],
@@ -90,6 +109,29 @@ def main(argv=None):
             params = restored
             print(f"restored params-only from checkpoint step {step}")
 
+    spec = None
+    draft_model = None
+    if args.spec_drafter is not None:
+        if args.engine != "continuous":
+            raise SystemExit("--spec-drafter needs --engine continuous")
+        spec = SpecConfig(drafter=args.spec_drafter, gamma=args.spec_gamma,
+                          draft=args.spec_draft)
+        if args.spec_draft_ckpt:
+            if args.spec_drafter != "model":
+                raise SystemExit("--spec-draft-ckpt needs --spec-drafter model")
+            if args.spec_draft is None:
+                raise SystemExit("--spec-draft-ckpt needs --spec-draft")
+            dcfg = get_smoke_config(args.spec_draft) if args.smoke else (
+                get_config(args.spec_draft))
+            dparams = init_params(get_family(dcfg).specs(dcfg),
+                                  jax.random.PRNGKey(args.seed + 1))
+            restored, dstep = Checkpointer(args.spec_draft_ckpt) \
+                .restore_params_latest(abstract(get_family(dcfg).specs(dcfg)))
+            if restored is not None:
+                dparams = restored
+                print(f"restored draft params from checkpoint step {dstep}")
+            draft_model = (dcfg, dparams)
+
     trace_mode = args.trace is not None or args.requests > 0
 
     if not trace_mode:
@@ -106,10 +148,11 @@ def main(argv=None):
             serve = ServeConfig(max_slots=args.max_slots,
                                 kv_block_size=args.kv_block,
                                 prefill_chunk=args.prefill_chunk,
-                                max_len=max(args.max_len, max_len))
+                                max_len=max(args.max_len, max_len),
+                                spec=spec, sched_policy=args.sched_policy)
             engine = ContinuousEngine(cfg, params, serve,
                                       temperature=args.temperature,
-                                      seed=args.seed)
+                                      seed=args.seed, draft_model=draft_model)
             toks, stats = engine.generate(prompts, args.gen)
         print("generated:", np.asarray(toks)[:, :16])
         print({k: round(float(v), 4) for k, v in stats.items()})
@@ -136,9 +179,11 @@ def main(argv=None):
         serve = ServeConfig(max_slots=args.max_slots,
                             kv_block_size=args.kv_block,
                             prefill_chunk=args.prefill_chunk,
-                            max_len=max(args.max_len, longest))
+                            max_len=max(args.max_len, longest),
+                            spec=spec, sched_policy=args.sched_policy)
         engine = ContinuousEngine(cfg, params, serve,
-                                  temperature=args.temperature, seed=args.seed)
+                                  temperature=args.temperature, seed=args.seed,
+                                  draft_model=draft_model)
 
         def stream(st):
             head = st.generated[:8]
@@ -146,6 +191,10 @@ def main(argv=None):
                   f"latency {st.latency_ms():.0f}ms, first {head}")
 
         _, stats = engine.run(requests, on_finish=stream)
+        if spec is not None:
+            print(f"speculative[{spec.drafter}]: acceptance "
+                  f"{stats['acceptance_rate']:.2f}, "
+                  f"{stats['spec_tokens_per_step']:.2f} tokens/verify-step")
     print(latency_line(stats))
 
 

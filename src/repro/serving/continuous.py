@@ -1,13 +1,15 @@
 """Continuous-batching serving engine: mixed prefill/decode steps over a
-paged KV cache.
+paged KV cache, with optional speculative decoding.
 
 The static :class:`~repro.serving.engine.ServingEngine` runs one batch
 in lockstep: one prompt length, one generation length, the whole batch
 finishes together.  This engine instead keeps a fixed pool of
-``max_slots`` decode slots full: requests are admitted FCFS as slots and
-KV blocks free up, prompts are ingested in ``prefill_chunk``-token
-chunks *interleaved with* one decode step for every active slot, and
-finished requests are evicted immediately so their slot is refilled.
+``max_slots`` decode slots full: requests are admitted as slots and KV
+blocks free up (admission policy pluggable — see
+``repro.serving.scheduler``), prompts are ingested in
+``prefill_chunk``-token chunks *interleaved with* one decode step for
+every active slot, and finished requests are evicted immediately so
+their slot is refilled.
 
 Every engine step is one call of a jit'd function of **static shape**:
 
@@ -27,16 +29,43 @@ prefill and decode share one kernel and one compiled step.  Requests
 entering/leaving only change *values* (tables, lengths, tokens), never
 shapes: no recompilation as traffic churns.
 
-Per-row absolute positions and token ids ride to the MoE layers through
-:class:`~repro.core.context.MoEContext`, so hash/content routing stays
-correct under slot reuse (a reused slot's rows carry the new request's
-identity, not the previous occupant's).
+**Speculative decoding** (``ServeConfig.spec``) multiplies decode
+throughput by making tokens-per-slot-per-step variable while the step
+stays static-shape.  When no request is mid-prefill, the engine runs a
+*verify* step instead of a decode step: a drafter
+(``repro.serving.speculative``) proposes up to ``gamma`` continuation
+tokens per slot, and the step scores ``gamma + 1`` rows per slot —
+row ``j`` is exactly a prefill-chunk-style row (token ``j`` of the
+draft at absolute position ``c + j``), so the verify variant reuses the
+mixed-step machinery unchanged, per-row positions/token ids threading
+through :class:`~repro.core.context.MoEContext` exactly as chunk rows
+do.  The acceptance rule (``speculative.accept``) emits the accepted
+draft prefix plus one bonus token: temperature 0 is token-identical to
+non-speculative decoding, temperature > 0 preserves the target
+distribution.  (Token-identity assumes batch-composition-invariant
+routing — dense FFN or dropless dispatch; a finite ``capacity_factor``
+derives per-expert capacity from the row count, which differs between
+the decode and verify step shapes, so capacity-limited MoE dispatch can
+drop differently across them — the same caveat non-speculative
+continuous serving already carries vs the static engine.)  Rejected draft positions are undone by
+``PagedKVCache.truncate_slot`` — a pure length rewind through the block
+table, over-allocated blocks back on the free list, no copying.  The
+compiled-variant census stays tiny: the two existing shapes plus one
+verify shape (``rows = max_slots * (gamma + 1)``), still zero
+recompiles as traffic churns.
+
+Temperature > 0 sampling uses a **per-row key** folded from the fixed
+engine key, the row's slot and its absolute position: samples are
+independent across slots and reproducible under slot reuse (a replayed
+trace samples identically however admission interleaves).
 
 Recurrent families (xlstm) keep O(1) state keyed by slot: every step is
 a decode step of shape ``(max_slots, 1)``; "prefill" feeds prompt tokens
 one per step into the slot's state, which is zero-reset at admission.
-Hybrid zamba (shared-attention cache with a single batch-wide length
-scalar) and encdec (per-request encoder memory) are not supported yet.
+Speculative mode requires the paged cache (recurrent slot states have
+no cheap rollback).  Hybrid zamba (shared-attention cache with a single
+batch-wide length scalar) and encdec (per-request encoder memory) are
+not supported yet.
 """
 from __future__ import annotations
 
@@ -59,13 +88,15 @@ from repro.models.transformer import _is_moe_layer
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState, Status
 from repro.serving.scheduler import Scheduler
+from repro.serving.speculative.accept import accept_greedy_ids, accept_rejection
+from repro.serving.speculative.base import DraftItem
 
 _PAGED_FAMILIES = ("decoder_lm", "vlm", "m6")
 _RECURRENT_FAMILIES = ("xlstm",)
 
 
 # ---------------------------------------------------------------------------
-# Paged transformer forward (one mixed prefill/decode step)
+# Paged transformer forward (one mixed prefill/decode/verify step)
 # ---------------------------------------------------------------------------
 
 def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
@@ -97,12 +128,13 @@ def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
     return x, kp, vp
 
 
-def _paged_forward(params, cfg: ModelConfig, tokens, ctx_ids, positions,
-                   lengths, row_tables, wb, wo, k_pools, v_pools, *,
-                   temperature: float, key):
-    """Flat-row step: embed -> blocks (scan or unrolled) -> sample.
+def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
+                  lengths, row_tables, wb, wo, k_pools, v_pools):
+    """Flat-row forward: embed -> blocks (scan or unrolled) -> logits.
 
-    Returns (next_token per row (N,), new k_pools, new v_pools)."""
+    Returns (float32 logits (N, V), new k_pools, new v_pools).  Shared
+    by the decode/mixed step (which samples on top) and the speculative
+    verify step (which ships the logits to the host acceptance rule)."""
     x = L.embedding_apply(params["embed"], tokens[None], cfg)   # (1, N, d)
     pos2 = positions[None]
     if cfg.pos_embed == "learned":
@@ -138,12 +170,47 @@ def _paged_forward(params, cfg: ModelConfig, tokens, ctx_ids, positions,
     x = L.norm_apply(params["final_norm"], x, cfg)
     unembed = params.get("unembed", params["embed"])
     logits = L.unembed_apply(unembed, x, cfg)[0].astype(jnp.float32)  # (N, V)
+    return logits, k_pools, v_pools
+
+
+def _row_buffers(N: int, blocks_per_slot: int, garbage_block: int):
+    """Host-side flat-row operands for one step, every row masked: token 0,
+    no identity, length 0, writes into the garbage block."""
+    return dict(
+        tokens=np.zeros(N, np.int32),
+        ctx_ids=np.full(N, -1, np.int32),
+        positions=np.zeros(N, np.int32),
+        lengths=np.zeros(N, np.int32),
+        slots=np.zeros(N, np.int32),
+        wb=np.full(N, garbage_block, np.int32),
+        wo=np.zeros(N, np.int32),
+        row_tables=np.full((N, blocks_per_slot), garbage_block, np.int32),
+    )
+
+
+def _fill_row(b, cache, r: int, slot: int, token: int, pos: int) -> None:
+    """One live row: ``token`` of ``slot`` at absolute position ``pos``
+    (decode, prefill-chunk and verify rows all have this shape)."""
+    b["tokens"][r] = b["ctx_ids"][r] = token
+    b["positions"][r] = pos
+    b["lengths"][r] = pos + 1
+    b["slots"][r] = slot
+    b["wb"][r], b["wo"][r] = cache.write_coords(slot, pos)
+    b["row_tables"][r] = cache.block_table[slot]
+
+
+def _sample_rows(logits, slots, positions, *, temperature: float, key):
+    """Greedy argmax, or per-row categorical with a key folded from
+    (engine key, slot, absolute position): independent across slots,
+    reproducible under slot reuse."""
     if temperature <= 0.0:
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    else:
-        next_tok = jax.random.categorical(key, logits / temperature,
-                                          axis=-1).astype(jnp.int32)
-    return next_tok, k_pools, v_pools
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(lg, s, p):
+        k = jax.random.fold_in(jax.random.fold_in(key, s), p)
+        return jax.random.categorical(k, lg / temperature)
+
+    return jax.vmap(one)(logits, slots, positions).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -154,14 +221,20 @@ class ContinuousEngine:
     """Continuous-batching engine over a fixed slot pool.
 
     ``temperature`` is engine-level (0 = greedy, matching the static
-    engine's sampling math token for token).  Drive it either with
+    engine's sampling math token for token).  ``serve.spec`` switches on
+    speculative decoding; ``draft_model=(cfg, params)`` optionally hands
+    the ``model`` drafter an explicit draft model.  Drive it either with
     :meth:`run` (trace of :class:`Request`, virtual clock, per-request
     latencies) or the batch-parity convenience :meth:`generate`.
+    ``check_invariants=True`` re-asserts slot/block/reservation
+    conservation after every step (tests, benchmarks, paranoid prod).
     """
 
     def __init__(self, cfg: ModelConfig, params, serve: ServeConfig = ServeConfig(),
                  *, temperature: float = 0.0, seed: int = 0,
-                 rules: Optional[Rules] = None):
+                 rules: Optional[Rules] = None,
+                 draft_model: Optional[Tuple] = None,
+                 check_invariants: bool = False):
         if cfg.family in _PAGED_FAMILIES:
             self.mode = "paged"
             if cfg.attn_logit_softcap > 0:
@@ -183,43 +256,77 @@ class ContinuousEngine:
         self.serve = serve
         self.temperature = float(temperature)
         self.rules = rules
-        self._key = jax.random.PRNGKey(seed)
+        self.seed = seed
+        self._key = jax.random.PRNGKey(seed)   # fixed base key; per-row folds
         self.steps = 0
+        self.check_invariants = check_invariants
+
+        self.spec = serve.spec
+        self.drafter = None
+        self.spec_stats = {"verify_steps": 0, "proposed": 0, "accepted": 0,
+                           "emitted": 0}
+        if self.spec is not None:
+            if self.mode != "paged":
+                raise NotImplementedError(
+                    "speculative decoding needs the paged KV cache "
+                    "(recurrent slot states have no cheap rollback)")
+            from repro.serving.speculative import make_drafter
+
+            self.drafter = make_drafter(self.spec, cfg, serve, seed=seed,
+                                        draft_model=draft_model)
 
         if self.mode == "paged":
             self.cache: Optional[PagedKVCache] = PagedKVCache(cfg, serve)
-            self.scheduler = Scheduler(serve.max_slots, serve.max_len, self.cache)
+            self.scheduler = Scheduler(serve.max_slots, serve.max_len,
+                                       self.cache, policy=serve.sched_policy)
             temp = self.temperature
 
             def step_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
-                        lengths, row_tables, wb, wo, key):
+                        lengths, row_tables, wb, wo, slots, key):
                 with use_rules(rules):
-                    return _paged_forward(p, cfg, tokens, ctx_ids, positions,
-                                          lengths, row_tables, wb, wo,
-                                          k_pools, v_pools,
-                                          temperature=temp, key=key)
+                    logits, k_pools, v_pools = _paged_logits(
+                        p, cfg, tokens, ctx_ids, positions, lengths,
+                        row_tables, wb, wo, k_pools, v_pools)
+                    tok = _sample_rows(logits, slots, positions,
+                                       temperature=temp, key=key)
+                return tok, k_pools, v_pools
 
-            # Two static shapes only: N = max_slots (decode-only) and
-            # N = max_slots + prefill_chunk (mixed) — jit caches both.
+            # Static shapes only: N = max_slots (decode-only),
+            # N = max_slots + prefill_chunk (mixed), and — speculative —
+            # N = max_slots * (gamma + 1) (verify); jit caches each once.
             self._step_fn = jax.jit(step_fn, donate_argnums=(1, 2))
+
+            def verify_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
+                          lengths, row_tables, wb, wo):
+                with use_rules(rules):
+                    logits, k_pools, v_pools = _paged_logits(
+                        p, cfg, tokens, ctx_ids, positions, lengths,
+                        row_tables, wb, wo, k_pools, v_pools)
+                # greedy acceptance only compares token ids: ship N int32
+                # argmaxes, not the (N, V) logits matrix, to the host
+                if temp <= 0.0:
+                    return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                            k_pools, v_pools)
+                return logits, k_pools, v_pools
+
+            self._verify_fn = jax.jit(verify_fn, donate_argnums=(1, 2))
         else:
             self.cache = None
-            self.scheduler = Scheduler(serve.max_slots, serve.max_len, None)
+            self.scheduler = Scheduler(serve.max_slots, serve.max_len, None,
+                                       policy=serve.sched_policy)
             self._state = self.fam.init_state(cfg, serve.max_slots, serve.max_len)
             temp = self.temperature
             serve_ctx = MoEContext(is_training=False)
             fam = self.fam
+            S = serve.max_slots
 
-            def rec_step(p, state, tokens, key):
+            def rec_step(p, state, tokens, positions, key):
                 with use_rules(rules):
                     logits, new_state = fam.decode(p, tokens, state, cfg,
                                                    ctx=serve_ctx)
                 lg = logits[:, -1, :].astype(jnp.float32)
-                if temp <= 0.0:
-                    tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-                else:
-                    tok = jax.random.categorical(key, lg / temp,
-                                                 axis=-1).astype(jnp.int32)
+                tok = _sample_rows(lg, jnp.arange(S), positions,
+                                   temperature=temp, key=key)
                 return tok, new_state
 
             def reset_slot(state, slot):
@@ -232,23 +339,29 @@ class ContinuousEngine:
     # -- one engine step ----------------------------------------------------
 
     def step(self, clock_ms: float = 0.0) -> List[RequestState]:
-        """Admit, run one mixed prefill/decode step, process samples.
-        Returns the requests that finished during this step."""
+        """Admit, run one mixed prefill/decode (or speculative verify)
+        step, process samples.  Returns the requests that finished."""
         admitted = self.scheduler.admit(clock_ms)
         if self.mode == "recurrent":
             for st in admitted:
                 self._state = self._reset_fn(self._state, jnp.int32(st.slot))
         if not self.scheduler.running:
             return []
-        self._key, sub = jax.random.split(self._key)
         if self.mode == "paged":
-            finished = self._paged_host_step(sub, clock_ms)
+            # speculate only in decode-only steps: mid-prefill, the mixed
+            # step makes prompt progress and decode slots emit one token
+            if self.spec is not None and self.scheduler.prefilling is None:
+                finished = self._verify_host_step(clock_ms)
+            else:
+                finished = self._paged_host_step(clock_ms)
         else:
-            finished = self._recurrent_host_step(sub, clock_ms)
+            finished = self._recurrent_host_step(clock_ms)
         self.steps += 1
+        if self.check_invariants:
+            self.scheduler.check_conservation()
         return finished
 
-    def _paged_host_step(self, key, clock_ms: float) -> List[RequestState]:
+    def _paged_host_step(self, clock_ms: float) -> List[RequestState]:
         serve, cache, sched = self.serve, self.cache, self.scheduler
         S = serve.max_slots
         pre = sched.prefilling
@@ -257,43 +370,30 @@ class ContinuousEngine:
             chunk = min(serve.prefill_chunk,
                         pre.request.prompt_len - pre.prefill_pos)
         N = S + (serve.prefill_chunk if pre is not None else 0)
-
-        tokens = np.zeros(N, np.int32)
-        ctx_ids = np.full(N, -1, np.int32)
-        positions = np.zeros(N, np.int32)
-        lengths = np.zeros(N, np.int32)
-        wb = np.full(N, cache.garbage_block, np.int32)
-        wo = np.zeros(N, np.int32)
-        row_tables = np.full((N, serve.blocks_per_slot), cache.garbage_block,
-                             np.int32)
+        b = _row_buffers(N, serve.blocks_per_slot, cache.garbage_block)
         sample_rows: List[Tuple[int, RequestState]] = []
 
         for slot, st in sched.running.items():
             if st.status is not Status.DECODE:
                 continue
             pos = st.context_len
-            tokens[slot] = ctx_ids[slot] = st.last_token
-            positions[slot] = pos
-            lengths[slot] = pos + 1
-            wb[slot], wo[slot] = cache.write_coords(slot, pos)
-            row_tables[slot] = cache.block_table[st.slot]
+            cache.ensure_capacity(slot, pos + 1)
+            _fill_row(b, cache, slot, slot, st.last_token, pos)
             sample_rows.append((slot, st))
 
         if pre is not None:
             prompt = pre.request.prompt
+            cache.ensure_capacity(pre.slot, pre.prefill_pos + chunk)
             for j in range(chunk):
                 row, p = S + j, pre.prefill_pos + j
-                tokens[row] = ctx_ids[row] = prompt[p]
-                positions[row] = p
-                lengths[row] = p + 1
-                wb[row], wo[row] = cache.write_coords(pre.slot, p)
-                row_tables[row] = cache.block_table[pre.slot]
+                _fill_row(b, cache, row, pre.slot, prompt[p], p)
                 if p == pre.request.prompt_len - 1:
                     sample_rows.append((row, pre))
 
         next_tok, k_pools, v_pools = self._step_fn(
-            self.params, cache.k_pool, cache.v_pool, tokens, ctx_ids,
-            positions, lengths, row_tables, wb, wo, key)
+            self.params, cache.k_pool, cache.v_pool, b["tokens"],
+            b["ctx_ids"], b["positions"], b["lengths"], b["row_tables"],
+            b["wb"], b["wo"], b["slots"], self._key)
         cache.update_pools(k_pools, v_pools)
 
         if pre is not None:
@@ -302,14 +402,108 @@ class ContinuousEngine:
                 pre.status = Status.DECODE
         return self._collect_samples(np.asarray(next_tok), sample_rows, clock_ms)
 
-    def _recurrent_host_step(self, key, clock_ms: float) -> List[RequestState]:
+    # -- speculative verify step --------------------------------------------
+
+    def _host_rng(self, slot: int, position: int) -> np.random.Generator:
+        """Deterministic per-(slot, position) generator for host-side
+        acceptance sampling — the numpy twin of the on-device per-row
+        fold keys."""
+        return np.random.default_rng(
+            np.random.SeedSequence(entropy=[self.seed, slot, position]))
+
+    def _verify_host_step(self, clock_ms: float) -> List[RequestState]:
+        serve, cache, sched = self.serve, self.cache, self.scheduler
+        S, gamma = serve.max_slots, self.spec.gamma
+        W = gamma + 1
+        N = S * W
+
+        items: List[DraftItem] = []
+        for slot, st in sorted(sched.running.items()):
+            # remaining >= 1 in DECODE (a drained budget evicts); a draft
+            # never needs to run past it, and clamping keeps every draft
+            # KV write below total_len — inside the admission reservation
+            remaining = st.request.max_new_tokens - len(st.generated)
+            context = np.concatenate(
+                [st.request.prompt,
+                 np.asarray(st.generated, np.int32)]).astype(np.int32)
+            items.append(DraftItem(slot=slot, context=context,
+                                   max_tokens=min(gamma, remaining)))
+        proposals = self.drafter.propose(items)
+        drafts = [np.asarray(d, np.int32).reshape(-1)[:it.max_tokens]
+                  for it, d in zip(items, proposals)]
+        if all(d.size == 0 for d in drafts):
+            # nothing to verify anywhere: an ordinary decode step costs
+            # 1/(gamma+1) the rows for the same one token per slot (the
+            # decode-only shape is already in the compiled census)
+            return self._paged_host_step(clock_ms)
+
+        b = _row_buffers(N, serve.blocks_per_slot, cache.garbage_block)
+        per_slot: Dict[int, Tuple[RequestState, np.ndarray, int]] = {}
+        for it, d in zip(items, drafts):
+            slot = it.slot
+            st = sched.running[slot]
+            g = int(d.size)
+            c = st.context_len
+            cache.ensure_capacity(slot, c + g + 1)
+            row_toks = [st.last_token, *d.tolist()]
+            for j in range(g + 1):
+                _fill_row(b, cache, slot * W + j, slot, row_toks[j], c + j)
+            per_slot[slot] = (st, d, c)
+
+        scores, k_pools, v_pools = self._verify_fn(
+            self.params, cache.k_pool, cache.v_pool, b["tokens"],
+            b["ctx_ids"], b["positions"], b["lengths"], b["row_tables"],
+            b["wb"], b["wo"])
+        cache.update_pools(k_pools, v_pools)
+        scores = np.asarray(scores)     # (N,) argmax ids | (N, V) logits
+
+        finished = []
+        for slot, (st, d, c) in per_slot.items():
+            g = int(d.size)
+            rows = scores[slot * W: slot * W + g + 1]
+            if self.temperature <= 0.0:
+                emitted, n_acc = accept_greedy_ids(d, rows)
+            else:
+                emitted, n_acc = accept_rejection(
+                    d, rows, self.temperature,
+                    lambda j, slot=slot, c=c: self._host_rng(slot, c + j))
+            remaining = st.request.max_new_tokens - len(st.generated)
+            emitted = emitted[:remaining]
+            eos = st.request.eos_id
+            if eos is not None and eos in emitted:
+                emitted = emitted[:emitted.index(eos) + 1]
+            assert emitted, "verify step must emit at least the bonus token"
+            self.spec_stats["proposed"] += g
+            # accepted = draft tokens actually *used*: the EOS/budget cut
+            # can discard accepted drafts, which must not inflate the rate
+            self.spec_stats["accepted"] += min(len(emitted), n_acc)
+            st.generated.extend(int(t) for t in emitted)
+            if st.first_token_ms is None:
+                st.first_token_ms = clock_ms
+            self.spec_stats["emitted"] += len(emitted)
+            if st.done():
+                self.scheduler.finish(st, clock_ms)
+                finished.append(st)
+            else:
+                # rollback: positions [0, c + len(emitted)) stay written
+                # (row j wrote draft token j at position c + j, which for
+                # every kept row IS the fed-back token); rejected rows
+                # beyond rewind, their spill blocks return to the pool
+                cache.truncate_slot(slot, c + len(emitted))
+        self.spec_stats["verify_steps"] += 1
+        return finished
+
+    def _recurrent_host_step(self, clock_ms: float) -> List[RequestState]:
         S = self.serve.max_slots
         tokens = np.zeros((S, 1), np.int32)
+        positions = np.zeros(S, np.int32)
         sample_rows: List[Tuple[int, RequestState]] = []
         prefill_advanced: List[RequestState] = []
         for slot, st in self.scheduler.running.items():
+            positions[slot] = st.context_len
             if st.status is Status.PREFILL:
                 tokens[slot, 0] = st.request.prompt[st.prefill_pos]
+                positions[slot] = st.prefill_pos
                 prefill_advanced.append(st)
                 if st.prefill_pos + 1 == st.request.prompt_len:
                     sample_rows.append((slot, st))
@@ -318,7 +512,7 @@ class ContinuousEngine:
                 sample_rows.append((slot, st))
 
         next_tok, self._state = self._step_fn(self.params, self._state,
-                                              tokens, key)
+                                              tokens, positions, self._key)
         for st in prefill_advanced:
             st.prefill_pos += 1
             if st.prefill_pos == st.request.prompt_len:
@@ -350,6 +544,7 @@ class ContinuousEngine:
             self.scheduler.add(r)
         t0 = time.perf_counter()
         steps0 = self.steps
+        spec0 = dict(self.spec_stats)
         clock = 0.0
         done: List[RequestState] = []
         while self.scheduler.has_work():
@@ -370,6 +565,15 @@ class ContinuousEngine:
         stats = latency_stats([st.latency_ms() for st in done], total_ms,
                               sum(len(st.generated) for st in done))
         stats["steps"] = float(self.steps - steps0)
+        if self.spec is not None:
+            proposed = self.spec_stats["proposed"] - spec0["proposed"]
+            vsteps = self.spec_stats["verify_steps"] - spec0["verify_steps"]
+            stats["acceptance_rate"] = (
+                (self.spec_stats["accepted"] - spec0["accepted"])
+                / max(proposed, 1))
+            stats["spec_tokens_per_step"] = (
+                (self.spec_stats["emitted"] - spec0["emitted"])
+                / max(vsteps, 1))
         return {st.request.uid: list(st.generated) for st in done}, stats
 
     def generate(self, prompts: jax.Array, num_tokens: int, seed: int = 0):
@@ -377,7 +581,7 @@ class ContinuousEngine:
         t=0, each generating ``num_tokens``.  Returns ((B, num_tokens)
         int32, stats) — token-identical to ``ServingEngine.generate``
         under greedy decoding."""
-        del seed  # sampling key is engine-level; greedy needs none
+        del seed  # sampling keys are engine-level (slot/position folds)
         prompts = np.asarray(prompts)
         reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=num_tokens)
                 for i in range(prompts.shape[0])]

@@ -15,11 +15,26 @@ the table (:func:`repro.kernels.decode_attention.paged_decode_attention`),
 so blocks never need to be contiguous and freeing is defrag-free: a
 freed block goes back on the free list and can be handed to any slot.
 
+Blocks are **reserved** at admission but **allocated on demand**:
+:meth:`allocate_slot` records the request's worst-case footprint
+(``ceil(total_len / bs)`` blocks) against the pool without touching the
+free list, and :meth:`ensure_capacity` pulls physical blocks as the
+slot's written length actually grows.  Reservation accounting keeps the
+original no-mid-flight-starvation guarantee — admission only succeeds
+while ``sum(reserved) + new <= num_blocks``, so a running slot's growth
+can never find the free list empty — while on-demand allocation means a
+slot holds only the blocks behind its *current* length.  That is what
+makes speculative-decoding rollback cheap: rejected draft positions are
+undone by :meth:`truncate_slot`, which rewinds the slot's length and
+returns any block that no longer backs a written position to the free
+list (no copying — the table indirection already decouples logical
+position from storage).
+
 The allocator is host-side (plain Python): allocation happens at
-admission, outside jit, and only the table *contents* change shape-free
-between steps.  Pool layout is head-major ``(..., Hkv, bs, D)`` so the
-Pallas kernel DMAs contiguous ``(bs, D)`` tiles per (block, head) and
-the per-step write is a single advanced-index scatter.
+admission/growth, outside jit, and only the table *contents* change
+shape-free between steps.  Pool layout is head-major ``(..., Hkv, bs, D)``
+so the Pallas kernel DMAs contiguous ``(bs, D)`` tiles per (block, head)
+and the per-step write is a single advanced-index scatter.
 """
 from __future__ import annotations
 
@@ -45,6 +60,10 @@ class BlockAllocator:
     @property
     def free_count(self) -> int:
         return len(self._free)
+
+    @property
+    def allocated_count(self) -> int:
+        return len(self._allocated)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
@@ -73,12 +92,17 @@ class BlockAllocator:
 class PagedKVCache:
     """Device block pools + host block table for one model.
 
-    ``slot`` lifecycle: :meth:`allocate_slot` at admission reserves every
-    block the request can ever touch (``ceil(total_len / bs)``), so a
-    running request can never hit an out-of-blocks condition mid-flight;
-    :meth:`free_slot` at eviction returns them.  Stale pool contents need
-    no zeroing — attention masks by per-row length, and a reused block is
-    overwritten before the slot's length grows past it.
+    ``slot`` lifecycle: :meth:`allocate_slot` at admission *reserves*
+    every block the request can ever touch (``ceil(total_len / bs)``,
+    which bounds in-flight speculative draft positions too — the engine
+    clamps per-slot drafts to the remaining generation budget, so a
+    draft row never writes past ``total_len - 1``); :meth:`ensure_capacity`
+    allocates physical blocks as the written length grows;
+    :meth:`truncate_slot` rewinds it (speculative rollback);
+    :meth:`free_slot` at eviction returns blocks and reservation alike.
+    Stale pool contents need no zeroing — attention masks by per-row
+    length, and a reused position is overwritten before the slot's
+    length grows past it.
     """
 
     def __init__(self, cfg: ModelConfig, serve: ServeConfig):
@@ -99,28 +123,98 @@ class PagedKVCache:
         self.block_table = np.full((serve.max_slots, serve.blocks_per_slot),
                                    self.garbage_block, dtype=np.int32)
         self._slot_blocks: Dict[int, List[int]] = {}
+        self._slot_reserved: Dict[int, int] = {}      # worst-case block count
+        self.reserved_total = 0
 
     def blocks_needed(self, total_len: int) -> int:
         return -(-total_len // self.block_size)
 
     def can_allocate_slot(self, total_len: int) -> bool:
-        return self.allocator.can_alloc(self.blocks_needed(total_len))
+        """Admission gate: does the pool have unreserved room for this
+        request's worst-case footprint?  Gating on *reservations* (not
+        the free list) preserves the no-starvation invariant under
+        on-demand allocation: every admitted slot can always grow to its
+        reserved bound."""
+        return (self.reserved_total + self.blocks_needed(total_len)
+                <= self.num_blocks)
 
     def allocate_slot(self, slot: int, total_len: int) -> None:
-        assert slot not in self._slot_blocks, f"slot {slot} already allocated"
-        blocks = self.allocator.alloc(self.blocks_needed(total_len))
-        self._slot_blocks[slot] = blocks
+        assert slot not in self._slot_reserved, f"slot {slot} already allocated"
+        need = self.blocks_needed(total_len)
+        if self.reserved_total + need > self.num_blocks:
+            raise RuntimeError(
+                f"KV pool over-reserved: slot {slot} needs {need} blocks, "
+                f"{self.num_blocks - self.reserved_total} unreserved")
+        self._slot_reserved[slot] = need
+        self.reserved_total += need
+        self._slot_blocks[slot] = []
         self.block_table[slot, :] = self.garbage_block
-        self.block_table[slot, :len(blocks)] = blocks
 
     def free_slot(self, slot: int) -> None:
-        self.allocator.free(self._slot_blocks.pop(slot))
+        blocks = self._slot_blocks.pop(slot)
+        if blocks:
+            self.allocator.free(blocks)
+        self.reserved_total -= self._slot_reserved.pop(slot)
         self.block_table[slot, :] = self.garbage_block
+
+    def ensure_capacity(self, slot: int, length: int) -> None:
+        """Allocate any missing physical blocks so positions
+        ``[0, length)`` of ``slot`` are backed.  Never exceeds the
+        slot's admission-time reservation (the growth that reservation
+        guarantees can always be satisfied)."""
+        need = self.blocks_needed(length)
+        held = self._slot_blocks[slot]
+        assert need <= self._slot_reserved[slot], (
+            f"slot {slot}: length {length} needs {need} blocks, "
+            f"reserved only {self._slot_reserved[slot]}")
+        if need > len(held):
+            new = self.allocator.alloc(need - len(held))
+            self.block_table[slot, len(held):need] = new
+            held.extend(new)
+
+    def truncate_slot(self, slot: int, new_len: int) -> None:
+        """Speculative rollback: rewind ``slot`` so only positions
+        ``[0, new_len)`` are considered written.  Blocks past the new
+        length (over-allocated for rejected draft positions) return to
+        the free list; the reservation is untouched (the request is
+        still running and may grow back).  No data moves — the next
+        write at a rewound position simply overwrites stale K/V, which
+        per-row lengths already mask until then."""
+        keep = self.blocks_needed(new_len) if new_len > 0 else 0
+        held = self._slot_blocks[slot]
+        if keep < len(held):
+            self.allocator.free(held[keep:])
+            self.block_table[slot, keep:] = self.garbage_block
+            del held[keep:]
 
     def write_coords(self, slot: int, position: int) -> Tuple[int, int]:
         """Pool (block, offset) for logical ``position`` of ``slot``."""
         b, o = divmod(position, self.block_size)
         return int(self.block_table[slot, b]), o
+
+    def held_blocks(self, slot: int) -> int:
+        return len(self._slot_blocks.get(slot, ()))
+
+    def check_conservation(self) -> None:
+        """Allocator conservation plus reservation/table invariants:
+        held <= reserved per slot, total reservation within the pool,
+        and no table row dangles (entries beyond a slot's held blocks
+        point at the garbage block; entries within match its blocks)."""
+        self.allocator.check_conservation()
+        held_total = 0
+        for slot, blocks in self._slot_blocks.items():
+            held_total += len(blocks)
+            assert len(blocks) <= self._slot_reserved[slot], (slot, blocks)
+            assert list(self.block_table[slot, :len(blocks)]) == blocks
+            assert (self.block_table[slot, len(blocks):]
+                    == self.garbage_block).all()
+        assert held_total == self.allocator.allocated_count
+        assert self.reserved_total == sum(self._slot_reserved.values())
+        assert self.reserved_total <= self.num_blocks
+        # every slot with no state has an all-garbage table row
+        for slot in range(self.block_table.shape[0]):
+            if slot not in self._slot_blocks:
+                assert (self.block_table[slot] == self.garbage_block).all()
 
     def update_pools(self, k_pool: jax.Array, v_pool: jax.Array) -> None:
         """Adopt the step function's donated-output pools."""

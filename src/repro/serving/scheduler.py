@@ -1,12 +1,29 @@
-"""FCFS admission scheduler for the continuous-batching engine.
+"""Admission scheduling for the continuous-batching engine.
 
-The scheduler owns request lifecycle: a FIFO waiting queue, a fixed pool
-of ``max_slots`` decode slots, and (for paged transformer serving)
+The scheduler owns request lifecycle: a waiting queue, a fixed pool of
+``max_slots`` decode slots, and (for paged transformer serving)
 coordination with the :class:`~repro.serving.kv_cache.PagedKVCache`
-allocator.  Admission is strict FCFS — a request at the head that does
-not fit (no free slot, or not enough free KV blocks for its worst-case
-``prompt + max_new_tokens`` footprint) blocks everything behind it; no
-reordering means no starvation.
+allocator.  A request is admissible when a slot is free *and* the cache
+can reserve its worst-case KV-block footprint (``prompt_len +
+max_new_tokens``, which also bounds in-flight speculative draft
+positions — the engine clamps per-slot drafts to the remaining
+generation budget); reserving the full footprint at admission means a
+running request can never hit block starvation mid-flight.
+
+*Which* admissible request is admitted next is a pluggable
+**admission policy**, a registry keyed by ``ServeConfig.sched_policy``
+(mirroring the router/dispatcher/drafter registries):
+
+* ``fcfs`` (default) — strict arrival order; a head that does not fit
+  blocks everything behind it.  No reordering means no starvation.
+* ``sjf`` — shortest job first: among arrived requests that fit, admit
+  the one with the smallest worst-case footprint.  Lower mean latency
+  on mixed-length traffic; long requests can starve under sustained
+  short-request load (documented tradeoff).
+* ``prefill_first`` — first fit in arrival order: skip over a blocked
+  head to keep slots (and the prefill pipeline) busy; earliest-arrival
+  otherwise, so reordering only ever happens past a request that could
+  not have been admitted anyway.
 
 Eviction happens on EOS or on reaching ``max_new_tokens``; the slot and
 its blocks return to the free pools in the same step, so the next
@@ -15,23 +32,114 @@ whole point of continuous batching).
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
 
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState, Status
 
+# ---------------------------------------------------------------------------
+# Admission-policy registry
+# ---------------------------------------------------------------------------
+
+_POLICIES: Dict[str, "AdmissionPolicy"] = {}
+
+
+def register_policy(cls: Type) -> Type:
+    """Class decorator: instantiate and register a policy under cls.name."""
+    name = getattr(cls, "name", None)
+    if not name or not isinstance(name, str):
+        raise ValueError(f"policy class {cls!r} needs a string `name` attribute")
+    _POLICIES[name] = cls()
+    return cls
+
+
+def get_policy(name: str) -> "AdmissionPolicy":
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown admission policy {name!r}; registered policies: "
+            f"{', '.join(available_policies())}"
+        ) from None
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_POLICIES))
+
+
+class AdmissionPolicy:
+    """Picks the next request to admit.  ``pick`` sees the waiting list
+    (arrival order), the clock, and a fit predicate; it returns an index
+    into ``waiting`` or None when nothing should be admitted now.  The
+    scheduler calls it repeatedly until it declines or slots run out."""
+
+    name = "abstract"
+
+    def pick(self, waiting: Sequence[RequestState], clock_ms: float,
+             fits: Callable[[RequestState], bool]) -> Optional[int]:
+        raise NotImplementedError
+
+
+@register_policy
+class FCFSPolicy(AdmissionPolicy):
+    name = "fcfs"
+
+    def pick(self, waiting, clock_ms, fits):
+        if not waiting:
+            return None
+        head = waiting[0]
+        if head.request.arrival_ms > clock_ms or not fits(head):
+            return None
+        return 0
+
+
+@register_policy
+class SJFPolicy(AdmissionPolicy):
+    name = "sjf"
+
+    def pick(self, waiting, clock_ms, fits):
+        best: Optional[int] = None
+        for i, st in enumerate(waiting):
+            r = st.request
+            if r.arrival_ms > clock_ms or not fits(st):
+                continue
+            if best is None or ((r.total_len, r.arrival_ms, r.uid)
+                                < (waiting[best].request.total_len,
+                                   waiting[best].request.arrival_ms,
+                                   waiting[best].request.uid)):
+                best = i
+        return best
+
+
+@register_policy
+class PrefillFirstPolicy(AdmissionPolicy):
+    name = "prefill_first"
+
+    def pick(self, waiting, clock_ms, fits):
+        for i, st in enumerate(waiting):
+            if st.request.arrival_ms > clock_ms:
+                continue
+            if fits(st):
+                return i
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
 
 class Scheduler:
     def __init__(self, max_slots: int, max_len: int,
-                 kv_cache: Optional[PagedKVCache] = None):
+                 kv_cache: Optional[PagedKVCache] = None,
+                 policy: str = "fcfs"):
         self.max_slots = max_slots
         self.max_len = max_len
         self.kv_cache = kv_cache
-        self.waiting: Deque[RequestState] = deque()
+        self.policy = get_policy(policy)
+        self.waiting: List[RequestState] = []
         self.running: Dict[int, RequestState] = {}     # slot -> state
         self.free_slots: List[int] = list(range(max_slots - 1, -1, -1))
-        self._admit_seq = 0                            # FCFS tiebreaker
+        self._admit_seq = 0                            # admission-order tiebreaker
 
     # -- intake -------------------------------------------------------------
 
@@ -43,8 +151,8 @@ class Scheduler:
         if self.kv_cache is not None:
             need = self.kv_cache.blocks_needed(request.total_len)
             if need > self.kv_cache.allocator.num_blocks:
-                # would never fit even an empty pool: admission (FCFS,
-                # head blocks the queue) would spin for ever
+                # would never fit even an empty pool: admission would
+                # spin on it (fcfs) or skip it for ever (sjf/first-fit)
                 raise ValueError(
                     f"request {request.uid}: needs {need} KV blocks but the "
                     f"pool only has {self.kv_cache.allocator.num_blocks}")
@@ -54,18 +162,20 @@ class Scheduler:
 
     # -- admission ----------------------------------------------------------
 
+    def _fits(self, st: RequestState) -> bool:
+        return (self.kv_cache is None
+                or self.kv_cache.can_allocate_slot(st.request.total_len))
+
     def admit(self, clock_ms: float) -> List[RequestState]:
-        """Admit FCFS from the queue: arrived requests only, while a slot
-        (and, when paged, enough KV blocks) is available."""
+        """Admit from the queue under the configured policy: arrived
+        requests only, while a slot (and, when paged, an unreserved
+        worst-case KV footprint) is available."""
         admitted = []
-        while self.waiting and self.free_slots:
-            st = self.waiting[0]
-            if st.request.arrival_ms > clock_ms:
+        while self.free_slots:
+            idx = self.policy.pick(self.waiting, clock_ms, self._fits)
+            if idx is None:
                 break
-            if (self.kv_cache is not None
-                    and not self.kv_cache.can_allocate_slot(st.request.total_len)):
-                break
-            self.waiting.popleft()
+            st = self.waiting.pop(idx)
             slot = self.free_slots.pop()
             if self.kv_cache is not None:
                 self.kv_cache.allocate_slot(slot, st.request.total_len)
@@ -97,8 +207,9 @@ class Scheduler:
 
     @property
     def prefilling(self) -> Optional[RequestState]:
-        """The request currently being chunk-prefilled (FCFS: at most the
-        single earliest-admitted PREFILL request makes progress per step)."""
+        """The request currently being chunk-prefilled (at most the
+        single earliest-admitted PREFILL request makes progress per
+        step, whatever the admission policy)."""
         cands = [st for st in self.running.values() if st.status is Status.PREFILL]
         return min(cands, key=lambda s: s.admit_seq) if cands else None
 
@@ -106,12 +217,15 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     def next_arrival_ms(self) -> Optional[float]:
-        return self.waiting[0].request.arrival_ms if self.waiting else None
+        if not self.waiting:
+            return None
+        return min(st.request.arrival_ms for st in self.waiting)
 
     def check_conservation(self) -> None:
         """Slot/block invariants: every slot is exactly free or running,
-        and the block allocator accounts for every block exactly once."""
+        and the cache accounts for every block and reservation exactly
+        once (table rows never dangle)."""
         assert len(self.free_slots) + len(self.running) == self.max_slots
         assert set(self.free_slots).isdisjoint(self.running.keys())
         if self.kv_cache is not None:
-            self.kv_cache.allocator.check_conservation()
+            self.kv_cache.check_conservation()

@@ -1,0 +1,88 @@
+"""Pluggable speculative-decoding drafters.
+
+``SpecConfig.drafter`` is a key into this registry (mirroring the
+router / dispatcher / admission-policy registries).  Built-ins:
+
+* ``ngram`` — prompt-lookup self-drafting: propose the continuation of
+  the most recent earlier occurrence of the slot's current context
+  suffix (prompt + generated).  No parameters, no extra model — free
+  draft tokens wherever generation repeats its own context.
+* ``model`` — a small draft model (any registered config sharing the
+  target's vocab) proposes greedy continuations via a single jit'd
+  full-context forward of static shape ``(max_slots, max_len)``.
+
+A drafter only ever *proposes*; the engine scores all proposals through
+one verify step and the acceptance rule (``speculative.accept``) keeps
+greedy outputs token-identical to non-speculative decoding and
+temperature > 0 outputs distributed exactly as the target model.
+Drafters are therefore free to be wrong — a bad drafter costs
+throughput, never correctness.
+
+Adding a drafter::
+
+    from repro.serving.speculative import register_drafter
+
+    @register_drafter
+    class MyDrafter:
+        name = "mine"
+        def __init__(self, spec, target_cfg, serve, *, seed=0,
+                     draft_model=None): ...
+        def propose(self, items):  # List[DraftItem] -> List[np.ndarray]
+            ...
+
+Registration must happen before a ``SpecConfig(drafter="mine")`` is
+constructed (config validation consults this registry).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Type
+
+from repro.serving.speculative.base import Drafter, DraftItem  # noqa: F401
+
+_REGISTRY: Dict[str, Type] = {}
+
+
+def register_drafter(cls: Type) -> Type:
+    """Class decorator: register a Drafter class under cls.name.
+
+    Unlike routers (stateless singletons), drafters are stateful — the
+    model drafter owns params and jit caches — so the registry holds
+    *classes* and :func:`make_drafter` instantiates per engine."""
+    name = getattr(cls, "name", None)
+    if not name or not isinstance(name, str):
+        raise ValueError(f"drafter class {cls!r} needs a string `name` attribute")
+    _REGISTRY[name] = cls
+    return cls
+
+
+def get_drafter_cls(name: str) -> Type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown drafter {name!r}; registered drafters: "
+            f"{', '.join(available_drafters())}"
+        ) from None
+
+
+def available_drafters() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_drafter(spec, target_cfg, serve, *, seed: int = 0,
+                 draft_model: Optional[Tuple] = None) -> Drafter:
+    """Instantiate ``spec.drafter`` for one engine.  ``draft_model`` is
+    an optional ``(ModelConfig, params)`` override for the model drafter
+    (tests/benchmarks hand in tiny configs directly; ``SpecConfig.draft``
+    names a registered config otherwise)."""
+    return get_drafter_cls(spec.drafter)(spec, target_cfg, serve, seed=seed,
+                                         draft_model=draft_model)
+
+
+# Built-ins self-register on import.
+from repro.serving.speculative import model, ngram  # noqa: E402,F401
+
+__all__ = [
+    "Drafter", "DraftItem", "register_drafter", "get_drafter_cls",
+    "available_drafters", "make_drafter",
+]

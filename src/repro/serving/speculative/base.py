@@ -1,0 +1,51 @@
+"""Drafter contract for the speculative-decoding subsystem.
+
+A drafter proposes cheap continuation tokens for decode slots; the
+engine verifies all of them in one step (see
+``repro.serving.continuous``) and the acceptance rule
+(``speculative.accept``) guarantees correctness whatever the drafter
+proposes.  The contract is deliberately host-side and batch-oriented:
+
+* :meth:`Drafter.propose` receives one :class:`DraftItem` per
+  *speculating* decode slot — the slot id, the slot's full known
+  context (prompt + every generated token, including the newest sample
+  that has not yet been written to the KV cache), and the per-slot
+  draft budget (``gamma`` clamped to the request's remaining
+  generation budget, so draft KV writes never pass ``total_len - 1``
+  and the admission-time block reservation covers in-flight drafts).
+* It returns one int32 array per item, of length ``<= max_tokens``
+  (shorter — including empty — simply means less speculation for that
+  slot this step; the engine degrades to ordinary one-token decoding).
+* Proposals are *greedy/deterministic* draft tokens: acceptance treats
+  the draft distribution as a point mass, which keeps the
+  rejection-sampling rule exact for any drafter (a distribution-matched
+  draft sampler is a ROADMAP follow-on).
+
+Drafters may keep jit caches and params, but no per-request state: the
+context arrives fresh every call, so slot reuse and speculative
+rollback can never desynchronize a drafter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftItem:
+    """One speculating slot's view for a drafter."""
+
+    slot: int               # decode slot id (for drafters that key stats)
+    context: np.ndarray     # (L,) int32: prompt + all generated tokens
+    max_tokens: int         # draft budget for this slot this step (>= 1)
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    name: str
+
+    def propose(self, items: List[DraftItem]) -> List[np.ndarray]:
+        """Return up to ``item.max_tokens`` int32 draft tokens per item."""
+        ...

@@ -1,0 +1,106 @@
+"""Draft-model drafter: a small model proposes greedy continuations.
+
+The draft model is any registered config sharing the target's vocab
+(``SpecConfig.draft`` names it; tests and benchmarks may hand an
+explicit ``(cfg, params)`` pair instead).  Proposal runs as **one**
+jit'd function of static shape ``(max_slots, max_len)``: the slot
+contexts are right-padded into a token matrix and the draft model runs
+``gamma`` full causal forwards, each appending its argmax next token at
+the per-slot frontier.  Right padding is invisible under causal
+attention, so logits at the frontier are exact for any mix of context
+lengths — and because the drafter is *stateless* (the context arrives
+fresh every call), slot reuse and speculative rollback can never
+desynchronize it.  A KV-cached draft state (one forward per draft
+token instead of ``gamma`` full passes) is the ROADMAP follow-on; at
+serving scale the verify step dominates and the target-model step
+count, not drafter FLOPs, is what speculation buys down.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.context import MoEContext
+from repro.models.registry import get_family
+from repro.serving.speculative import register_drafter
+from repro.serving.speculative.base import DraftItem
+
+
+@register_drafter
+class ModelDrafter:
+    name = "model"
+
+    def __init__(self, spec, target_cfg, serve, *, seed: int = 0,
+                 draft_model: Optional[Tuple] = None):
+        if draft_model is not None:
+            dcfg, dparams = draft_model
+        else:
+            if spec.draft is None:
+                raise ValueError(
+                    "the model drafter needs SpecConfig.draft (a registered "
+                    "config id) or an explicit draft_model=(cfg, params)")
+            from repro.configs.registry import get_smoke_config
+
+            dcfg = get_smoke_config(spec.draft)
+            dparams = None
+        if dcfg.vocab_size != target_cfg.vocab_size:
+            raise ValueError(
+                f"draft model vocab {dcfg.vocab_size} != target vocab "
+                f"{target_cfg.vocab_size}: speculative decoding verifies "
+                f"draft token ids against target logits, the vocabs must "
+                f"be shared")
+        W = serve.max_len
+        if dcfg.max_seq_len < W:
+            dcfg = dcfg.replace(max_seq_len=W)
+        fam = get_family(dcfg)
+        if fam.prefill is None:
+            raise ValueError(
+                f"model drafter needs a full-forward (transformer-like) "
+                f"family, got {dcfg.family!r}")
+        if dparams is None:
+            from repro.nn import init as init_params
+
+            dparams = init_params(fam.specs(dcfg),
+                                  jax.random.PRNGKey(seed ^ 0x5BEC))
+        self.cfg = dcfg
+        self.params = dparams
+        gamma = spec.gamma
+        ctx = MoEContext(is_training=False)
+
+        def draft_fn(p, tokens, ctx_len):
+            # tokens: (S, W) right-padded contexts; ctx_len: (S,) valid
+            # lengths (0 = idle row).  gamma greedy continuations each.
+            outs = []
+            for i in range(gamma):
+                logits, _ = fam.forward(p, {"tokens": tokens}, dcfg, ctx=ctx)
+                idx = jnp.clip(ctx_len + i - 1, 0, W - 1)
+                lg = jnp.take_along_axis(
+                    logits.astype(jnp.float32), idx[:, None, None], axis=1)[:, 0]
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                outs.append(nxt)
+                # append at the frontier; columns >= W simply never match
+                # (draft budgets are clamped so accepted tokens always fit,
+                # the tail of an over-long draft is sliced off host-side)
+                col = ctx_len + i
+                tokens = jnp.where(jnp.arange(W)[None, :] == col[:, None],
+                                   nxt[:, None], tokens)
+            return jnp.stack(outs, axis=1)        # (S, gamma)
+
+        self._fn = jax.jit(draft_fn)
+        self._S, self._W = serve.max_slots, W
+
+    def propose(self, items: List[DraftItem]) -> List[np.ndarray]:
+        S, W = self._S, self._W
+        tokens = np.zeros((S, W), np.int32)
+        ctx_len = np.zeros(S, np.int32)
+        for i, it in enumerate(items):
+            c = np.asarray(it.context, np.int32).reshape(-1)[-W:]
+            tokens[i, :c.size] = c
+            ctx_len[i] = c.size
+        out = np.asarray(self._fn(self.params, jnp.asarray(tokens),
+                                  jnp.asarray(ctx_len)))
+        return [out[i, :it.max_tokens].astype(np.int32)
+                for i, it in enumerate(items)]

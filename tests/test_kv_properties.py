@@ -1,0 +1,174 @@
+"""Hypothesis property tests for BlockAllocator / PagedKVCache under
+interleaved allocate / grow / truncate / free sequences (the lifecycle
+speculative decoding exercises: admission reserves, decode grows,
+rejection rewinds, eviction frees).
+
+Invariants (see kv_cache.py):
+
+* conservation — free + allocated always equals ``num_blocks``, every
+  id accounted for exactly once, double-free raises;
+* reservation accounting — a slot never holds more blocks than its
+  admission-time reservation, total reservations never exceed the
+  pool (the no-mid-flight-starvation guarantee), and any growth within
+  a reservation succeeds;
+* table hygiene — a slot's block-table row mirrors its held blocks
+  exactly, everything beyond points at the garbage block (rows never
+  dangle into freed storage).
+
+Deterministic golden/edge-case tests live in test_speculative.py; this
+module explores the operation-sequence space around them, in the style
+of tests/test_plan_properties.py (plain ``check_*`` helpers drive the
+invariants so they stay runnable without the hypothesis dependency).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.serving.kv_cache import BlockAllocator, PagedKVCache
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def _cfg():
+    return ModelConfig(name="t", family="decoder_lm", num_layers=1,
+                       d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                       vocab_size=64, dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator: random alloc/free interleavings
+# ---------------------------------------------------------------------------
+
+def check_allocator_sequence(num_blocks, ops):
+    """ops: list of (kind, amount) with kind 0=alloc, 1=free-oldest,
+    2=free-newest.  The model below tracks live allocations; the
+    allocator must agree at every step and at the end."""
+    a = BlockAllocator(num_blocks)
+    live = []
+    for kind, amount in ops:
+        if kind == 0:
+            n = amount % (num_blocks + 2)
+            if a.can_alloc(n):
+                got = a.alloc(n)
+                assert len(got) == n and len(set(got)) == n
+                assert all(0 <= b < num_blocks for b in got)
+                # ids must not collide with anything still live
+                flat = {b for chunk in live for b in chunk}
+                assert not (set(got) & flat)
+                if got:            # empty chunks have no double-free to detect
+                    live.append(got)
+            else:
+                with pytest.raises(RuntimeError):
+                    a.alloc(n)
+        elif live:
+            chunk = live.pop(0 if kind == 1 else -1)
+            a.free(chunk)
+            with pytest.raises(RuntimeError):
+                a.free(chunk)               # double-free always detected
+        a.check_conservation()
+        assert a.free_count == num_blocks - sum(len(c) for c in live)
+    for chunk in live:
+        a.free(chunk)
+    a.check_conservation()
+    assert a.free_count == num_blocks
+
+
+@st.composite
+def allocator_cases(draw):
+    num_blocks = draw(st.integers(1, 24))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, 2), st.integers(0, 24)), max_size=40))
+    return num_blocks, ops
+
+
+@given(allocator_cases())
+@settings(**SETTINGS)
+def test_allocator_interleavings(case):
+    check_allocator_sequence(*case)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache: admission / growth / truncate / eviction interleavings
+# ---------------------------------------------------------------------------
+
+def check_cache_sequence(max_slots, bs, num_blocks, ops):
+    """ops: (kind, slot, amount); kind 0=allocate_slot, 1=ensure_capacity,
+    2=truncate_slot, 3=free_slot.  A host-side model of per-slot
+    (reserved_len, current_len) decides legality; the cache must accept
+    every legal op and keep its invariants after each one."""
+    serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
+                        max_len=max(num_blocks * bs, 2),
+                        num_blocks=num_blocks)
+    cache = PagedKVCache(_cfg(), serve)
+    model = {}                                  # slot -> [total_len, cur_len]
+
+    def reserved_blocks():
+        return sum(-(-t // bs) for t, _ in model.values())
+
+    for kind, slot, amount in ops:
+        slot = slot % max_slots
+        if kind == 0 and slot not in model:
+            total = 1 + amount % serve.max_len
+            if cache.can_allocate_slot(total):
+                cache.allocate_slot(slot, total)
+                model[slot] = [total, 0]
+                assert cache.held_blocks(slot) == 0
+            else:
+                assert reserved_blocks() + -(-total // bs) > num_blocks
+        elif kind == 1 and slot in model:
+            total, cur = model[slot]
+            length = min(1 + amount % serve.max_len, total)
+            cache.ensure_capacity(slot, length)
+            model[slot][1] = max(cur, length)
+            assert cache.held_blocks(slot) == -(-model[slot][1] // bs)
+        elif kind == 2 and slot in model:
+            total, cur = model[slot]
+            new_len = amount % (cur + 1)
+            cache.truncate_slot(slot, new_len)
+            model[slot][1] = new_len
+            assert cache.held_blocks(slot) == (
+                -(-new_len // bs) if new_len else 0)
+        elif kind == 3 and slot in model:
+            cache.free_slot(slot)
+            del model[slot]
+            assert (cache.block_table[slot] == cache.garbage_block).all()
+        cache.check_conservation()
+        assert cache.reserved_total == reserved_blocks()
+        assert cache.reserved_total <= num_blocks
+        held = sum(-(-cur // bs) for _, cur in model.values())
+        assert cache.allocator.free_count == num_blocks - held
+    for slot in list(model):
+        cache.free_slot(slot)
+    cache.check_conservation()
+    assert cache.allocator.free_count == num_blocks
+    assert cache.reserved_total == 0
+    assert (cache.block_table == cache.garbage_block).all()
+
+
+@st.composite
+def cache_cases(draw):
+    max_slots = draw(st.integers(1, 4))
+    bs = draw(st.sampled_from([1, 4, 8]))
+    num_blocks = draw(st.integers(1, 24))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(0, 256)),
+        max_size=50))
+    return max_slots, bs, num_blocks, ops
+
+
+@given(cache_cases())
+@settings(**SETTINGS)
+def test_cache_interleavings(case):
+    check_cache_sequence(*case)
+
+
+def test_cache_checkers_run_without_hypothesis():
+    """Fixed-grid drive of the check_* helpers (mirrors the
+    test_plan_properties.py convention)."""
+    check_allocator_sequence(8, [(0, 3), (0, 5), (1, 0), (0, 2), (2, 0)])
+    check_cache_sequence(2, 4, 8, [
+        (0, 0, 15), (1, 0, 10), (2, 0, 3), (1, 0, 15),
+        (0, 1, 12), (1, 1, 12), (3, 0, 0), (2, 1, 0), (3, 1, 0)])
