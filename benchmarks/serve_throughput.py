@@ -39,7 +39,12 @@ from repro.models.registry import get_family
 from repro.nn import init
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import ServingEngine
-from repro.serving.trace import run_trace_static, static_max_len, synthetic_trace
+from repro.serving.trace import (
+    run_trace_static,
+    static_max_len,
+    synthetic_multitenant,
+    synthetic_trace,
+)
 
 MAX_SLOTS = 4
 TRACE_KW = dict(seed=0, qps=1e6,                # saturated: measure batching, not arrivals
@@ -87,6 +92,58 @@ def spec_sweep(cfg, params, requests, serve: ServeConfig):
         results[name]["speedup_vs_off"] = (
             results[name]["generated_tokens_per_s"]
             / results["off"]["generated_tokens_per_s"])
+    return results
+
+
+def prefix_sweep(cfg, params):
+    """Prefix caching off / cold / warm on a saturated multi-tenant
+    trace over a deliberately block-starved pool (12 blocks; a request's
+    cold footprint is 5, its exclusive footprint once the 3-block tenant
+    system prompt is shared is 2 — so sharing admits more concurrent
+    requests, not just fewer prefill steps).  Greedy + dropless
+    dispatch, so all three cells are token-identical (asserted); every
+    cell re-asserts refcount/reservation conservation after every
+    engine step.
+
+    "cold" is the first serve of these tenants on a compiled engine
+    (within-trace live sharing only); "warm" re-serves the same trace
+    with the cache populated.  Compilation is paid beforehand on a
+    disjoint-tenant trace whose blocks cannot match this one."""
+    cfg = cfg.replace_moe(impl="dropless", capacity_factor=None)
+    trace_kw = dict(qps=1e6, num_tenants=2, system_prompt_len=48,
+                    suffix_lens=(2, 12), gen_lens=(4, 8, 16))
+    requests = synthetic_multitenant(16, cfg.vocab_size, seed=0, **trace_kw)
+    serve = ServeConfig(max_slots=MAX_SLOTS, kv_block_size=16,
+                        prefill_chunk=16, num_blocks=12,
+                        max_len=max(r.total_len for r in requests))
+
+    results = {"trace": {
+        "num_requests": len(requests), **trace_kw,
+        "num_blocks": serve.num_blocks,
+        "prompt_lens": [r.prompt_len for r in requests],
+        "gen_lens": [r.max_new_tokens for r in requests],
+    }}
+    outs = {}
+
+    eng_off = ContinuousEngine(cfg, params, serve, check_invariants=True)
+    eng_off.run(requests)                                  # warmup/compile
+    outs["off"], results["off"] = eng_off.run(requests)
+
+    sv = dataclasses.replace(serve, prefix_cache=True)
+    eng = ContinuousEngine(cfg, params, sv, check_invariants=True)
+    eng.run(synthetic_multitenant(16, cfg.vocab_size, seed=99, **trace_kw))
+    outs["cold"], results["cold"] = eng.run(requests)
+    outs["warm"], results["warm"] = eng.run(requests)
+    results["cache_stats"] = dict(eng.cache.stats)
+    eng.cache.check_conservation()
+
+    for name in ("cold", "warm"):
+        assert outs[name] == outs["off"], f"{name} diverged from baseline"
+        results[name]["speedup_vs_off"] = (
+            results[name]["generated_tokens_per_s"]
+            / results["off"]["generated_tokens_per_s"])
+    results["effective_capacity_multiplier"] = (
+        results["warm"]["peak_running"] / results["off"]["peak_running"])
     return results
 
 
@@ -139,6 +196,22 @@ def main():
               f"{c['acceptance_rate']:.2f}, "
               f"{c['spec_tokens_per_step']:.2f} tok/verify-step")
     path = save_result("BENCH_spec_decode", spec_results)
+    print("wrote", path)
+
+    # -- prefix caching sweep (multi-tenant trace, constrained pool) -------
+    pres = prefix_sweep(cfg, params)
+    for name in ("off", "cold", "warm"):
+        c = pres[name]
+        extra = ""
+        if name != "off":
+            extra = (f" ({c['speedup_vs_off']:.2f}x, "
+                     f"{c['cached_token_ratio']:.0%} prompt tokens cached)")
+        print(f"prefix[{name}]: {c['generated_tokens_per_s']:.1f} tok/s, "
+              f"p50 {c['p50_ms']:.0f}ms p95 {c['p95_ms']:.0f}ms, "
+              f"peak {c['peak_running']:.0f} running{extra}")
+    print(f"effective capacity multiplier "
+          f"{pres['effective_capacity_multiplier']:.2f}x")
+    path = save_result("BENCH_prefix_cache", pres)
     print("wrote", path)
 
 

@@ -251,6 +251,12 @@ class ServeConfig:
     # Admission policy: a key into the repro.serving.scheduler registry
     # ("fcfs" | "sjf" | "prefill_first").
     sched_policy: str = "fcfs"
+    # Block-level prefix caching (repro.serving.prefix_cache): requests
+    # whose prompt prefix hashes to already-resident KV blocks bind and
+    # share them (refcounted, copy-on-write), skip their prefill, and
+    # charge admission only the unshared footprint.  Default off keeps
+    # the exact PagedKVCache behaviour.
+    prefix_cache: bool = False
 
     def __post_init__(self):
         if self.max_slots < 1 or self.kv_block_size < 1 or self.prefill_chunk < 1:

@@ -32,6 +32,7 @@ from repro.serving.trace import (
     load_trace,
     run_trace_static,
     static_max_len,
+    synthetic_multitenant,
     synthetic_trace,
 )
 
@@ -55,6 +56,15 @@ def main(argv=None):
                          "switches to trace mode without --trace)")
     ap.add_argument("--qps", type=float, default=50.0,
                     help="synthetic trace Poisson arrival rate")
+    ap.add_argument("--trace-kind", default="mixed",
+                    choices=["mixed", "multitenant"],
+                    help="synthetic trace family: mixed-length Poisson, or "
+                         "multi-tenant shared-system-prompt (the workload "
+                         "--prefix-cache targets)")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="multitenant trace: number of distinct system prompts")
+    ap.add_argument("--system-prompt-len", type=int, default=48,
+                    help="multitenant trace: shared system-prompt length")
     # continuous-batching shapes
     ap.add_argument("--max-slots", type=int, default=8)
     ap.add_argument("--kv-block", type=int, default=16)
@@ -64,6 +74,10 @@ def main(argv=None):
     ap.add_argument("--sched-policy", default="fcfs",
                     choices=available_policies(),
                     help="admission policy (fcfs | sjf | prefill_first)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed block-level prefix caching: "
+                         "admission binds cached prompt-prefix blocks and "
+                         "skips their prefill (continuous engine only)")
     # speculative decoding (continuous engine only)
     from repro.serving.speculative import available_drafters
     ap.add_argument("--spec-drafter", default=None,
@@ -161,13 +175,18 @@ def main(argv=None):
     # trace-driven serving
     if args.trace is not None:
         requests = load_trace(args.trace, cfg.vocab_size, seed=args.seed)
+    elif args.trace_kind == "multitenant":
+        requests = synthetic_multitenant(
+            args.requests, cfg.vocab_size, seed=args.seed, qps=args.qps,
+            num_tenants=args.tenants,
+            system_prompt_len=args.system_prompt_len)
     else:
         requests = synthetic_trace(args.requests, cfg.vocab_size,
                                    seed=args.seed, qps=args.qps)
     longest = max(r.total_len for r in requests)
     static_len = static_max_len(requests)
     print(f"serving {len(requests)} requests "
-          f"({'trace ' + args.trace if args.trace else 'synthetic Poisson'}), "
+          f"({'trace ' + args.trace if args.trace else 'synthetic ' + args.trace_kind}), "
           f"engine={args.engine}")
 
     if args.engine == "static":
@@ -180,7 +199,8 @@ def main(argv=None):
                             kv_block_size=args.kv_block,
                             prefill_chunk=args.prefill_chunk,
                             max_len=max(args.max_len, longest),
-                            spec=spec, sched_policy=args.sched_policy)
+                            spec=spec, sched_policy=args.sched_policy,
+                            prefix_cache=args.prefix_cache)
         engine = ContinuousEngine(cfg, params, serve,
                                   temperature=args.temperature, seed=args.seed,
                                   draft_model=draft_model)
@@ -195,6 +215,15 @@ def main(argv=None):
             print(f"speculative[{spec.drafter}]: acceptance "
                   f"{stats['acceptance_rate']:.2f}, "
                   f"{stats['spec_tokens_per_step']:.2f} tokens/verify-step")
+        if args.prefix_cache:
+            cs = engine.cache.stats
+            print(f"prefix cache: {stats['cached_tokens']:.0f}/"
+                  f"{stats['prompt_tokens']:.0f} prompt tokens cached "
+                  f"({stats['cached_token_ratio']:.0%}), "
+                  f"{cs['bound_blocks']} blocks bound shared, "
+                  f"{cs['published_blocks']} published, "
+                  f"{cs['cow_copies']} COW copies, "
+                  f"{cs['evicted_blocks']} evicted")
     print(latency_line(stats))
 
 

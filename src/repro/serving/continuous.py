@@ -275,8 +275,19 @@ class ContinuousEngine:
             self.drafter = make_drafter(self.spec, cfg, serve, seed=seed,
                                         draft_model=draft_model)
 
+        if serve.prefix_cache and self.mode != "paged":
+            raise NotImplementedError(
+                "prefix caching needs the paged KV cache (recurrent slot "
+                "states are not content-addressable blocks)")
+
         if self.mode == "paged":
-            self.cache: Optional[PagedKVCache] = PagedKVCache(cfg, serve)
+            if serve.prefix_cache:
+                from repro.serving.prefix_cache import PrefixCachingKVCache
+
+                self.cache: Optional[PagedKVCache] = PrefixCachingKVCache(
+                    cfg, serve)
+            else:
+                self.cache = PagedKVCache(cfg, serve)
             self.scheduler = Scheduler(serve.max_slots, serve.max_len,
                                        self.cache, policy=serve.sched_policy)
             temp = self.temperature
@@ -400,7 +411,32 @@ class ContinuousEngine:
             pre.prefill_pos += chunk
             if pre.prefill_pos == pre.request.prompt_len:
                 pre.status = Status.DECODE
-        return self._collect_samples(np.asarray(next_tok), sample_rows, clock_ms)
+        finished = self._collect_samples(np.asarray(next_tok), sample_rows,
+                                         clock_ms)
+        self._commit_running()
+        return finished
+
+    def _commit_running(self) -> None:
+        """Prefix caching: confirm every still-running slot's written
+        token contents so newly full blocks publish into the index —
+        live publication is what lets *concurrent* requests of one
+        tenant share blocks, not just later arrivals.  (Slots that just
+        finished were committed by ``Scheduler.finish`` before their
+        blocks were released.)"""
+        if not self.serve.prefix_cache:
+            return
+        bs, cache = self.cache.block_size, self.cache
+        for slot, st in self.scheduler.running.items():
+            if st.status is Status.PREFILL:
+                written = st.prefill_pos
+                if written // bs > cache.committed_blocks(slot):
+                    cache.commit(slot, st.request.prompt[:written])
+            else:
+                written = st.request.prompt_len + len(st.generated) - 1
+                if written // bs > cache.committed_blocks(slot):
+                    cache.commit(slot, np.concatenate(
+                        [st.request.prompt,
+                         np.asarray(st.generated[:-1], np.int32)]))
 
     # -- speculative verify step --------------------------------------------
 
@@ -491,6 +527,7 @@ class ContinuousEngine:
                 # beyond rewind, their spill blocks return to the pool
                 cache.truncate_slot(slot, c + len(emitted))
         self.spec_stats["verify_steps"] += 1
+        self._commit_running()
         return finished
 
     def _recurrent_host_step(self, clock_ms: float) -> List[RequestState]:
@@ -547,13 +584,17 @@ class ContinuousEngine:
         spec0 = dict(self.spec_stats)
         clock = 0.0
         done: List[RequestState] = []
+        peak_running = 0
         while self.scheduler.has_work():
             clock = max(clock, (time.perf_counter() - t0) * 1e3)
             if not self.scheduler.running:
                 nxt = self.scheduler.next_arrival_ms()
                 if nxt is not None and nxt > clock:
                     clock = nxt                      # idle: jump to next arrival
-            for st in self.step(clock):
+            finished = self.step(clock)
+            peak_running = max(peak_running,
+                               len(self.scheduler.running) + len(finished))
+            for st in finished:
                 done.append(st)
                 if on_finish is not None:
                     on_finish(st)
@@ -565,6 +606,13 @@ class ContinuousEngine:
         stats = latency_stats([st.latency_ms() for st in done], total_ms,
                               sum(len(st.generated) for st in done))
         stats["steps"] = float(self.steps - steps0)
+        stats["peak_running"] = float(peak_running)
+        if self.serve.prefix_cache:
+            cached = sum(st.cached_tokens for st in done)
+            prompt = sum(st.request.prompt_len for st in done)
+            stats["cached_tokens"] = float(cached)
+            stats["prompt_tokens"] = float(prompt)
+            stats["cached_token_ratio"] = cached / max(prompt, 1)
         if self.spec is not None:
             proposed = self.spec_stats["proposed"] - spec0["proposed"]
             vsteps = self.spec_stats["verify_steps"] - spec0["verify_steps"]

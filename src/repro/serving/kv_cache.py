@@ -129,16 +129,22 @@ class PagedKVCache:
     def blocks_needed(self, total_len: int) -> int:
         return -(-total_len // self.block_size)
 
-    def can_allocate_slot(self, total_len: int) -> bool:
+    def can_allocate_slot(self, total_len: int, prompt=None) -> bool:
         """Admission gate: does the pool have unreserved room for this
         request's worst-case footprint?  Gating on *reservations* (not
         the free list) preserves the no-starvation invariant under
         on-demand allocation: every admitted slot can always grow to its
-        reserved bound."""
+        reserved bound.  ``prompt`` is ignored here; the prefix-caching
+        subclass matches it against cached blocks and charges only the
+        unshared footprint."""
         return (self.reserved_total + self.blocks_needed(total_len)
                 <= self.num_blocks)
 
-    def allocate_slot(self, slot: int, total_len: int) -> None:
+    def allocate_slot(self, slot: int, total_len: int, prompt=None) -> int:
+        """Reserve ``slot``'s worst-case footprint.  Returns the number
+        of prompt tokens already backed by cached KV blocks — always 0
+        here; ``PrefixCachingKVCache`` binds matched blocks and returns
+        how much prefill can be skipped."""
         assert slot not in self._slot_reserved, f"slot {slot} already allocated"
         need = self.blocks_needed(total_len)
         if self.reserved_total + need > self.num_blocks:
@@ -149,6 +155,12 @@ class PagedKVCache:
         self.reserved_total += need
         self._slot_blocks[slot] = []
         self.block_table[slot, :] = self.garbage_block
+        return 0
+
+    def commit(self, slot: int, tokens) -> None:
+        """Confirm the token contents behind ``slot``'s written
+        positions.  A no-op without prefix caching; the prefix-caching
+        subclass publishes newly full blocks into its content index."""
 
     def free_slot(self, slot: int) -> None:
         blocks = self._slot_blocks.pop(slot)

@@ -1,0 +1,556 @@
+"""Block-level prefix caching: content-addressed, refcounted,
+copy-on-write KV sharing for multi-tenant serving.
+
+Multi-tenant traffic is dominated by shared prompt *prefixes* — system
+prompts, few-shot templates, conversation history.  Serving in the
+paper's regime (outrageously many parameters, constant per-token
+compute) makes KV memory, not FLOPs, the binding constraint, so making
+identical prefixes share physical KV blocks multiplies effective pool
+capacity and turns prefill of a cached prefix into a block-table write.
+
+Three pieces, layered between :class:`~repro.serving.kv_cache.PagedKVCache`
+and the engine:
+
+* :class:`RefcountedBlockAllocator` — generalizes ``BlockAllocator``
+  with a per-block refcount (number of slot-table bindings), an owner
+  (the slot whose reservation the block is charged to, or ``None`` for
+  purely shared blocks), and a **cached-free list**: blocks whose
+  refcount hit 0 but whose contents are still bound in the
+  :class:`PrefixIndex` stay reusable, ordered LRU; allocation takes the
+  truly-free list first and evicts cached blocks (oldest first, via the
+  ``on_evict`` unbind callback) only under pressure.
+
+* :class:`PrefixIndex` — content addressing.  A block's identity is the
+  **chain hash** ``H(parent_hash, block_token_ids)`` over the *full*
+  block of tokens it holds K/V for, so a hash pins the entire prefix
+  from position 0 (absolute positions and therefore RoPE phases are
+  part of the identity by construction — block boundaries are
+  position-aligned).  The index is a bijection ``hash <-> physical
+  block``; matching a prompt walks it hash by hash from the root.
+
+* :class:`PrefixCachingKVCache` — the ``PagedKVCache`` subclass the
+  engine actually uses (``ServeConfig.prefix_cache=True``).  Admission
+  matches the request's prompt against the index and **binds** the
+  matched blocks straight into the slot's table (refcount + 1 each):
+  those positions are already-written context, prefill resumes at the
+  first uncached token, and admission charges only the *unshared*
+  footprint.  :meth:`commit` publishes a slot's newly *full* blocks of
+  confirmed tokens back into the index — during prefill/decode, not
+  just at eviction, so concurrent requests of the same tenant share
+  live blocks.  Copy-on-write is expressed entirely in the host-side
+  table/allocator layer: shared blocks are never write targets
+  (:meth:`write_coords` enforces it), and :meth:`truncate_slot` into a
+  shared or published block detaches the slot onto a fresh copy while
+  binders keep the original.
+
+Capacity accounting under sharing: each slot's reservation covers only
+the blocks it may need *exclusively* (``blocks_needed(total_len) -
+bound_blocks``); admission gates on ``reserved_total + live_shared +
+new`` against the pool, where ``live_shared`` counts distinct bound
+blocks charged to no reservation.  Under the engine's discipline
+(truncate never rewinds below the committed boundary, so a slot never
+detaches from a block another slot binds) this preserves the original
+no-mid-flight-starvation witness ``free + cached >=
+reserved_total - owned_total``, which :meth:`check_conservation`
+asserts.  A COW *detach* (possible through the raw cache API, exercised
+by the property tests, never by the engine) pins the original block
+outside every reservation; the strict witness is only asserted while no
+detach has occurred, and regrowth past a released shared region beyond
+the slot's exclusive reservation raises rather than silently starving
+another slot.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.serving.kv_cache import PagedKVCache
+
+ROOT_HASH = b""          # chain parent of the block at positions [0, bs)
+
+
+def chain_hash(parent: bytes, block_tokens: np.ndarray) -> bytes:
+    """Content identity of one full KV block: the tokens it covers plus
+    the identity of everything before it (a 128-bit blake2b keeps
+    accidental collisions — which would silently serve the wrong
+    prefix — out of reach)."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(parent)
+    h.update(np.ascontiguousarray(block_tokens, dtype=np.int32).tobytes())
+    return h.digest()
+
+
+class PrefixIndex:
+    """Bijection between chain hashes and physical block ids.
+
+    ``put`` is first-writer-wins: if the hash is already bound (another
+    slot published identical content earlier) the new block simply stays
+    unpublished — deduplicating by remapping would mean rewriting live
+    tables.  ``drop_block`` unbinds on eviction or content divergence.
+    """
+
+    def __init__(self):
+        self._block_of: Dict[bytes, int] = {}
+        self._hash_of: Dict[int, bytes] = {}
+
+    def __len__(self) -> int:
+        return len(self._block_of)
+
+    def get(self, h: bytes) -> Optional[int]:
+        return self._block_of.get(h)
+
+    def published(self, block: int) -> bool:
+        return block in self._hash_of
+
+    def put(self, h: bytes, block: int) -> bool:
+        """Bind ``hash -> block``; returns False when the hash is
+        already taken (the caller's block stays unpublished)."""
+        if h in self._block_of:
+            return False
+        assert block not in self._hash_of, (
+            f"block {block} already published under another hash")
+        self._block_of[h] = block
+        self._hash_of[block] = h
+        return True
+
+    def drop_block(self, block: int) -> None:
+        h = self._hash_of.pop(block)
+        del self._block_of[h]
+
+    def check_bijection(self) -> None:
+        assert len(self._block_of) == len(self._hash_of)
+        for h, b in self._block_of.items():
+            assert self._hash_of[b] == h
+
+
+class RefcountedBlockAllocator:
+    """Free-list allocator with per-block refcounts and an LRU
+    cached-free list.
+
+    Block states (every id in exactly one):
+
+    * **free** — unreferenced, contents meaningless.
+    * **cached** — refcount 0 but still published in the index; contents
+      valid and reusable by a future prefix match.  LRU-ordered;
+      evicted (via ``on_evict``, which must unpublish) only when the
+      free list runs dry.
+    * **live** — refcount > 0 (bound in that many slot tables).  A live
+      block optionally has an **owner**: the slot whose exclusive
+      reservation it is charged to.  Ownerless live blocks are *shared*
+      capacity pinned outside every reservation.
+    """
+
+    def __init__(self, num_blocks: int,
+                 on_evict: Optional[Callable[[int], None]] = None):
+        self.num_blocks = num_blocks
+        self.on_evict = on_evict
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # oldest first
+        self._ref: Dict[int, int] = {}
+        self._owner: Dict[int, Optional[int]] = {}
+        self.evicted_blocks = 0
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def cached_count(self) -> int:
+        return len(self._cached)
+
+    @property
+    def live_count(self) -> int:
+        return len(self._ref)
+
+    @property
+    def owned_count(self) -> int:
+        return sum(1 for o in self._owner.values() if o is not None)
+
+    @property
+    def live_shared(self) -> int:
+        """Live blocks charged to no reservation (purely shared)."""
+        return sum(1 for o in self._owner.values() if o is None)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def owner(self, block: int) -> Optional[int]:
+        return self._owner.get(block)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free) + len(self._cached)
+
+    def is_cached(self, block: int) -> bool:
+        return block in self._cached
+
+    # -- transitions --------------------------------------------------------
+
+    def alloc(self, n: int, owner: int) -> List[int]:
+        """Hand out ``n`` fresh exclusively-owned blocks (refcount 1,
+        charged to ``owner``), evicting LRU cached blocks if the free
+        list cannot cover the request."""
+        if not self.can_alloc(n):
+            raise RuntimeError(
+                f"KV pool exhausted: requested {n} blocks, "
+                f"{len(self._free)} free + {len(self._cached)} cached")
+        out: List[int] = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                b, _ = self._cached.popitem(last=False)   # LRU: oldest
+                if self.on_evict is not None:
+                    self.on_evict(b)                      # unpublish
+                self.evicted_blocks += 1
+            self._ref[b] = 1
+            self._owner[b] = owner
+            out.append(b)
+        return out
+
+    def bind(self, block: int) -> None:
+        """One more table binding for ``block`` (a prefix match).  A
+        cached block comes back to life; a live one just gains a
+        reference (its owner, if any, keeps the charge)."""
+        if block in self._cached:
+            del self._cached[block]
+            self._ref[block] = 1
+            self._owner[block] = None
+        else:
+            self._ref[block] += 1
+
+    def touch(self, block: int) -> None:
+        """Refresh a cached block's LRU position (a lookup hit)."""
+        if block in self._cached:
+            self._cached.move_to_end(block)
+
+    def release(self, block: int, *, owner_release: bool,
+                published: bool) -> None:
+        """Drop one binding.  ``owner_release`` also drops the
+        reservation charge (the block becomes purely shared if other
+        binders remain).  At refcount 0 the block goes to the cached
+        list when ``published`` (contents stay matchable) and to the
+        free list otherwise."""
+        if block not in self._ref:
+            raise RuntimeError(f"release of unreferenced KV block {block}")
+        if owner_release:
+            assert self._owner[block] is not None, (
+                f"owner release of ownerless block {block}")
+            self._owner[block] = None
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            del self._ref[block]
+            del self._owner[block]
+            if published:
+                self._cached[block] = None
+                self._cached.move_to_end(block)
+            else:
+                self._free.append(block)
+
+    def check_conservation(self) -> None:
+        free, cached, live = set(self._free), set(self._cached), set(self._ref)
+        assert len(self._free) == len(free)
+        assert not (free & cached) and not (free & live) and not (cached & live)
+        assert len(free) + len(cached) + len(live) == self.num_blocks
+        assert all(r > 0 for r in self._ref.values())
+        assert set(self._owner) == live
+
+
+class PrefixCachingKVCache(PagedKVCache):
+    """``PagedKVCache`` with content-addressed block sharing.
+
+    Slot table layout: entries ``[0, bound)`` are **bound** blocks —
+    matched from the index at admission, read-only, possibly shared
+    with other slots and with the index; entries ``[bound, held)`` are
+    **owned** blocks the slot allocated for its own writes (charged to
+    its exclusive reservation).  ``reserved`` here is the *exclusive*
+    reservation: ``blocks_needed(total_len) - bound-at-admission``.
+    """
+
+    def __init__(self, cfg: ModelConfig, serve: ServeConfig):
+        super().__init__(cfg, serve)
+        self.index = PrefixIndex()
+        self.allocator = RefcountedBlockAllocator(
+            self.num_blocks, on_evict=self._on_evict)
+        self._slot_bound: Dict[int, int] = {}     # leading bound (read-only) blocks
+        self._slot_chain: Dict[int, List[bytes]] = {}  # chain hash per full block
+        self.stats = {"lookups": 0, "hit_tokens": 0, "bound_blocks": 0,
+                      "published_blocks": 0, "evicted_blocks": 0,
+                      "cow_copies": 0, "cow_detaches": 0}
+
+    # -- index plumbing -----------------------------------------------------
+
+    def _on_evict(self, block: int) -> None:
+        """LRU eviction of a cached block: its contents are about to be
+        reused, so the index binding must go first."""
+        self.index.drop_block(block)
+        self.stats["evicted_blocks"] += 1
+
+    def _match_prefix(self, prompt: np.ndarray) -> Tuple[List[bytes], List[int]]:
+        """Walk the index over the prompt's full blocks.  At most
+        ``prompt_len - 1`` tokens may come from the cache: the engine
+        needs at least one prompt row to run to sample the first
+        generated token, so a fully-cached prompt recomputes its last
+        block."""
+        bs = self.block_size
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        hashes: List[bytes] = []
+        blocks: List[int] = []
+        parent = ROOT_HASH
+        for k in range((prompt.size - 1) // bs):
+            h = chain_hash(parent, prompt[k * bs:(k + 1) * bs])
+            b = self.index.get(h)
+            if b is None:
+                break
+            hashes.append(h)
+            blocks.append(b)
+            parent = h
+        return hashes, blocks
+
+    # -- admission ----------------------------------------------------------
+
+    def _admission_room(self, total_len: int, matched: Sequence[int]) -> bool:
+        """Gate: exclusive reservations + shared-pinned blocks (current,
+        plus the matched blocks that would leave the cached list) must
+        fit the pool — every admitted slot can then always grow to its
+        exclusive bound."""
+        a = self.allocator
+        need_excl = self.blocks_needed(total_len) - len(matched)
+        newly_live = sum(1 for b in matched if a.refcount(b) == 0)
+        return (self.reserved_total + a.live_shared + newly_live + need_excl
+                <= self.num_blocks)
+
+    def can_allocate_slot(self, total_len: int,
+                          prompt: Optional[np.ndarray] = None) -> bool:
+        matched = self._match_prefix(prompt)[1] if prompt is not None else []
+        return self._admission_room(total_len, matched)
+
+    def allocate_slot(self, slot: int, total_len: int,
+                      prompt: Optional[np.ndarray] = None) -> int:
+        """Reserve the unshared footprint and bind the cached prefix
+        into the slot's table.  Returns the number of prompt tokens the
+        bound blocks already hold K/V for (``cached_tokens``); prefill
+        resumes there."""
+        assert slot not in self._slot_reserved, f"slot {slot} already allocated"
+        hashes, blocks = (self._match_prefix(prompt) if prompt is not None
+                          else ([], []))
+        self.stats["lookups"] += 1
+        if not self._admission_room(total_len, blocks):
+            raise RuntimeError(
+                f"KV pool over-reserved: slot {slot} needs "
+                f"{self.blocks_needed(total_len) - len(blocks)} exclusive "
+                f"blocks beyond the shared prefix")
+        for b in blocks:
+            self.allocator.touch(b)
+            self.allocator.bind(b)
+        self._slot_reserved[slot] = self.blocks_needed(total_len) - len(blocks)
+        self.reserved_total += self._slot_reserved[slot]
+        self._slot_blocks[slot] = list(blocks)
+        self._slot_bound[slot] = len(blocks)
+        self._slot_chain[slot] = list(hashes)
+        self.block_table[slot, :] = self.garbage_block
+        if blocks:
+            self.block_table[slot, :len(blocks)] = blocks
+        cached_tokens = len(blocks) * self.block_size
+        self.stats["hit_tokens"] += cached_tokens
+        self.stats["bound_blocks"] += len(blocks)
+        return cached_tokens
+
+    # -- publication --------------------------------------------------------
+
+    def commit(self, slot: int, tokens: np.ndarray) -> None:
+        """Confirm that positions ``[0, len(tokens))`` of ``slot`` hold
+        K/V for exactly ``tokens``, and publish any newly *full* blocks
+        into the index.  Called by the engine after every step (so
+        concurrent requests share live blocks) and by the scheduler at
+        eviction (so the last generated blocks outlive the slot)."""
+        bs = self.block_size
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        chain = self._slot_chain[slot]
+        held = self._slot_blocks[slot]
+        nfull = tokens.size // bs
+        assert nfull <= len(held), (
+            f"slot {slot}: commit of {tokens.size} tokens but only "
+            f"{len(held)} blocks held")
+        for k in range(len(chain), nfull):
+            parent = chain[k - 1] if k else ROOT_HASH
+            h = chain_hash(parent, tokens[k * bs:(k + 1) * bs])
+            chain.append(h)
+            if self.index.put(h, held[k]):
+                self.stats["published_blocks"] += 1
+
+    def committed_blocks(self, slot: int) -> int:
+        """Full blocks of ``slot`` whose token contents are confirmed
+        (cheap guard so per-step commits cost nothing until a slot's
+        written length crosses a block boundary)."""
+        return len(self._slot_chain[slot])
+
+    # -- growth / copy-on-write ---------------------------------------------
+
+    def ensure_capacity(self, slot: int, length: int) -> None:
+        need = self.blocks_needed(length)
+        held = self._slot_blocks[slot]
+        if need <= len(held):
+            return
+        bound = self._slot_bound[slot]
+        if need - bound > self._slot_reserved[slot]:
+            # only reachable after a truncate released bound blocks
+            # (never through the engine): regrowing them would need
+            # exclusive blocks beyond the admission-time reservation —
+            # refusing keeps every *other* slot's growth guarantee intact
+            raise RuntimeError(
+                f"slot {slot}: growth to {length} needs {need - bound} "
+                f"exclusive blocks, reserved only {self._slot_reserved[slot]} "
+                f"(shared prefix blocks were released by truncate)")
+        new = self.allocator.alloc(need - len(held), owner=slot)
+        self.block_table[slot, len(held):need] = new
+        held.extend(new)
+
+    def _cow_replace(self, slot: int, k: int) -> None:
+        """Detach table entry ``k`` of ``slot`` from a block other
+        parties still need: release our binding, allocate a fresh block
+        and copy the pool contents across (device-side, both pools, all
+        layers).  The original stays with its remaining binders and/or
+        the index; the slot's future writes land in its own copy."""
+        held = self._slot_blocks[slot]
+        old = held[k]
+        owner_release = k >= self._slot_bound[slot]
+        self.allocator.release(old, owner_release=owner_release,
+                               published=self.index.published(old))
+        if self.allocator.refcount(old) > 0:
+            self.stats["cow_detaches"] += 1
+        new = self.allocator.alloc(1, owner=slot)[0]
+        if new != old:      # eviction can hand the same id straight back
+            self.k_pool = self.k_pool.at[:, new].set(self.k_pool[:, old])
+            self.v_pool = self.v_pool.at[:, new].set(self.v_pool[:, old])
+            self.stats["cow_copies"] += 1
+        held[k] = new
+        self.block_table[slot, k] = new
+        if k < self._slot_bound[slot]:
+            self._slot_bound[slot] = k
+
+    def truncate_slot(self, slot: int, new_len: int) -> None:
+        """Rewind ``slot`` to ``new_len`` written positions.
+
+        Owned blocks past the new length are released (back to the
+        cached list when published — their contents are still valid
+        prefixes — else to the free list); released *bound* blocks just
+        drop one refcount, their sharers unaffected.  The block
+        containing ``new_len`` (about to be partially rewritten) is the
+        copy-on-write edge: if it is bound or has other binders the slot
+        detaches onto a fresh copy, and if it is published the (now
+        stale-to-be) index binding is dropped — the shared tail is never
+        written."""
+        keep = self.blocks_needed(new_len) if new_len > 0 else 0
+        held = self._slot_blocks[slot]
+        bound = self._slot_bound[slot]
+        for k in range(len(held) - 1, keep - 1, -1):
+            self.allocator.release(held[k], owner_release=k >= bound,
+                                   published=self.index.published(held[k]))
+        if keep < len(held):
+            self.block_table[slot, keep:] = self.garbage_block
+            del held[keep:]
+        self._slot_bound[slot] = min(bound, keep)
+        chain = self._slot_chain[slot]
+        del chain[new_len // self.block_size:]
+        if new_len % self.block_size != 0 and keep == len(held) and held:
+            k = keep - 1                      # partial boundary block
+            blk = held[k]
+            if k < self._slot_bound[slot] or self.allocator.refcount(blk) > 1:
+                self._cow_replace(slot, k)    # others read it: never write it
+            elif self.index.published(blk):
+                self.index.drop_block(blk)    # sole user: content will diverge
+
+    # -- writes -------------------------------------------------------------
+
+    def write_coords(self, slot: int, position: int) -> Tuple[int, int]:
+        b, o = divmod(position, self.block_size)
+        blk = int(self.block_table[slot, b])
+        if b < self._slot_bound.get(slot, 0):
+            raise RuntimeError(
+                f"COW violation: write at position {position} of slot {slot} "
+                f"targets bound (shared, read-only) block {blk}")
+        if self.allocator.refcount(blk) > 1:
+            raise RuntimeError(
+                f"COW violation: write at position {position} of slot {slot} "
+                f"would land in block {blk} with refcount "
+                f"{self.allocator.refcount(blk)}")
+        if self.index.published(blk):
+            raise RuntimeError(
+                f"write at position {position} of slot {slot} would rewrite "
+                f"published block {blk} behind the index (truncate_slot "
+                f"unpublishes the divergence point first)")
+        return blk, o
+
+    # -- eviction -----------------------------------------------------------
+
+    def free_slot(self, slot: int) -> None:
+        held = self._slot_blocks.pop(slot)
+        bound = self._slot_bound.pop(slot)
+        for k, b in enumerate(held):
+            self.allocator.release(b, owner_release=k >= bound,
+                                   published=self.index.published(b))
+        del self._slot_chain[slot]
+        self.reserved_total -= self._slot_reserved.pop(slot)
+        self.block_table[slot, :] = self.garbage_block
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_conservation(self) -> None:
+        """Base table/reservation hygiene plus refcount/owner/index
+        invariants:
+
+        * free / cached / live partition the pool; refcount(b) equals
+          the number of slot-table bindings of b, and nothing a slot
+          binds is ever on a free or cached list;
+        * owned blocks sit at table indices >= the slot's bound region
+          and are charged to exactly that slot; owned <= exclusive
+          reservation per slot;
+        * the index is a hash<->block bijection, cached blocks are all
+          published, free blocks never are, and every slot's chain
+          matches its bound prefix;
+        * while no COW detach has occurred (always, under the engine's
+          discipline), the no-starvation witness holds:
+          free + cached >= reserved_total - owned_total.
+        """
+        a = self.allocator
+        a.check_conservation()
+        self.index.check_bijection()
+        bindings: Dict[int, int] = {}
+        for slot, blocks in self._slot_blocks.items():
+            bound = self._slot_bound[slot]
+            assert 0 <= bound <= len(blocks)
+            assert len(blocks) - bound <= self._slot_reserved[slot], slot
+            assert list(self.block_table[slot, :len(blocks)]) == blocks
+            assert (self.block_table[slot, len(blocks):]
+                    == self.garbage_block).all()
+            assert len(self._slot_chain[slot]) <= len(blocks)
+            for k, b in enumerate(blocks):
+                bindings[b] = bindings.get(b, 0) + 1
+                if k >= bound:
+                    assert a.owner(b) == slot, (slot, k, b)
+        for b, n in bindings.items():
+            assert a.refcount(b) == n, (b, n, a.refcount(b))
+            assert not a.is_cached(b)
+        assert sum(1 for b in bindings if a.owner(b) is not None) == a.owned_count
+        assert a.live_count == len(bindings)
+        for b in range(self.num_blocks):
+            if a.is_cached(b):
+                assert self.index.published(b), f"cached block {b} unpublished"
+        for b in a._free:
+            assert not self.index.published(b), f"free block {b} published"
+        assert self.reserved_total == sum(self._slot_reserved.values())
+        assert self.reserved_total <= self.num_blocks
+        if self.stats["cow_detaches"] == 0:
+            assert (a.free_count + a.cached_count
+                    >= self.reserved_total - a.owned_count), (
+                a.free_count, a.cached_count, self.reserved_total,
+                a.owned_count)
+        for slot in range(self.block_table.shape[0]):
+            if slot not in self._slot_blocks:
+                assert (self.block_table[slot] == self.garbage_block).all()

@@ -34,6 +34,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
 
+import numpy as np
+
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState, Status
 
@@ -164,7 +166,8 @@ class Scheduler:
 
     def _fits(self, st: RequestState) -> bool:
         return (self.kv_cache is None
-                or self.kv_cache.can_allocate_slot(st.request.total_len))
+                or self.kv_cache.can_allocate_slot(st.request.total_len,
+                                                   prompt=st.request.prompt))
 
     def admit(self, clock_ms: float) -> List[RequestState]:
         """Admit from the queue under the configured policy: arrived
@@ -177,11 +180,16 @@ class Scheduler:
                 break
             st = self.waiting.pop(idx)
             slot = self.free_slots.pop()
+            st.cached_tokens = 0
             if self.kv_cache is not None:
-                self.kv_cache.allocate_slot(slot, st.request.total_len)
+                # prefix caching: matched prompt-prefix blocks are bound
+                # into the slot's table (already-written context), so
+                # prefill resumes at the first uncached token
+                st.cached_tokens = self.kv_cache.allocate_slot(
+                    slot, st.request.total_len, prompt=st.request.prompt)
             st.slot = slot
             st.status = Status.PREFILL
-            st.prefill_pos = 0
+            st.prefill_pos = st.cached_tokens
             st.admitted_ms = clock_ms
             st.admit_seq = self._admit_seq
             self._admit_seq += 1
@@ -196,6 +204,13 @@ class Scheduler:
         del self.running[st.slot]
         self.free_slots.append(st.slot)
         if self.kv_cache is not None:
+            # eviction publishes: confirm the written context (prompt +
+            # every fed-back sample) so the slot's full blocks go into
+            # the prefix index before the blocks are released — they
+            # land on the cached-free list, matchable until evicted
+            self.kv_cache.commit(st.slot, np.concatenate(
+                [st.request.prompt,
+                 np.asarray(st.generated[:-1], np.int32)]))
             self.kv_cache.free_slot(st.slot)
         # the scheduler deliberately keeps no reference to finished
         # states (a server runs for ever); callers that need completion

@@ -62,6 +62,46 @@ def synthetic_trace(num_requests: int, vocab_size: int, *, seed: int = 0,
     return reqs
 
 
+def synthetic_multitenant(num_requests: int, vocab_size: int, *, seed: int = 0,
+                          qps: float = 50.0, num_tenants: int = 4,
+                          system_prompt_len: int = 48,
+                          suffix_lens: Tuple[int, int] = (2, 12),
+                          gen_lens: Tuple[int, ...] = (4, 8, 16),
+                          ) -> List[Request]:
+    """Poisson arrivals where every request belongs to one of
+    ``num_tenants`` tenants and opens with that tenant's fixed
+    ``system_prompt_len``-token system prompt, followed by a short
+    per-request suffix (uniform length in ``suffix_lens``).  This is the
+    workload prefix caching targets: the long shared head is identical
+    across a tenant's requests, so after one cold prefill every later
+    request can bind the cached system-prompt blocks and prefill only
+    its suffix.  Tenant assignment round-robins over arrival order so
+    every tenant's prompt stays warm under LRU eviction.
+
+    System prompts are deterministic in ``(seed, tenant)`` and suffixes
+    in ``(seed, uid)`` (via :func:`_prompt_tokens` with negated/offset
+    uids), so two traces built with the same arguments carry identical
+    token contents — the property warm-vs-cold identity tests rely on.
+    """
+    if num_tenants < 1:
+        raise ValueError("synthetic_multitenant: num_tenants must be >= 1")
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1000.0 / qps, size=num_requests))
+    # tenant system prompts: uid-space disjoint from per-request suffixes
+    systems = [_prompt_tokens(10**9 + t, system_prompt_len, vocab_size, seed)
+               for t in range(num_tenants)]
+    reqs = []
+    for uid in range(num_requests):
+        s = int(rng.integers(suffix_lens[0], suffix_lens[1] + 1))
+        g = int(rng.choice(gen_lens))
+        suffix = _prompt_tokens(uid, s, vocab_size, seed)
+        reqs.append(Request(
+            uid=uid,
+            prompt=np.concatenate([systems[uid % num_tenants], suffix]),
+            max_new_tokens=g, arrival_ms=float(arrivals[uid])))
+    return reqs
+
+
 def save_trace(path: str, requests: List[Request]) -> None:
     with open(path, "w") as f:
         for r in requests:

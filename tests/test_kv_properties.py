@@ -165,6 +165,33 @@ def test_cache_interleavings(case):
     check_cache_sequence(*case)
 
 
+# ---------------------------------------------------------------------------
+# PrefixCachingKVCache: share / diverge / evict-under-pressure / COW
+# ---------------------------------------------------------------------------
+
+# The checker lives in test_prefix_cache.py (with the deterministic
+# goldens and a fixed-grid drive) so it stays runnable without the
+# hypothesis dependency; this module only adds the randomised search.
+from test_prefix_cache import check_prefix_sequence
+
+
+@st.composite
+def prefix_cases(draw):
+    max_slots = draw(st.integers(1, 4))
+    bs = draw(st.sampled_from([2, 4]))
+    num_blocks = draw(st.integers(2, 24))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(0, 512)),
+        max_size=50))
+    return max_slots, bs, num_blocks, ops
+
+
+@given(prefix_cases())
+@settings(**SETTINGS)
+def test_prefix_cache_interleavings(case):
+    check_prefix_sequence(*case)
+
+
 def test_cache_checkers_run_without_hypothesis():
     """Fixed-grid drive of the check_* helpers (mirrors the
     test_plan_properties.py convention)."""

@@ -1,0 +1,446 @@
+"""Deterministic goldens for block-level prefix caching
+(repro.serving.prefix_cache) plus the operation-sequence checker the
+hypothesis harness in test_kv_properties.py randomises.
+
+Covers, bottom-up:
+
+* chain_hash — determinism, token- and parent-sensitivity (absolute
+  position is part of a block's identity by construction);
+* RefcountedBlockAllocator — bind/release refcounting, the cached-free
+  list's LRU eviction order, touch refresh, double-release detection;
+* PrefixIndex — bijection, first-writer-wins publication;
+* PrefixCachingKVCache — warm admission binds published blocks with the
+  right cached token count, the fully-cached-prompt cap (at least one
+  prompt row must run), copy-on-write detach keeping the original for
+  its other binders, eviction under pool pressure;
+* engine level — warm-vs-cold token identity (dense and dropless-hash
+  MoE, plus composed with speculative ngram decoding), and capacity
+  multiplication on a block-constrained pool;
+* the synthetic_multitenant trace family.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ModelConfig, ServeConfig, SpecConfig
+from repro.serving.prefix_cache import (
+    ROOT_HASH,
+    PrefixCachingKVCache,
+    PrefixIndex,
+    RefcountedBlockAllocator,
+    chain_hash,
+)
+from repro.serving.trace import synthetic_multitenant
+
+
+def _cfg():
+    return ModelConfig(name="t", family="decoder_lm", num_layers=1,
+                       d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                       vocab_size=64, dtype="float32")
+
+
+def _cache(max_slots=4, bs=4, num_blocks=16, max_len=64):
+    serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
+                        max_len=max_len, num_blocks=num_blocks,
+                        prefix_cache=True)
+    return PrefixCachingKVCache(_cfg(), serve)
+
+
+# ---------------------------------------------------------------------------
+# chain_hash
+# ---------------------------------------------------------------------------
+
+def test_chain_hash_deterministic_and_sensitive():
+    toks = np.arange(8, dtype=np.int32)
+    h = chain_hash(ROOT_HASH, toks)
+    assert h == chain_hash(ROOT_HASH, toks.copy())
+    assert len(h) == 16
+    assert h != chain_hash(ROOT_HASH, toks + 1)          # token-sensitive
+    assert h != chain_hash(h, toks)                      # parent-sensitive
+    # same tokens in a different block position (different parent) are a
+    # different identity: positions are structural, not stored
+    h2 = chain_hash(chain_hash(ROOT_HASH, toks), toks)
+    assert h2 != h
+
+
+# ---------------------------------------------------------------------------
+# RefcountedBlockAllocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_bind_release_refcounts():
+    a = RefcountedBlockAllocator(4)
+    (b,) = a.alloc(1, owner=0)
+    assert a.refcount(b) == 1 and a.owner(b) == 0
+    a.bind(b)                                            # second table binding
+    assert a.refcount(b) == 2 and a.owner(b) == 0
+    a.release(b, owner_release=True, published=False)
+    assert a.refcount(b) == 1 and a.owner(b) is None     # now purely shared
+    assert a.live_shared == 1 and a.owned_count == 0
+    a.release(b, owner_release=False, published=False)
+    assert a.refcount(b) == 0 and a.free_count == 4
+    with pytest.raises(RuntimeError):
+        a.release(b, owner_release=False, published=False)
+    a.check_conservation()
+
+
+def test_allocator_lru_eviction_order():
+    evicted = []
+    a = RefcountedBlockAllocator(3, on_evict=evicted.append)
+    blocks = a.alloc(3, owner=0)
+    for b in blocks:                     # all published, refcount -> 0
+        a.release(b, owner_release=True, published=True)
+    assert a.cached_count == 3 and a.free_count == 0
+    a.touch(blocks[0])                   # refresh: blocks[0] newest now
+    got = a.alloc(2, owner=1)
+    assert evicted == [blocks[1], blocks[2]]             # oldest first
+    assert set(got) == {blocks[1], blocks[2]}
+    assert a.evicted_blocks == 2
+    # the untouched survivor is still cached and can come back to life
+    a.bind(blocks[0])
+    assert a.refcount(blocks[0]) == 1 and a.cached_count == 0
+    a.check_conservation()
+
+
+def test_index_bijection_first_writer_wins():
+    idx = PrefixIndex()
+    h1 = chain_hash(ROOT_HASH, np.arange(4, dtype=np.int32))
+    assert idx.put(h1, 7) is True
+    assert idx.put(h1, 9) is False       # hash taken: later writer loses
+    assert idx.get(h1) == 7 and idx.published(7) and not idx.published(9)
+    idx.check_bijection()
+    idx.drop_block(7)
+    assert idx.get(h1) is None and len(idx) == 0
+
+
+# ---------------------------------------------------------------------------
+# PrefixCachingKVCache goldens
+# ---------------------------------------------------------------------------
+
+def test_warm_admission_binds_published_blocks():
+    cache = _cache(bs=4, num_blocks=16)
+    prompt = np.arange(10, dtype=np.int32)
+    assert cache.allocate_slot(0, 14, prompt=prompt) == 0    # cold
+    cache.ensure_capacity(0, 10)
+    cache.commit(0, prompt)
+    blocks_before = list(cache._slot_blocks[0][:2])
+    cache.free_slot(0)
+    assert cache.allocator.cached_count == 2                 # full blocks only
+    ct = cache.allocate_slot(1, 14, prompt=prompt)
+    assert ct == 8                                           # 2 of 2.5 blocks
+    assert cache._slot_blocks[1][:2] == blocks_before        # same physical ids
+    assert cache._slot_bound[1] == 2
+    cache.check_conservation()
+    # bound region is read-only, first uncached position is writable
+    with pytest.raises(RuntimeError):
+        cache.write_coords(1, 7)
+    cache.ensure_capacity(1, 9)
+    cache.write_coords(1, 8)
+
+
+def test_fully_cached_prompt_keeps_one_row():
+    """A prompt of exactly N full blocks matches at most N-1: the engine
+    must run at least one prompt row to sample the first token."""
+    cache = _cache(bs=4, num_blocks=16)
+    prompt = np.arange(12, dtype=np.int32)                   # 3 full blocks
+    cache.allocate_slot(0, 16, prompt=prompt)
+    cache.ensure_capacity(0, 12)
+    cache.commit(0, prompt)
+    cache.free_slot(0)
+    assert cache.allocate_slot(1, 16, prompt=prompt) == 8    # (3-1) * bs
+    cache.check_conservation()
+
+
+def test_cow_detach_keeps_original_for_binders():
+    """Slot B binds blocks slot A published; A truncates into the shared
+    region and must detach onto a fresh copy — B's table, the index
+    binding, and the block contents stay untouched."""
+    cache = _cache(bs=4, num_blocks=16)
+    prompt = np.arange(9, dtype=np.int32)
+    cache.allocate_slot(0, 12, prompt=prompt)
+    cache.ensure_capacity(0, 9)
+    cache.commit(0, prompt)                                  # publishes 2 blocks
+    ct = cache.allocate_slot(1, 12, prompt=prompt)           # live binding
+    assert ct == 8
+    shared = list(cache._slot_blocks[1][:2])
+    assert cache._slot_blocks[0][:2] == shared
+    cache.truncate_slot(0, 6)                # mid-block 1: shared -> COW
+    assert cache.stats["cow_detaches"] == 1
+    assert cache._slot_blocks[0][1] != shared[1]             # A detached
+    assert cache._slot_blocks[1][:2] == shared               # B untouched
+    assert cache.index.published(shared[1])                  # still matchable
+    assert cache.allocator.refcount(shared[1]) == 1          # B only
+    # A's copy is private and writable at the divergence point
+    blk, _ = cache.write_coords(0, 6)
+    assert blk == cache._slot_blocks[0][1]
+    cache.check_conservation()
+
+
+def test_eviction_under_pressure_unpublishes():
+    cache = _cache(bs=4, num_blocks=4, max_len=16)
+    prompt = np.arange(8, dtype=np.int32)
+    cache.allocate_slot(0, 9, prompt=prompt)
+    cache.ensure_capacity(0, 8)
+    cache.commit(0, prompt)
+    cache.free_slot(0)
+    assert cache.allocator.cached_count == 2
+    # an unrelated request needs the whole pool: cached blocks evict
+    other = 50 + np.arange(13, dtype=np.int32)
+    assert cache.allocate_slot(1, 16, prompt=other) == 0
+    cache.ensure_capacity(1, 16)
+    assert cache.stats["evicted_blocks"] == 2
+    assert len(cache.index) == 0
+    cache.check_conservation()
+    # the old prompt is cold again
+    cache.free_slot(1)
+    assert cache.allocate_slot(2, 9, prompt=prompt) == 0
+
+
+# ---------------------------------------------------------------------------
+# Operation-sequence checker (randomised by test_kv_properties.py)
+# ---------------------------------------------------------------------------
+
+def check_prefix_sequence(max_slots, bs, num_blocks, ops):
+    """ops: (kind, slot, amount); kind 0=admit-with-prompt,
+    1=grow+commit, 2=truncate (then diverge the unwritten tail),
+    3=free_slot.  Prompts come from three tenant templates sharing a
+    two-block head, so runs hit every sharing shape: live binding, warm
+    rebinding after free, divergence at and between block boundaries,
+    truncation into the shared region (COW), and LRU eviction under
+    pool pressure.
+
+    The host model tracks the token contents of every *published* block
+    and asserts the two safety properties sharing must never break: a
+    matched prefix always holds exactly the requesting prompt's tokens,
+    and a write coordinate never lands in a bound block, a refcount>1
+    block, or a published block."""
+    serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
+                        max_len=max(num_blocks * bs, 4),
+                        num_blocks=num_blocks, prefix_cache=True)
+    cache = PrefixCachingKVCache(_cfg(), serve)
+    L = serve.max_len
+    common = (np.arange(2 * bs, dtype=np.int64) * 7 % 61).astype(np.int32)
+    templates = [
+        np.concatenate([common, ((np.arange(L, dtype=np.int64) * 13 + 100 * t)
+                                 % 61).astype(np.int32)])[:L]
+        for t in range(3)]
+
+    model = {}     # slot -> dict(total, cur, stream, salt)
+    pub = {}       # published block -> np.ndarray of its bs token contents
+
+    def sweep():
+        for b in list(pub):
+            if not cache.index.published(b):
+                del pub[b]                      # evicted or diverged
+
+    for kind, slot, amount in ops:
+        slot %= max_slots
+        if kind == 0 and slot not in model:
+            plen = 1 + amount % (L // 2)
+            total = min(plen + 1 + amount % 16, L)
+            prompt = templates[amount % 3][:plen]
+            if cache.can_allocate_slot(total, prompt=prompt):
+                ct = cache.allocate_slot(slot, total, prompt=prompt)
+                assert ct % bs == 0 and ct <= plen - 1
+                held = cache._slot_blocks[slot]
+                for k in range(cache._slot_bound[slot]):
+                    # match correctness: bound blocks hold exactly the
+                    # prompt's tokens (never a colliding other prefix)
+                    assert np.array_equal(pub[held[k]],
+                                          prompt[k * bs:(k + 1) * bs])
+                if ct > 0:
+                    with pytest.raises(RuntimeError):
+                        cache.write_coords(slot, ct - 1)   # bound = read-only
+                tail = ((np.arange(total - plen, dtype=np.int64) * 29 + slot)
+                        % 61).astype(np.int32)
+                model[slot] = dict(total=total, cur=ct,
+                                   stream=np.concatenate([prompt, tail]),
+                                   salt=0)
+            else:
+                with pytest.raises(RuntimeError):
+                    cache.allocate_slot(slot, total, prompt=prompt)
+        elif kind == 1 and slot in model:
+            m = model[slot]
+            length = min(m["cur"] + 1 + amount % (2 * bs), m["total"])
+            bound = cache._slot_bound[slot]
+            if cache.blocks_needed(length) - bound > cache._slot_reserved[slot]:
+                # regrowth past truncate-released shared blocks exceeds
+                # the exclusive reservation: must refuse, not starve
+                with pytest.raises(RuntimeError):
+                    cache.ensure_capacity(slot, length)
+            else:
+                cache.ensure_capacity(slot, length)
+                for pos in range(m["cur"], length):
+                    blk, _ = cache.write_coords(slot, pos)
+                    assert cache.allocator.refcount(blk) == 1
+                    assert not cache.index.published(blk)
+                m["cur"] = length
+                before = cache.committed_blocks(slot)
+                cache.commit(slot, m["stream"][:length])
+                chain = cache._slot_chain[slot]
+                held = cache._slot_blocks[slot]
+                for k in range(before, len(chain)):
+                    if cache.index.get(chain[k]) == held[k]:
+                        pub[held[k]] = m["stream"][k * bs:(k + 1) * bs].copy()
+        elif kind == 2 and slot in model:
+            m = model[slot]
+            new_len = amount % (m["cur"] + 1)
+            cache.truncate_slot(slot, new_len)
+            m["cur"] = new_len
+            # diverge the rewound tail (speculative rollback re-samples),
+            # so a later grow+commit publishes different content
+            m["salt"] += 1
+            tail = ((np.arange(m["total"] - new_len, dtype=np.int64) * 31
+                     + 7 * m["salt"] + slot) % 61).astype(np.int32)
+            m["stream"] = np.concatenate([m["stream"][:new_len], tail])
+        elif kind == 3 and slot in model:
+            cache.free_slot(slot)
+            del model[slot]
+        sweep()
+        cache.check_conservation()
+    for slot in list(model):
+        cache.free_slot(slot)
+    sweep()
+    cache.check_conservation()
+    assert (cache.allocator.free_count + cache.allocator.cached_count
+            == num_blocks)
+
+
+def test_prefix_sequence_fixed_grid():
+    # share -> live bind -> truncate into the shared region (COW) ->
+    # free both -> re-admit warm -> pressure-evict
+    check_prefix_sequence(3, 4, 10, [
+        (0, 0, 30),              # tenant 0, cold admit
+        (1, 0, 30), (1, 0, 30),  # grow + commit (publishes full blocks)
+        (0, 1, 30),              # same tenant: binds live shared blocks
+        (2, 0, 5),               # truncate into shared region -> COW edge
+        (1, 0, 30),              # regrow within entitlement or refuse
+        (3, 0, 0), (3, 1, 0),    # free both; blocks land on cached list
+        (0, 2, 30),              # warm re-admit binds cached blocks
+        (0, 0, 121), (1, 0, 40),   # different tenant under pressure -> evict
+        (3, 0, 0), (3, 2, 0)])
+    check_prefix_sequence(2, 2, 6, [
+        (0, 0, 9), (1, 0, 11), (2, 0, 0), (1, 0, 9),   # truncate to 0, regrow
+        (0, 1, 9), (1, 1, 5), (3, 0, 0), (1, 1, 7), (3, 1, 0)])
+
+
+# ---------------------------------------------------------------------------
+# Engine level: warm vs cold token identity, capacity multiplication
+# ---------------------------------------------------------------------------
+
+def tiny_cfg(**kw) -> ModelConfig:
+    base = dict(name="t", family="decoder_lm", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                max_seq_len=128, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _tenant_requests(gen=6):
+    """Six requests, two tenants: even uids share one 16-token prompt,
+    odd uids share its first 8 tokens then diverge."""
+    from repro.serving.request import Request
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 128, 16).astype(np.int32)
+    reqs = []
+    for uid in range(6):
+        if uid % 2 == 0:
+            p = shared.copy()
+        else:
+            p = np.concatenate([shared[:8],
+                                rng.integers(0, 128, 8).astype(np.int32)])
+        reqs.append(Request(uid=uid, prompt=p, max_new_tokens=gen))
+    return reqs
+
+
+def _serve_trace(cfg, params, *, prefix, num_blocks=48, spec=None, gen=6):
+    from repro.serving.continuous import ContinuousEngine
+
+    serve = ServeConfig(max_slots=3, kv_block_size=4, prefill_chunk=4,
+                        max_len=64, num_blocks=num_blocks,
+                        prefix_cache=prefix, spec=spec)
+    eng = ContinuousEngine(cfg, params, serve, check_invariants=True)
+    toks, stats = eng.run(_tenant_requests(gen))
+    return toks, stats, eng
+
+
+def _params(cfg, seed=0):
+    from repro.models.registry import get_family
+    from repro.nn import init
+
+    return init(get_family(cfg).specs(cfg), jax.random.PRNGKey(seed))
+
+
+def test_warm_vs_cold_identity_dense():
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    cold, _, _ = _serve_trace(cfg, params, prefix=False)
+    warm1, s1, eng = _serve_trace(cfg, params, prefix=True)
+    warm2, s2, _ = _serve_trace(cfg, params, prefix=True)
+    assert cold == warm1 == warm2
+    assert s1["cached_tokens"] > 0 and s2["cached_tokens"] > 0
+    assert eng.cache.stats["published_blocks"] > 0
+    eng.cache.check_conservation()
+
+
+def test_warm_vs_cold_identity_dropless_hash():
+    cfg = tiny_cfg().replace_moe(impl="dropless", num_experts=4,
+                                 routing="hash", capacity_factor=None)
+    params = _params(cfg)
+    cold, _, _ = _serve_trace(cfg, params, prefix=False)
+    warm, s, _ = _serve_trace(cfg, params, prefix=True)
+    assert cold == warm
+    assert s["cached_tokens"] > 0
+
+
+def test_prefix_composes_with_speculative_ngram():
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    spec = SpecConfig(drafter="ngram", gamma=3)
+    plain, _, _ = _serve_trace(cfg, params, prefix=False, gen=8)
+    both, s, eng = _serve_trace(cfg, params, prefix=True, spec=spec, gen=8)
+    assert plain == both                 # greedy: spec and caching both exact
+    assert s["cached_tokens"] > 0
+    assert eng.cache.stats["cow_detaches"] == 0   # engine never detaches
+    eng.cache.check_conservation()
+
+
+def test_capacity_multiplication_on_constrained_pool():
+    """On a block-starved pool, sharing admits strictly more concurrent
+    requests: every even request's worst-case footprint is 6 blocks cold
+    but only 2 exclusive once the 16-token tenant prompt is shared."""
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    # 13 blocks * 4 tokens: cold fits two 6-block requests at once
+    cold, off, _ = _serve_trace(cfg, params, prefix=False, num_blocks=13)
+    warm, on, eng = _serve_trace(cfg, params, prefix=True, num_blocks=13)
+    assert cold == warm
+    assert on["peak_running"] > off["peak_running"]
+    assert on["steps"] < off["steps"]
+    eng.cache.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# synthetic_multitenant trace
+# ---------------------------------------------------------------------------
+
+def test_multitenant_trace_shape_and_determinism():
+    a = synthetic_multitenant(12, 64, seed=3, num_tenants=3,
+                              system_prompt_len=16, suffix_lens=(2, 5),
+                              gen_lens=(4, 8))
+    b = synthetic_multitenant(12, 64, seed=3, num_tenants=3,
+                              system_prompt_len=16, suffix_lens=(2, 5),
+                              gen_lens=(4, 8))
+    assert len(a) == 12
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.prompt, rb.prompt)        # reproducible
+        assert ra.arrival_ms == rb.arrival_ms
+    arr = [r.arrival_ms for r in a]
+    assert arr == sorted(arr)
+    # same tenant -> identical system prompt; different tenant -> not
+    assert np.array_equal(a[0].prompt[:16], a[3].prompt[:16])
+    assert not np.array_equal(a[0].prompt[:16], a[1].prompt[:16])
+    for r in a:
+        assert 16 + 2 <= r.prompt_len <= 16 + 5
+        assert r.max_new_tokens in (4, 8)
