@@ -229,6 +229,41 @@ class SpecConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """SLO-aware scheduling (``repro.serving.slo``): preemption with KV
+    swap-to-host.  Attach to ``ServeConfig.slo`` to let the scheduler
+    evict a running lower-priority victim (KV blocks copied to a
+    host-side numpy pool, re-admission restores them and resumes at the
+    exact token) whenever a higher-priority arrival cannot be admitted.
+    Pairs with the ``priority_strict`` / ``edf`` / ``cache_aware``
+    admission policies, but works under any policy.
+    """
+
+    preemption: bool = True
+    # Host-pool size in KV blocks.  None => mirror the device pool (a
+    # preempted working set can never exceed what was resident).
+    host_blocks: Optional[int] = None
+    # Per-request preemption cap: after this many round trips a request
+    # is pinned (never picked as victim again) so repeated preemption
+    # cannot livelock a long job under sustained high-priority load.
+    max_preemptions: int = 8
+    # Only waiting requests whose priority class value is <= this
+    # trigger preemption (0 = HIGH only, the default).  Every class
+    # still jumps the *queue* under a priority-aware admission policy;
+    # the threshold decides who may evict running work — swap round
+    # trips are not free, and letting every NORMAL arrival churn LOW
+    # requests out of their slots costs more throughput than the queue
+    # reordering buys.
+    preempt_threshold: int = 0
+
+    def __post_init__(self):
+        if self.host_blocks is not None and self.host_blocks < 1:
+            raise ValueError("SLOConfig.host_blocks must be >= 1")
+        if self.max_preemptions < 0:
+            raise ValueError("SLOConfig.max_preemptions must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Continuous-batching serving shapes (``repro.serving.continuous``).
 
@@ -257,6 +292,10 @@ class ServeConfig:
     # charge admission only the unshared footprint.  Default off keeps
     # the exact PagedKVCache behaviour.
     prefix_cache: bool = False
+    # SLO-aware scheduling: priority preemption with KV swap-to-host
+    # (repro.serving.slo).  None => no preemption; priorities and
+    # deadlines still order admission under the slo policies.
+    slo: Optional[SLOConfig] = None
 
     def __post_init__(self):
         if self.max_slots < 1 or self.kv_block_size < 1 or self.prefill_chunk < 1:

@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs.base import ServeConfig, SpecConfig
+from repro.configs.base import ServeConfig, SLOConfig, SpecConfig
 from repro.configs.registry import ALL_IDS, get_config, get_smoke_config
 from repro.models.registry import get_family
 from repro.nn import abstract, init as init_params
@@ -32,7 +32,9 @@ from repro.serving.trace import (
     load_trace,
     run_trace_static,
     static_max_len,
+    slo_class_line,
     synthetic_multitenant,
+    synthetic_priority,
     synthetic_trace,
 )
 
@@ -57,14 +59,19 @@ def main(argv=None):
     ap.add_argument("--qps", type=float, default=50.0,
                     help="synthetic trace Poisson arrival rate")
     ap.add_argument("--trace-kind", default="mixed",
-                    choices=["mixed", "multitenant"],
-                    help="synthetic trace family: mixed-length Poisson, or "
+                    choices=["mixed", "multitenant", "priority"],
+                    help="synthetic trace family: mixed-length Poisson, "
                          "multi-tenant shared-system-prompt (the workload "
-                         "--prefix-cache targets)")
+                         "--prefix-cache targets), or bursty mixed-priority "
+                         "overload with deadlines (the workload --slo-preempt "
+                         "and the slo policies target)")
     ap.add_argument("--tenants", type=int, default=4,
-                    help="multitenant trace: number of distinct system prompts")
+                    help="multitenant/priority trace: distinct system prompts")
     ap.add_argument("--system-prompt-len", type=int, default=48,
                     help="multitenant trace: shared system-prompt length")
+    ap.add_argument("--burst-qps", type=float, default=None,
+                    help="priority trace: arrival rate during bursts "
+                         "(default 4x --qps)")
     # continuous-batching shapes
     ap.add_argument("--max-slots", type=int, default=8)
     ap.add_argument("--kv-block", type=int, default=16)
@@ -78,6 +85,14 @@ def main(argv=None):
                     help="content-addressed block-level prefix caching: "
                          "admission binds cached prompt-prefix blocks and "
                          "skips their prefill (continuous engine only)")
+    ap.add_argument("--slo-preempt", action="store_true",
+                    help="SLO-aware preemption: let a higher-priority arrival "
+                         "evict a running lower-priority request, swapping its "
+                         "KV blocks to a host pool for later restore "
+                         "(continuous engine only)")
+    ap.add_argument("--host-blocks", type=int, default=None,
+                    help="host swap pool size in KV blocks "
+                         "(default: mirror the device pool)")
     # speculative decoding (continuous engine only)
     from repro.serving.speculative import available_drafters
     ap.add_argument("--spec-drafter", default=None,
@@ -180,6 +195,11 @@ def main(argv=None):
             args.requests, cfg.vocab_size, seed=args.seed, qps=args.qps,
             num_tenants=args.tenants,
             system_prompt_len=args.system_prompt_len)
+    elif args.trace_kind == "priority":
+        requests = synthetic_priority(
+            args.requests, cfg.vocab_size, seed=args.seed, qps=args.qps,
+            burst_qps=args.burst_qps, num_tenants=args.tenants,
+            system_prompt_len=args.system_prompt_len if args.prefix_cache else 0)
     else:
         requests = synthetic_trace(args.requests, cfg.vocab_size,
                                    seed=args.seed, qps=args.qps)
@@ -195,12 +215,14 @@ def main(argv=None):
                                     temperature=args.temperature,
                                     seed=args.seed)
     else:
+        slo = (SLOConfig(preemption=True, host_blocks=args.host_blocks)
+               if args.slo_preempt else None)
         serve = ServeConfig(max_slots=args.max_slots,
                             kv_block_size=args.kv_block,
                             prefill_chunk=args.prefill_chunk,
                             max_len=max(args.max_len, longest),
                             spec=spec, sched_policy=args.sched_policy,
-                            prefix_cache=args.prefix_cache)
+                            prefix_cache=args.prefix_cache, slo=slo)
         engine = ContinuousEngine(cfg, params, serve,
                                   temperature=args.temperature, seed=args.seed,
                                   draft_model=draft_model)
@@ -224,6 +246,9 @@ def main(argv=None):
                   f"{cs['published_blocks']} published, "
                   f"{cs['cow_copies']} COW copies, "
                   f"{cs['evicted_blocks']} evicted")
+        line = slo_class_line(stats)
+        if line:
+            print(line)
     print(latency_line(stats))
 
 

@@ -279,6 +279,12 @@ class ContinuousEngine:
             raise NotImplementedError(
                 "prefix caching needs the paged KV cache (recurrent slot "
                 "states are not content-addressable blocks)")
+        if (serve.slo is not None and serve.slo.preemption
+                and self.mode != "paged"):
+            raise NotImplementedError(
+                "preemption needs the paged KV cache (recurrent slot states "
+                "have no block-level swap); use SLOConfig(preemption=False) "
+                "for priority/deadline ordering alone")
 
         if self.mode == "paged":
             if serve.prefix_cache:
@@ -289,7 +295,8 @@ class ContinuousEngine:
             else:
                 self.cache = PagedKVCache(cfg, serve)
             self.scheduler = Scheduler(serve.max_slots, serve.max_len,
-                                       self.cache, policy=serve.sched_policy)
+                                       self.cache, policy=serve.sched_policy,
+                                       slo=serve.slo)
             temp = self.temperature
 
             def step_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
@@ -324,7 +331,8 @@ class ContinuousEngine:
         else:
             self.cache = None
             self.scheduler = Scheduler(serve.max_slots, serve.max_len, None,
-                                       policy=serve.sched_policy)
+                                       policy=serve.sched_policy,
+                                       slo=serve.slo)
             self._state = self.fam.init_state(cfg, serve.max_slots, serve.max_len)
             temp = self.temperature
             serve_ctx = MoEContext(is_training=False)
@@ -351,7 +359,12 @@ class ContinuousEngine:
 
     def step(self, clock_ms: float = 0.0) -> List[RequestState]:
         """Admit, run one mixed prefill/decode (or speculative verify)
-        step, process samples.  Returns the requests that finished."""
+        step, process samples.  Returns the requests that finished.
+        With preemption enabled (``serve.slo``), the step first lets the
+        scheduler evict lower-priority victims for urgent arrivals that
+        could not otherwise be admitted — eviction and re-admission both
+        happen here, at step granularity, never mid-forward."""
+        self.scheduler.maybe_preempt(clock_ms)
         admitted = self.scheduler.admit(clock_ms)
         if self.mode == "recurrent":
             for st in admitted:
@@ -377,9 +390,16 @@ class ContinuousEngine:
         S = serve.max_slots
         pre = sched.prefilling
         chunk = 0
+        stream = target = None
         if pre is not None:
-            chunk = min(serve.prefill_chunk,
-                        pre.request.prompt_len - pre.prefill_pos)
+            # the prefill stream is the *confirmed* token sequence, not
+            # just the prompt: a restored preempted request re-ingests
+            # (or re-bound) prompt + fed-back samples up to the exact
+            # position it was evicted at — identical K/V, identical
+            # routing, by construction
+            stream = pre.confirmed_tokens
+            target = pre.prefill_target
+            chunk = min(serve.prefill_chunk, target - pre.prefill_pos)
         N = S + (serve.prefill_chunk if pre is not None else 0)
         b = _row_buffers(N, serve.blocks_per_slot, cache.garbage_block)
         sample_rows: List[Tuple[int, RequestState]] = []
@@ -393,12 +413,13 @@ class ContinuousEngine:
             sample_rows.append((slot, st))
 
         if pre is not None:
-            prompt = pre.request.prompt
             cache.ensure_capacity(pre.slot, pre.prefill_pos + chunk)
             for j in range(chunk):
                 row, p = S + j, pre.prefill_pos + j
-                _fill_row(b, cache, row, pre.slot, prompt[p], p)
-                if p == pre.request.prompt_len - 1:
+                _fill_row(b, cache, row, pre.slot, stream[p], p)
+                # sample off the last *prompt* row only on first ingest:
+                # a resume past it already holds that sample in generated
+                if p == pre.request.prompt_len - 1 and not pre.generated:
                     sample_rows.append((row, pre))
 
         next_tok, k_pools, v_pools = self._step_fn(
@@ -409,7 +430,7 @@ class ContinuousEngine:
 
         if pre is not None:
             pre.prefill_pos += chunk
-            if pre.prefill_pos == pre.request.prompt_len:
+            if pre.prefill_pos == target:
                 pre.status = Status.DECODE
         finished = self._collect_samples(np.asarray(next_tok), sample_rows,
                                          clock_ms)
@@ -427,16 +448,11 @@ class ContinuousEngine:
             return
         bs, cache = self.cache.block_size, self.cache
         for slot, st in self.scheduler.running.items():
-            if st.status is Status.PREFILL:
-                written = st.prefill_pos
-                if written // bs > cache.committed_blocks(slot):
-                    cache.commit(slot, st.request.prompt[:written])
-            else:
-                written = st.request.prompt_len + len(st.generated) - 1
-                if written // bs > cache.committed_blocks(slot):
-                    cache.commit(slot, np.concatenate(
-                        [st.request.prompt,
-                         np.asarray(st.generated[:-1], np.int32)]))
+            stream = st.confirmed_tokens
+            written = (st.prefill_pos if st.status is Status.PREFILL
+                       else stream.size)
+            if written // bs > cache.committed_blocks(slot):
+                cache.commit(slot, stream[:written])
 
     # -- speculative verify step --------------------------------------------
 
@@ -582,6 +598,10 @@ class ContinuousEngine:
         t0 = time.perf_counter()
         steps0 = self.steps
         spec0 = dict(self.spec_stats)
+        sched = self.scheduler
+        pre0 = (sched.preemptions, sched.restore_tokens,
+                sched.recompute_tokens)
+        swap0 = dict(sched.swap.stats) if sched.swap is not None else None
         clock = 0.0
         done: List[RequestState] = []
         peak_running = 0
@@ -601,12 +621,23 @@ class ContinuousEngine:
         total_ms = max(clock, (time.perf_counter() - t0) * 1e3)
         self.scheduler.check_conservation()
 
-        from repro.serving.trace import latency_stats
+        from repro.serving.trace import latency_stats, slo_class_stats
 
         stats = latency_stats([st.latency_ms() for st in done], total_ms,
                               sum(len(st.generated) for st in done))
         stats["steps"] = float(self.steps - steps0)
         stats["peak_running"] = float(peak_running)
+        # per-class percentiles + goodput: global p50/p95 hide exactly
+        # the targeted degradation SLO scheduling is for
+        stats.update(slo_class_stats(done))
+        if sched.swap is not None:
+            stats["preemptions"] = float(sched.preemptions - pre0[0])
+            stats["restore_tokens"] = float(sched.restore_tokens - pre0[1])
+            stats["recompute_tokens"] = float(sched.recompute_tokens - pre0[2])
+            stats["swapped_blocks"] = float(
+                sched.swap.stats["swapped_blocks"] - swap0["swapped_blocks"])
+            stats["restored_blocks"] = float(
+                sched.swap.stats["restored_blocks"] - swap0["restored_blocks"])
         if self.serve.prefix_cache:
             cached = sum(st.cached_tokens for st in done)
             prompt = sum(st.request.prompt_len for st in done)

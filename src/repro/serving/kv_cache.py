@@ -204,6 +204,49 @@ class PagedKVCache:
         b, o = divmod(position, self.block_size)
         return int(self.block_table[slot, b]), o
 
+    # -- preemption swap hooks (repro.serving.slo) ---------------------------
+
+    def warm_prefix_tokens(self, prompt) -> int:
+        """Prompt tokens already backed by cached KV (the ``cache_aware``
+        admission signal).  Always 0 without prefix caching."""
+        return 0
+
+    def swap_footprint(self, slot: int) -> int:
+        """Host blocks a swap-out of ``slot`` would consume (owned
+        blocks only; the prefix subclass excludes bound shared blocks)."""
+        return len(self._slot_blocks[slot])
+
+    def swap_out(self, slot: int, swap, *, uid: int, total_len: int,
+                 context_len: int):
+        """Copy ``slot``'s blocks into the host pool and release the
+        slot (blocks, reservation, table row).  Returns the
+        :class:`~repro.serving.slo.swap.SwapRecord` restore needs."""
+        rec = swap.store(self, uid=uid, total_len=total_len,
+                         context_len=context_len,
+                         blocks=list(self._slot_blocks[slot]),
+                         skip=0, hashes=[])
+        self.free_slot(slot)
+        return rec
+
+    def can_restore(self, rec) -> bool:
+        """Admission gate for a preempted request: same reservation test
+        as a fresh request of the recorded worst-case footprint."""
+        return self.can_allocate_slot(rec.total_len)
+
+    def restore_slot(self, slot: int, rec, swap) -> int:
+        """Rebuild ``slot`` from a swap record: re-reserve the worst-case
+        footprint, allocate device blocks for the recorded context, and
+        upload the host copies.  Returns the resume position (always the
+        full recorded context here; the prefix subclass may return less
+        when an evicted shared block forces recompute-by-prefill).  The
+        caller releases ``rec``'s host blocks afterwards."""
+        self.allocate_slot(slot, rec.total_len)
+        self.ensure_capacity(slot, rec.context_len)
+        held = self._slot_blocks[slot]
+        swap.load(self, [(rec.host_of[k], held[k])
+                         for k in range(rec.num_blocks)])
+        return rec.context_len
+
     def held_blocks(self, slot: int) -> int:
         return len(self._slot_blocks.get(slot, ()))
 

@@ -1,11 +1,15 @@
 """Request model for the continuous-batching engine.
 
 A :class:`Request` is what a client submits: prompt tokens, a generation
-budget, and an arrival time (milliseconds on the serving clock — 0 for
-"already here", or trace-driven Poisson arrivals).  A
+budget, an arrival time (milliseconds on the serving clock — 0 for
+"already here", or trace-driven Poisson arrivals), and — for SLO-aware
+scheduling (``repro.serving.slo``) — a :class:`Priority` class plus an
+optional latency target (an absolute ``deadline_ms`` or a
+``slo_tokens_per_s`` rate the deadline is derived from).  A
 :class:`RequestState` is the scheduler's view of one admitted request:
-which decode slot it occupies, how far prefill has progressed, and what
-has been generated so far.
+which decode slot it occupies, how far prefill has progressed, what has
+been generated so far, and (under preemption) the host-side swap record
+its KV blocks live in while it is off-device.
 """
 from __future__ import annotations
 
@@ -16,11 +20,22 @@ from typing import List, Optional
 import numpy as np
 
 
+class Priority(enum.IntEnum):
+    """Request priority class: lower value = more urgent.  The int
+    ordering is what policies and victim selection compare, so a plain
+    ``int`` works anywhere a Priority does."""
+
+    HIGH = 0
+    NORMAL = 1
+    LOW = 2
+
+
 class Status(enum.Enum):
-    QUEUED = "queued"      # waiting for a slot / KV blocks
-    PREFILL = "prefill"    # admitted; prompt chunks still being ingested
-    DECODE = "decode"      # one token per engine step
-    FINISHED = "finished"  # evicted; slot and blocks returned
+    QUEUED = "queued"        # waiting for a slot / KV blocks
+    PREFILL = "prefill"      # admitted; prompt (or resume) chunks being ingested
+    DECODE = "decode"        # one token per engine step
+    PREEMPTED = "preempted"  # evicted mid-flight; KV swapped to host, requeued
+    FINISHED = "finished"    # evicted; slot and blocks returned
 
 
 @dataclasses.dataclass
@@ -30,6 +45,12 @@ class Request:
     max_new_tokens: int
     arrival_ms: float = 0.0
     eos_id: Optional[int] = None
+    # SLO model (repro.serving.slo): priority class, and at most one way
+    # of stating a latency target — an absolute completion deadline, or
+    # a sustained token rate the deadline is derived from.
+    priority: Priority = Priority.NORMAL
+    deadline_ms: Optional[float] = None
+    slo_tokens_per_s: Optional[float] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, dtype=np.int32).reshape(-1)
@@ -37,6 +58,19 @@ class Request:
             raise ValueError(f"request {self.uid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.uid}: max_new_tokens must be >= 1")
+        try:
+            if isinstance(self.priority, str):
+                self.priority = Priority[self.priority.upper()]
+            elif not isinstance(self.priority, Priority):
+                self.priority = Priority(self.priority)
+        except KeyError:
+            raise ValueError(
+                f"request {self.uid}: unknown priority {self.priority!r}; "
+                f"expected one of {[p.name.lower() for p in Priority]}"
+            ) from None
+        if self.slo_tokens_per_s is not None and self.slo_tokens_per_s <= 0:
+            raise ValueError(
+                f"request {self.uid}: slo_tokens_per_s must be > 0")
 
     @property
     def prompt_len(self) -> int:
@@ -47,24 +81,59 @@ class Request:
         """Upper bound on context positions this request can occupy."""
         return self.prompt_len + self.max_new_tokens
 
+    @property
+    def effective_deadline_ms(self) -> Optional[float]:
+        """The completion deadline the SLO implies: ``deadline_ms`` when
+        given, else arrival + the time the worst-case generation takes
+        at ``slo_tokens_per_s``, else None (no deadline)."""
+        if self.deadline_ms is not None:
+            return self.deadline_ms
+        if self.slo_tokens_per_s is not None:
+            return self.arrival_ms + 1e3 * self.max_new_tokens / self.slo_tokens_per_s
+        return None
+
 
 @dataclasses.dataclass
 class RequestState:
     request: Request
     slot: int = -1
     status: Status = Status.QUEUED
-    prefill_pos: int = 0             # prompt tokens already ingested
+    prefill_pos: int = 0             # context tokens already ingested
     cached_tokens: int = 0           # prompt tokens served from the prefix cache
     generated: List[int] = dataclasses.field(default_factory=list)
     admitted_ms: float = 0.0
     admit_seq: int = -1              # admission order (scheduler FCFS tiebreak)
     first_token_ms: Optional[float] = None
     finished_ms: Optional[float] = None
+    # SLO scheduling (repro.serving.slo)
+    preemptions: int = 0             # times this request was swapped out
+    swap_record: Optional[object] = None  # SwapRecord while PREEMPTED
 
     @property
     def last_token(self) -> int:
         """Token to feed next in decode (the most recent sample)."""
         return self.generated[-1]
+
+    @property
+    def confirmed_tokens(self) -> np.ndarray:
+        """The token stream behind every KV position this request can
+        have written: the prompt plus every generated token that has
+        been fed back (all samples except the newest).  This is the
+        prefill *stream* too — a restored preempted request re-ingests
+        (or re-binds) exactly these tokens, which is why resume is
+        token-identical to an un-preempted run."""
+        if self.generated:
+            return np.concatenate(
+                [self.request.prompt,
+                 np.asarray(self.generated[:-1], np.int32)])
+        return self.request.prompt
+
+    @property
+    def prefill_target(self) -> int:
+        """Context length at which prefill completes and decode starts:
+        the prompt length for a fresh request, the full confirmed stream
+        for a preempted request resuming mid-decode."""
+        return int(self.confirmed_tokens.size)
 
     @property
     def context_len(self) -> int:
@@ -84,3 +153,16 @@ class RequestState:
         if self.finished_ms is None:
             return None
         return self.finished_ms - self.request.arrival_ms
+
+    def slack_ms(self, clock_ms: float) -> float:
+        """Time remaining until the request's effective deadline
+        (+inf when it has none); negative once the deadline is missed."""
+        d = self.request.effective_deadline_ms
+        return float("inf") if d is None else d - clock_ms
+
+    def met_deadline(self) -> Optional[bool]:
+        """True/False once finished and a deadline exists, else None."""
+        d = self.request.effective_deadline_ms
+        if d is None or self.finished_ms is None:
+            return None
+        return self.finished_ms <= d

@@ -24,6 +24,21 @@ running request can never hit block starvation mid-flight.
   head to keep slots (and the prefill pipeline) busy; earliest-arrival
   otherwise, so reordering only ever happens past a request that could
   not have been admitted anyway.
+* ``priority_strict`` / ``edf`` / ``cache_aware`` — the SLO-aware
+  policies (:mod:`repro.serving.slo.policies`, registered by the import
+  at the bottom of this module): strict priority classes, earliest
+  effective deadline, and warm-prefix preference.
+
+**Preemption** (``ServeConfig.slo``): when a higher-priority arrival
+cannot be admitted, :meth:`Scheduler.maybe_preempt` evicts a running
+victim — the *lowest-priority* one, most remaining work as tiebreak —
+by committing its confirmed context, swapping its owned KV blocks to
+the host-side :class:`~repro.serving.slo.swap.SwapManager` pool, and
+re-queueing it in arrival order as ``PREEMPTED``.  Re-admission goes
+through the same policy pick; ``_fits`` gates it on
+``kv_cache.can_restore`` and admission restores the blocks (host→device
+upload, or re-binding still-published prefix blocks) so generation
+resumes at the exact token.
 
 Eviction happens on EOS or on reaching ``max_new_tokens``; the slot and
 its blocks return to the free pools in the same step, so the next
@@ -32,10 +47,12 @@ whole point of continuous batching).
 """
 from __future__ import annotations
 
+import bisect
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
+from repro.configs.base import SLOConfig
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.request import Request, RequestState, Status
 
@@ -73,12 +90,16 @@ class AdmissionPolicy:
     """Picks the next request to admit.  ``pick`` sees the waiting list
     (arrival order), the clock, and a fit predicate; it returns an index
     into ``waiting`` or None when nothing should be admitted now.  The
-    scheduler calls it repeatedly until it declines or slots run out."""
+    scheduler calls it repeatedly until it declines or slots run out.
+    ``sched`` is the calling :class:`Scheduler` (for policies that read
+    engine state, e.g. ``cache_aware``'s warm-prefix probe); policies
+    must accept ``sched=None`` so they remain directly testable."""
 
     name = "abstract"
 
     def pick(self, waiting: Sequence[RequestState], clock_ms: float,
-             fits: Callable[[RequestState], bool]) -> Optional[int]:
+             fits: Callable[[RequestState], bool],
+             sched: Optional["Scheduler"] = None) -> Optional[int]:
         raise NotImplementedError
 
 
@@ -86,7 +107,7 @@ class AdmissionPolicy:
 class FCFSPolicy(AdmissionPolicy):
     name = "fcfs"
 
-    def pick(self, waiting, clock_ms, fits):
+    def pick(self, waiting, clock_ms, fits, sched=None):
         if not waiting:
             return None
         head = waiting[0]
@@ -99,7 +120,7 @@ class FCFSPolicy(AdmissionPolicy):
 class SJFPolicy(AdmissionPolicy):
     name = "sjf"
 
-    def pick(self, waiting, clock_ms, fits):
+    def pick(self, waiting, clock_ms, fits, sched=None):
         best: Optional[int] = None
         for i, st in enumerate(waiting):
             r = st.request
@@ -117,7 +138,7 @@ class SJFPolicy(AdmissionPolicy):
 class PrefillFirstPolicy(AdmissionPolicy):
     name = "prefill_first"
 
-    def pick(self, waiting, clock_ms, fits):
+    def pick(self, waiting, clock_ms, fits, sched=None):
         for i, st in enumerate(waiting):
             if st.request.arrival_ms > clock_ms:
                 continue
@@ -133,15 +154,25 @@ class PrefillFirstPolicy(AdmissionPolicy):
 class Scheduler:
     def __init__(self, max_slots: int, max_len: int,
                  kv_cache: Optional[PagedKVCache] = None,
-                 policy: str = "fcfs"):
+                 policy: str = "fcfs",
+                 slo: Optional[SLOConfig] = None):
         self.max_slots = max_slots
         self.max_len = max_len
         self.kv_cache = kv_cache
         self.policy = get_policy(policy)
+        self.slo = slo
+        self.swap = None
+        if slo is not None and slo.preemption and kv_cache is not None:
+            from repro.serving.slo.swap import SwapManager
+
+            self.swap = SwapManager(kv_cache, host_blocks=slo.host_blocks)
         self.waiting: List[RequestState] = []
         self.running: Dict[int, RequestState] = {}     # slot -> state
         self.free_slots: List[int] = list(range(max_slots - 1, -1, -1))
         self._admit_seq = 0                            # admission-order tiebreaker
+        self.preemptions = 0                           # swap-out count
+        self.restore_tokens = 0                        # context resumed from KV
+        self.recompute_tokens = 0                      # context re-prefilled
 
     # -- intake -------------------------------------------------------------
 
@@ -165,31 +196,53 @@ class Scheduler:
     # -- admission ----------------------------------------------------------
 
     def _fits(self, st: RequestState) -> bool:
-        return (self.kv_cache is None
-                or self.kv_cache.can_allocate_slot(st.request.total_len,
-                                                   prompt=st.request.prompt))
+        if self.kv_cache is None:
+            return True
+        if st.status is Status.PREEMPTED:
+            return self.kv_cache.can_restore(st.swap_record)
+        return self.kv_cache.can_allocate_slot(st.request.total_len,
+                                               prompt=st.request.prompt)
 
     def admit(self, clock_ms: float) -> List[RequestState]:
         """Admit from the queue under the configured policy: arrived
         requests only, while a slot (and, when paged, an unreserved
-        worst-case KV footprint) is available."""
+        worst-case KV footprint) is available.  A ``PREEMPTED`` pick is
+        *restored* instead of freshly allocated: its recorded KV blocks
+        come back (host→device upload and/or prefix re-bind) and prefill
+        resumes at the restored position — all the way at the confirmed
+        frontier when the whole context came back, in which case it goes
+        straight to DECODE."""
         admitted = []
         while self.free_slots:
-            idx = self.policy.pick(self.waiting, clock_ms, self._fits)
+            idx = self.policy.pick(self.waiting, clock_ms, self._fits,
+                                   sched=self)
             if idx is None:
                 break
             st = self.waiting.pop(idx)
             slot = self.free_slots.pop()
             st.cached_tokens = 0
-            if self.kv_cache is not None:
-                # prefix caching: matched prompt-prefix blocks are bound
-                # into the slot's table (already-written context), so
-                # prefill resumes at the first uncached token
-                st.cached_tokens = self.kv_cache.allocate_slot(
-                    slot, st.request.total_len, prompt=st.request.prompt)
+            if st.status is Status.PREEMPTED:
+                rec, st.swap_record = st.swap_record, None
+                resume = rec.context_len
+                if self.kv_cache is not None:
+                    resume = self.kv_cache.restore_slot(slot, rec, self.swap)
+                    self.swap.release(rec)
+                    self.restore_tokens += resume
+                    self.recompute_tokens += rec.context_len - resume
+                st.prefill_pos = resume
+                st.status = (Status.DECODE if resume >= st.prefill_target
+                             else Status.PREFILL)
+            else:
+                if self.kv_cache is not None:
+                    # prefix caching: matched prompt-prefix blocks are
+                    # bound into the slot's table (already-written
+                    # context), so prefill resumes at the first uncached
+                    # token
+                    st.cached_tokens = self.kv_cache.allocate_slot(
+                        slot, st.request.total_len, prompt=st.request.prompt)
+                st.status = Status.PREFILL
+                st.prefill_pos = st.cached_tokens
             st.slot = slot
-            st.status = Status.PREFILL
-            st.prefill_pos = st.cached_tokens
             st.admitted_ms = clock_ms
             st.admit_seq = self._admit_seq
             self._admit_seq += 1
@@ -218,6 +271,82 @@ class Scheduler:
         st.status = Status.FINISHED
         st.finished_ms = clock_ms
 
+    # -- preemption (repro.serving.slo) --------------------------------------
+
+    def preempt(self, st: RequestState, clock_ms: float) -> None:
+        """Evict a running request to make room for a more urgent one:
+        commit its confirmed context (published full blocks stay
+        matchable), swap its owned KV blocks to the host pool, release
+        the slot, and put it back in the waiting queue — at its
+        *arrival-order* position, not the back of the line — as
+        ``PREEMPTED``."""
+        assert self.swap is not None, "preemption requires ServeConfig.slo"
+        slot = st.slot
+        assert self.running.get(slot) is st, f"slot {slot} not running"
+        del self.running[slot]
+        self.free_slots.append(slot)
+        ctx = st.context_len
+        if self.kv_cache is not None:
+            self.kv_cache.commit(slot, st.confirmed_tokens[:ctx])
+            st.swap_record = self.kv_cache.swap_out(
+                slot, self.swap, uid=st.request.uid,
+                total_len=st.request.total_len, context_len=ctx)
+        st.slot = -1
+        st.status = Status.PREEMPTED
+        st.preemptions += 1
+        self.preemptions += 1
+        keys = [(w.request.arrival_ms, w.request.uid) for w in self.waiting]
+        self.waiting.insert(
+            bisect.bisect_left(keys, (st.request.arrival_ms, st.request.uid)),
+            st)
+
+    def maybe_preempt(self, clock_ms: float) -> int:
+        """Preemption decision point, called once per engine step before
+        admission.  The candidate is the *admission policy's* next
+        choice (its pick under a permissive fit) — preemption enforces
+        the policy's ordering against running work, it does not impose
+        a second one.  Deciding the candidate any other way thrashes:
+        evicting a victim for an urgent arrival the policy would not
+        actually admit next just burns a swap round trip (e.g.
+        ``cache_aware`` hands a freed slot back to the warm victim it
+        came from).  While that candidate is in the preempting class
+        band (``slo.preempt_threshold``) and cannot be admitted, evict
+        the strictly-lower-priority victim with the lowest class, then
+        the most remaining work (its progress is the cheapest to set
+        aside — re-admission restores, it does not recompute), then the
+        latest admission.  Declines gracefully: no victim, victim at
+        its preemption cap, or host pool full ⇒ stop (the candidate
+        waits, which is exactly pre-SLO behaviour)."""
+        if self.swap is None:
+            return 0
+        evicted = 0
+        while self.waiting:
+            idx = self.policy.pick(self.waiting, clock_ms,
+                                   lambda st: True, sched=self)
+            if idx is None:
+                break
+            cand = self.waiting[idx]
+            if int(cand.request.priority) > self.slo.preempt_threshold:
+                break            # urgent enough to queue-jump, not to evict
+            if self.free_slots and self._fits(cand):
+                break                                   # admit() will take it
+            victims = [st for st in self.running.values()
+                       if int(st.request.priority) > int(cand.request.priority)
+                       and st.preemptions < self.slo.max_preemptions]
+            if not victims:
+                break
+            victim = max(
+                victims,
+                key=lambda s: (int(s.request.priority),
+                               s.request.total_len - s.context_len,
+                               s.admit_seq))
+            if (self.kv_cache is not None and not self.swap.can_store(
+                    self.kv_cache.swap_footprint(victim.slot))):
+                break
+            self.preempt(victim, clock_ms)
+            evicted += 1
+        return evicted
+
     # -- queries ------------------------------------------------------------
 
     @property
@@ -239,8 +368,37 @@ class Scheduler:
     def check_conservation(self) -> None:
         """Slot/block invariants: every slot is exactly free or running,
         and the cache accounts for every block and reservation exactly
-        once (table rows never dangle)."""
+        once (table rows never dangle).  With preemption enabled, the
+        host pool conserves too: every allocated host block belongs to
+        exactly one live swap record, every record to exactly one
+        PREEMPTED waiting request — so a swapped block is counted on the
+        host side only, against neither the device free list nor any
+        reservation."""
         assert len(self.free_slots) + len(self.running) == self.max_slots
         assert set(self.free_slots).isdisjoint(self.running.keys())
         if self.kv_cache is not None:
             self.kv_cache.check_conservation()
+        for st in self.waiting:
+            if st.status is Status.PREEMPTED:
+                assert self.swap is not None
+                assert st.swap_record is not None, st.request.uid
+                assert self.swap.records.get(
+                    st.request.uid) is st.swap_record, st.request.uid
+            else:
+                assert st.status is Status.QUEUED, st.request.uid
+                assert st.swap_record is None, st.request.uid
+        if self.swap is not None:
+            self.swap.check_conservation()
+            preempted = {st.request.uid for st in self.waiting
+                         if st.status is Status.PREEMPTED}
+            assert preempted == set(self.swap.records), (
+                preempted, set(self.swap.records))
+        for st in self.running.values():
+            assert st.swap_record is None, st.request.uid
+
+
+# Registered last so the registry (and `ServeConfig.sched_policy`
+# validation) always includes the SLO-aware policies; the module imports
+# `register_policy` back from here, which is safe because everything it
+# needs is defined above.
+from repro.serving.slo import policies as _slo_policies  # noqa: E402,F401

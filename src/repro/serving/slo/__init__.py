@@ -1,0 +1,11 @@
+"""SLO-aware scheduling: priority classes, preemption with KV
+swap-to-host, and deadline/cache-aware admission policies.
+
+Importing :mod:`repro.serving.scheduler` registers the policies in this
+package (``priority_strict``, ``edf``, ``cache_aware``) alongside the
+base fcfs/sjf/prefill_first entries; :class:`SwapManager` is the
+host-side block pool preempted requests' KV lives in while they wait.
+"""
+from repro.serving.slo.swap import SwapManager, SwapRecord
+
+__all__ = ["SwapManager", "SwapRecord"]

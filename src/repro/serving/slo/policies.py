@@ -1,0 +1,87 @@
+"""SLO-aware admission policies.
+
+Registered into the same registry as fcfs/sjf/prefill_first
+(:mod:`repro.serving.scheduler` imports this module at the bottom of
+its definition, so every ``ServeConfig`` validation sees them).  All
+three degrade gracefully on plain traffic: with uniform priorities and
+no deadlines they reduce to arrival order, so the engine's
+policy-invariance tests hold for them too.
+
+* ``priority_strict`` — admit the most urgent class first (HIGH before
+  NORMAL before LOW), arrival order within a class.  Pairs with
+  preemption (``SLOConfig.preemption``): a HIGH arrival that cannot be
+  admitted evicts a lower-class victim.  LOW can starve under sustained
+  HIGH load — that is the contract, not a bug.
+* ``edf`` — earliest effective deadline first (``deadline_ms``, or
+  derived from ``slo_tokens_per_s``); deadline-less requests sort last
+  (+inf), arrival order among themselves.  Minimizes lateness when the
+  system is feasible; degrades to fcfs when nobody states a deadline.
+* ``cache_aware`` — prefer the request with the most *warm* prompt
+  tokens: prefix-cache index hits for queued requests, restorable
+  context for preempted ones.  Warm admissions prefill in O(blocks)
+  table writes instead of O(tokens) compute, so under overload this
+  maximizes prefill throughput; ties (including all-cold queues) fall
+  back to arrival order.
+"""
+from __future__ import annotations
+
+from repro.serving.request import Status
+from repro.serving.scheduler import AdmissionPolicy, register_policy
+
+
+@register_policy
+class PriorityStrictPolicy(AdmissionPolicy):
+    name = "priority_strict"
+
+    def pick(self, waiting, clock_ms, fits, sched=None):
+        best = best_key = None
+        for i, st in enumerate(waiting):
+            r = st.request
+            if r.arrival_ms > clock_ms or not fits(st):
+                continue
+            key = (int(r.priority), r.arrival_ms, r.uid)
+            if best is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+
+@register_policy
+class EDFPolicy(AdmissionPolicy):
+    name = "edf"
+
+    def pick(self, waiting, clock_ms, fits, sched=None):
+        best = best_key = None
+        for i, st in enumerate(waiting):
+            r = st.request
+            if r.arrival_ms > clock_ms or not fits(st):
+                continue
+            d = r.effective_deadline_ms
+            key = (d if d is not None else float("inf"), r.arrival_ms, r.uid)
+            if best is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+
+@register_policy
+class CacheAwarePolicy(AdmissionPolicy):
+    name = "cache_aware"
+
+    def pick(self, waiting, clock_ms, fits, sched=None):
+        cache = getattr(sched, "kv_cache", None)
+        best = best_key = None
+        for i, st in enumerate(waiting):
+            r = st.request
+            if r.arrival_ms > clock_ms or not fits(st):
+                continue
+            warm = 0
+            if cache is not None:
+                if st.status is Status.PREEMPTED:
+                    # a preempted request's whole context is warm: its
+                    # blocks restore by re-bind or host upload
+                    warm = st.swap_record.context_len
+                else:
+                    warm = cache.warm_prefix_tokens(r.prompt)
+            key = (-warm, r.arrival_ms, r.uid)
+            if best is None or key < best_key:
+                best, best_key = i, key
+        return best

@@ -1,0 +1,192 @@
+"""Host-side KV block pool for preemption swap-out/swap-in.
+
+Preempting a running request frees its slot and device KV blocks for a
+higher-priority request; to resume later without recomputing the whole
+context, the victim's block *contents* move to a preallocated host-side
+numpy pool and its block-table row is snapshotted into a
+:class:`SwapRecord`.  The copy is **refcount-aware**: blocks the slot
+merely *binds* from the prefix cache (shared, read-only — table indices
+``[0, bound)``) are not copied at all; the record keeps their chain
+hashes, and restore re-binds whichever physical block the
+:class:`~repro.serving.prefix_cache.PrefixIndex` currently maps each
+hash to (content-equal by construction).  Only the slot's *owned*
+blocks go device→host.
+
+Restore is the mirror image: re-bind every leading recorded hash that is
+still published, upload the remaining host copies into freshly
+allocated device blocks, and hand the engine a resume position.  If a
+re-bindable prefix block was evicted from the index in the meantime
+(a *hole*), the host copies past it are useless on their own — KV at
+position ``p`` is only meaningful with all positions before it — so
+restore stops at the hole and the engine recomputes the tail by
+resume-prefill from the request's confirmed token stream.  Either way
+the resumed request is token-identical to an un-preempted run: the
+re-bound/uploaded blocks hold exactly the K/V a fresh prefill of those
+tokens at those absolute positions would write.
+
+Conservation: a host block is held by exactly one live record; device
+and host accounting never overlap (swap-out frees device blocks in the
+same step it fills host blocks), so a swapped block counts against
+neither the device free list nor any reservation — the extended
+scheduler invariant checks exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.kv_cache import BlockAllocator, PagedKVCache
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """Everything needed to rebuild one preempted slot.
+
+    ``hashes`` covers the slot's committed *full* blocks (bound prefix +
+    owned-and-published), in table order; ``host_of`` maps table index
+    ``k`` to the host block holding its copy, for every owned block
+    (``k >= skip``).  The partial trailing block (if any) has a host
+    copy but no hash — it is never publishable.
+    """
+
+    uid: int
+    total_len: int                    # worst-case footprint to re-reserve
+    context_len: int                  # KV positions written at swap-out
+    num_blocks: int                   # device blocks held at swap-out
+    skip: int                         # leading bound (shared) blocks, not copied
+    hashes: List[bytes]               # chain hash per committed full block
+    host_of: Dict[int, int]           # table index -> host block id
+
+
+class SwapManager:
+    """Preallocated host-side numpy K/V pools + a free-list allocator
+    over them.  Shapes mirror the device pools but host-block-major:
+    ``(host_blocks, num_layers, Hkv, block_size, head_dim)``, so one
+    record's blocks copy as a single fancy-index slice each way."""
+
+    def __init__(self, cache: PagedKVCache, host_blocks: Optional[int] = None):
+        self.host_blocks = int(host_blocks) if host_blocks else cache.num_blocks
+        layers, _, hkv, bs, hd = cache.k_pool.shape
+        dtype = np.dtype(cache.k_pool.dtype)      # bf16 via ml_dtypes
+        shape = (self.host_blocks, layers, hkv, bs, hd)
+        self._k_host = np.zeros(shape, dtype)
+        self._v_host = np.zeros(shape, dtype)
+        self.allocator = BlockAllocator(self.host_blocks)
+        self.records: Dict[int, SwapRecord] = {}  # uid -> live record
+        self.stats = {"swap_outs": 0, "swap_ins": 0,
+                      "swapped_blocks": 0, "restored_blocks": 0}
+        self._prewarm(cache)
+
+    @staticmethod
+    def _pad_width(cache: PagedKVCache) -> int:
+        return cache.block_table.shape[1]
+
+    def _prewarm(self, cache: PagedKVCache) -> None:
+        """Compile the fixed-width gather/scatter kernels now, at
+        construction, so the ~50ms-per-kernel XLA cost never lands
+        inside a serving step (the first preemption would otherwise
+        stall by ~0.2s)."""
+        idx = np.zeros(self._pad_width(cache), dtype=np.int64)
+        kh = np.moveaxis(np.asarray(cache.k_pool[:, idx]), 1, 0)
+        vh = np.moveaxis(np.asarray(cache.v_pool[:, idx]), 1, 0)
+        # writes block 0's own content back to block 0 — a no-op by value
+        cache.k_pool = cache.k_pool.at[:, idx].set(
+            jnp.asarray(np.moveaxis(kh, 0, 1)))
+        cache.v_pool = cache.v_pool.at[:, idx].set(
+            jnp.asarray(np.moveaxis(vh, 0, 1)))
+
+    # -- capacity ------------------------------------------------------------
+
+    def can_store(self, n_blocks: int) -> bool:
+        return self.allocator.can_alloc(n_blocks)
+
+    @property
+    def used_host_blocks(self) -> int:
+        return self.allocator.allocated_count
+
+    # -- device -> host ------------------------------------------------------
+
+    def store(self, cache: PagedKVCache, *, uid: int, total_len: int,
+              context_len: int, blocks: Sequence[int], skip: int,
+              hashes: Sequence[bytes]) -> SwapRecord:
+        """Copy ``blocks[skip:]`` (the slot's owned blocks) to host and
+        return the record.  Caller still owns the device blocks — it
+        frees them via the cache immediately after."""
+        if uid in self.records:
+            raise RuntimeError(f"request {uid} already has a live swap record")
+        copy_ks = list(range(skip, len(blocks)))
+        host_ids = self.allocator.alloc(len(copy_ks))
+        if copy_ks:
+            # Pad the gather to the fixed per-slot width: XLA caches the
+            # kernel on the index vector's *shape*, so a variable-length
+            # gather recompiles (~50ms) on every new block count.  The
+            # pad entries repeat a real block and are sliced off after
+            # the transfer.
+            dev = [blocks[k] for k in copy_ks]
+            n = len(dev)
+            idx = np.asarray(dev + dev[:1] * (self._pad_width(cache) - n),
+                             dtype=np.int64)
+            # (L, n, Hkv, bs, D) -> host-block-major (n, L, Hkv, bs, D)
+            self._k_host[host_ids] = np.moveaxis(
+                np.asarray(cache.k_pool[:, idx]), 1, 0)[:n]
+            self._v_host[host_ids] = np.moveaxis(
+                np.asarray(cache.v_pool[:, idx]), 1, 0)[:n]
+        rec = SwapRecord(uid=uid, total_len=total_len,
+                         context_len=context_len, num_blocks=len(blocks),
+                         skip=skip, hashes=list(hashes),
+                         host_of=dict(zip(copy_ks, host_ids)))
+        self.records[uid] = rec
+        self.stats["swap_outs"] += 1
+        self.stats["swapped_blocks"] += len(copy_ks)
+        return rec
+
+    # -- host -> device ------------------------------------------------------
+
+    def load(self, cache: PagedKVCache,
+             pairs: Sequence[Tuple[int, int]]) -> None:
+        """Upload host blocks into device blocks: ``pairs`` is
+        ``[(host_id, device_id), ...]``."""
+        if not pairs:
+            return
+        n = len(pairs)
+        # Same fixed-width trick as ``store``: pad the scatter by
+        # repeating the first pair.  Duplicate scatter indices all carry
+        # that pair's host content, so the overlap is value-identical
+        # and the write order does not matter.
+        padded = list(pairs) + [pairs[0]] * (self._pad_width(cache) - n)
+        host_ids = np.asarray([h for h, _ in padded], dtype=np.int64)
+        dev_ids = np.asarray([d for _, d in padded], dtype=np.int64)
+        k = jnp.asarray(np.moveaxis(self._k_host[host_ids], 0, 1))
+        v = jnp.asarray(np.moveaxis(self._v_host[host_ids], 0, 1))
+        cache.k_pool = cache.k_pool.at[:, dev_ids].set(k)
+        cache.v_pool = cache.v_pool.at[:, dev_ids].set(v)
+        self.stats["swap_ins"] += 1
+        self.stats["restored_blocks"] += n
+
+    def release(self, rec: SwapRecord) -> None:
+        """Return the record's host blocks (after restore, or when the
+        request is dropped while preempted)."""
+        if self.records.get(rec.uid) is not rec:
+            raise RuntimeError(f"release of stale swap record for {rec.uid}")
+        if rec.host_of:
+            self.allocator.free(list(rec.host_of.values()))
+        del self.records[rec.uid]
+
+    # -- invariants ----------------------------------------------------------
+
+    def check_conservation(self) -> None:
+        """Host allocator conservation plus record/host-block bijection:
+        every allocated host block is held by exactly one live record."""
+        self.allocator.check_conservation()
+        used: set = set()
+        for rec in self.records.values():
+            ids = set(rec.host_of.values())
+            assert len(ids) == len(rec.host_of), rec.uid
+            assert not (ids & used), f"host block shared across records"
+            assert all(k >= rec.skip for k in rec.host_of), rec.uid
+            used |= ids
+        assert len(used) == self.allocator.allocated_count, (
+            len(used), self.allocator.allocated_count)

@@ -1,7 +1,9 @@
 """Hypothesis property tests for BlockAllocator / PagedKVCache under
-interleaved allocate / grow / truncate / free sequences (the lifecycle
-speculative decoding exercises: admission reserves, decode grows,
-rejection rewinds, eviction frees).
+interleaved allocate / grow / truncate / free / swap-out / swap-in
+sequences (the lifecycles speculative decoding and SLO preemption
+exercise: admission reserves, decode grows, rejection rewinds,
+preemption moves blocks to the host pool and restore brings them back,
+eviction frees).
 
 Invariants (see kv_cache.py):
 
@@ -96,14 +98,21 @@ def test_allocator_interleavings(case):
 
 def check_cache_sequence(max_slots, bs, num_blocks, ops):
     """ops: (kind, slot, amount); kind 0=allocate_slot, 1=ensure_capacity,
-    2=truncate_slot, 3=free_slot.  A host-side model of per-slot
-    (reserved_len, current_len) decides legality; the cache must accept
-    every legal op and keep its invariants after each one."""
+    2=truncate_slot, 3=free_slot, 4=swap_out, 5=swap_in (the preemption
+    lifecycle: a swapped-out slot leaves the device model entirely and
+    lives as a host record until restored).  A host-side model of
+    per-slot (reserved_len, current_len) decides legality; the cache
+    must accept every legal op and keep its invariants after each one."""
+    from repro.serving.slo.swap import SwapManager
+
     serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
                         max_len=max(num_blocks * bs, 2),
                         num_blocks=num_blocks)
     cache = PagedKVCache(_cfg(), serve)
+    swap = SwapManager(cache, host_blocks=num_blocks)
     model = {}                                  # slot -> [total_len, cur_len]
+    swapped = []                                # [(rec, total_len, cur_len)]
+    next_uid = 0
 
     def reserved_blocks():
         return sum(-(-t // bs) for t, _ in model.values())
@@ -135,16 +144,45 @@ def check_cache_sequence(max_slots, bs, num_blocks, ops):
             cache.free_slot(slot)
             del model[slot]
             assert (cache.block_table[slot] == cache.garbage_block).all()
+        elif kind == 4 and slot in model:
+            total, cur = model[slot]
+            foot = cache.swap_footprint(slot)
+            assert foot == -(-cur // bs)
+            if swap.can_store(foot):
+                rec = cache.swap_out(slot, swap, uid=next_uid,
+                                     total_len=total, context_len=cur)
+                next_uid += 1
+                swapped.append((rec, total, cur))
+                del model[slot]
+                assert (cache.block_table[slot] == cache.garbage_block).all()
+        elif kind == 5 and swapped and slot not in model:
+            rec, total, cur = swapped[amount % len(swapped)]
+            if cache.can_restore(rec):
+                swapped.remove((rec, total, cur))
+                resume = cache.restore_slot(slot, rec, swap)
+                swap.release(rec)
+                assert resume == cur        # plain paged: always a full restore
+                model[slot] = [total, cur]
+                assert cache.held_blocks(slot) == -(-cur // bs)
+            else:
+                assert (reserved_blocks() + -(-total // bs)) > num_blocks
         cache.check_conservation()
+        swap.check_conservation()
         assert cache.reserved_total == reserved_blocks()
         assert cache.reserved_total <= num_blocks
         held = sum(-(-cur // bs) for _, cur in model.values())
         assert cache.allocator.free_count == num_blocks - held
+        assert swap.used_host_blocks == sum(
+            -(-cur // bs) for _, _, cur in swapped)
     for slot in list(model):
         cache.free_slot(slot)
+    for rec, _, _ in swapped:
+        swap.release(rec)
     cache.check_conservation()
+    swap.check_conservation()
     assert cache.allocator.free_count == num_blocks
     assert cache.reserved_total == 0
+    assert swap.used_host_blocks == 0
     assert (cache.block_table == cache.garbage_block).all()
 
 
@@ -154,7 +192,7 @@ def cache_cases(draw):
     bs = draw(st.sampled_from([1, 4, 8]))
     num_blocks = draw(st.integers(1, 24))
     ops = draw(st.lists(
-        st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(0, 256)),
+        st.tuples(st.integers(0, 5), st.integers(0, 3), st.integers(0, 256)),
         max_size=50))
     return max_slots, bs, num_blocks, ops
 
@@ -199,3 +237,10 @@ def test_cache_checkers_run_without_hypothesis():
     check_cache_sequence(2, 4, 8, [
         (0, 0, 15), (1, 0, 10), (2, 0, 3), (1, 0, 15),
         (0, 1, 12), (1, 1, 12), (3, 0, 0), (2, 1, 0), (3, 1, 0)])
+    # preemption lifecycle: swap out mid-growth, restore into the other
+    # slot, double-swap pressure against a shared host pool
+    check_cache_sequence(2, 4, 8, [
+        (0, 0, 15), (1, 0, 10), (4, 0, 0),          # out @ 10 tokens
+        (0, 0, 12), (1, 0, 12), (5, 1, 0),          # back into slot 1
+        (4, 0, 0), (4, 1, 0), (5, 0, 0), (5, 1, 1),
+        (3, 0, 0), (3, 1, 0)])

@@ -1,0 +1,437 @@
+"""Deterministic goldens for the SLO scheduling subsystem
+(repro.serving.slo): priority classes, admission-policy ordering,
+KV swap-to-host, and preemption/restore token identity.
+
+Covers, bottom-up:
+
+* Request priority/deadline plumbing — string coercion, effective
+  deadline derived from a per-token rate SLO;
+* policy ordering — ``priority_strict`` (class, then arrival),
+  ``edf`` (earliest effective deadline, deadline-less last), and
+  graceful degradation to arrival order on plain traffic;
+* ``cache_aware`` — a warm prompt (published prefix blocks) beats an
+  earlier-arriving cold one;
+* SwapManager — device→host→device roundtrip preserves pool contents
+  bit-exactly, conservation (record/host-block bijection), double
+  release and duplicate-uid detection, capacity refusal;
+* prefix-cache swap-out/restore — published full blocks restore by
+  re-bind (no host upload), only the partial tail uploads;
+* engine level — preempt-then-restore generates token-identically to
+  an un-preempted run (dense and dropless-hash MoE, prefix caching on
+  and off), with invariants checked every step;
+* the synthetic_priority trace family and per-class run() stats.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ModelConfig, ServeConfig, SLOConfig
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.prefix_cache import PrefixCachingKVCache
+from repro.serving.request import Priority, Request, RequestState, Status
+from repro.serving.scheduler import Scheduler, get_policy
+from repro.serving.slo.swap import SwapManager
+from repro.serving.trace import (
+    load_trace,
+    save_trace,
+    slo_class_stats,
+    synthetic_priority,
+)
+
+
+def _cfg():
+    return ModelConfig(name="t", family="decoder_lm", num_layers=1,
+                       d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                       vocab_size=64, dtype="float32")
+
+
+def _paged(max_slots=2, bs=4, num_blocks=8, max_len=32):
+    serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
+                        max_len=max_len, num_blocks=num_blocks)
+    return PagedKVCache(_cfg(), serve)
+
+
+def _prefix(max_slots=4, bs=4, num_blocks=16, max_len=64):
+    serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
+                        max_len=max_len, num_blocks=num_blocks,
+                        prefix_cache=True)
+    return PrefixCachingKVCache(_cfg(), serve)
+
+
+def _st(uid, arrival=0.0, priority=Priority.NORMAL, deadline=None, gen=4,
+        prompt_len=4):
+    r = Request(uid=uid, prompt=np.arange(prompt_len, dtype=np.int32),
+                max_new_tokens=gen, arrival_ms=arrival, priority=priority,
+                deadline_ms=deadline)
+    return RequestState(r)
+
+
+# ---------------------------------------------------------------------------
+# Request: priority coercion, effective deadline
+# ---------------------------------------------------------------------------
+
+def test_priority_coercion_and_effective_deadline():
+    p = np.arange(4, dtype=np.int32)
+    assert Request(uid=0, prompt=p, max_new_tokens=4,
+                   priority="high").priority is Priority.HIGH
+    assert Request(uid=1, prompt=p, max_new_tokens=4,
+                   priority=2).priority is Priority.LOW
+    with pytest.raises(ValueError):
+        Request(uid=2, prompt=p, max_new_tokens=4, priority="urgent")
+    # explicit deadline wins; otherwise derived from the rate SLO
+    r = Request(uid=3, prompt=p, max_new_tokens=10, arrival_ms=100.0,
+                deadline_ms=500.0, slo_tokens_per_s=1000.0)
+    assert r.effective_deadline_ms == 500.0
+    r = Request(uid=4, prompt=p, max_new_tokens=10, arrival_ms=100.0,
+                slo_tokens_per_s=1000.0)        # 10 tokens @ 1k tok/s = 10ms
+    assert r.effective_deadline_ms == pytest.approx(110.0)
+    assert Request(uid=5, prompt=p,
+                   max_new_tokens=10).effective_deadline_ms is None
+
+
+# ---------------------------------------------------------------------------
+# Policy ordering goldens
+# ---------------------------------------------------------------------------
+
+def test_priority_strict_ordering():
+    pol = get_policy("priority_strict")
+    waiting = [_st(0, arrival=0.0, priority=Priority.NORMAL),
+               _st(1, arrival=5.0, priority=Priority.HIGH),
+               _st(2, arrival=3.0, priority=Priority.HIGH),
+               _st(3, arrival=0.0, priority=Priority.LOW)]
+    fits = lambda st: True
+    # earliest-arriving HIGH first, regardless of queue position
+    assert pol.pick(waiting, 10.0, fits) == 2
+    # un-arrived requests are invisible
+    waiting[2].request = Request(uid=2, prompt=waiting[2].request.prompt,
+                                 max_new_tokens=4, arrival_ms=100.0,
+                                 priority=Priority.HIGH)
+    assert pol.pick(waiting, 10.0, fits) == 1
+    # a HIGH that does not fit falls through to the next class
+    assert pol.pick(waiting, 10.0,
+                    lambda st: st.request.priority is not Priority.HIGH) == 0
+    assert pol.pick(waiting, 10.0, lambda st: False) is None
+
+
+def test_edf_ordering():
+    pol = get_policy("edf")
+    waiting = [_st(0, arrival=0.0, deadline=None),
+               _st(1, arrival=2.0, deadline=500.0),
+               _st(2, arrival=4.0, deadline=200.0)]
+    fits = lambda st: True
+    assert pol.pick(waiting, 10.0, fits) == 2      # earliest deadline
+    # deadline-less requests sort last (+inf), arrival order among them
+    waiting = [_st(0, arrival=5.0), _st(1, arrival=1.0),
+               _st(2, arrival=3.0, deadline=9999.0)]
+    assert pol.pick(waiting, 10.0, fits) == 2
+
+
+def test_slo_policies_degrade_to_arrival_order():
+    """Uniform priorities, no deadlines, no cache: every SLO policy
+    reduces to fcfs, so plain traffic is unaffected."""
+    waiting = [_st(0, arrival=3.0), _st(1, arrival=1.0), _st(2, arrival=2.0)]
+    fits = lambda st: True
+    for name in ("priority_strict", "edf", "cache_aware"):
+        assert get_policy(name).pick(waiting, 10.0, fits) == 1, name
+
+
+def test_cache_aware_prefers_warm_prompt():
+    cache = _prefix()
+    bs = cache.block_size
+    # 3 full blocks + a 2-token tail (a fully block-aligned prompt would
+    # be capped: at least one prompt row must run)
+    warm_prompt = np.arange(14, dtype=np.int32)
+    # publish the prompt's full blocks: cold prefill, commit, evict
+    cache.allocate_slot(0, 20, prompt=warm_prompt)
+    cache.ensure_capacity(0, warm_prompt.size)
+    cache.commit(0, warm_prompt)
+    cache.free_slot(0)
+    assert cache.warm_prefix_tokens(warm_prompt) == (14 // bs) * bs
+    assert cache.warm_prefix_tokens(warm_prompt + 1) == 0
+
+    sched = Scheduler(max_slots=2, max_len=64, kv_cache=cache,
+                      policy="cache_aware")
+    cold = Request(uid=0, prompt=np.arange(14, dtype=np.int32) + 40,
+                   max_new_tokens=4, arrival_ms=0.0)
+    warm = Request(uid=1, prompt=warm_prompt, max_new_tokens=4,
+                   arrival_ms=5.0)
+    sched.add(cold)
+    sched.add(warm)
+    admitted = sched.admit(10.0)
+    assert [st.request.uid for st in admitted] == [1, 0]
+    assert admitted[0].cached_tokens == (14 // bs) * bs
+
+
+# ---------------------------------------------------------------------------
+# SwapManager: roundtrip golden + conservation
+# ---------------------------------------------------------------------------
+
+def test_swap_roundtrip_preserves_pool_contents():
+    cache = _paged()
+    cache.allocate_slot(0, total_len=12)
+    cache.ensure_capacity(0, 10)                   # 3 blocks, last partial
+    blocks = [int(b) for b in cache.block_table[0][:3]]
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=np.asarray(cache.k_pool[:, blocks]).shape
+                   ).astype(np.float32)
+    v = rng.normal(size=k.shape).astype(np.float32)
+    cache.k_pool = cache.k_pool.at[:, blocks].set(k)
+    cache.v_pool = cache.v_pool.at[:, blocks].set(v)
+
+    swap = SwapManager(cache, host_blocks=4)
+    rec = cache.swap_out(0, swap, uid=7, total_len=12, context_len=10)
+    # device side fully released, host side holds exactly the copies
+    assert cache.allocator.free_count == cache.num_blocks
+    assert cache.reserved_total == 0
+    assert swap.used_host_blocks == 3
+    assert rec.num_blocks == 3 and rec.skip == 0 and rec.context_len == 10
+    swap.check_conservation()
+    cache.check_conservation()
+
+    assert cache.can_restore(rec)
+    resume = cache.restore_slot(1, rec, swap)
+    assert resume == 10
+    new_blocks = [int(b) for b in cache.block_table[1][:3]]
+    np.testing.assert_array_equal(np.asarray(cache.k_pool[:, new_blocks]), k)
+    np.testing.assert_array_equal(np.asarray(cache.v_pool[:, new_blocks]), v)
+    swap.release(rec)
+    assert swap.used_host_blocks == 0
+    cache.free_slot(1)
+    cache.check_conservation()
+    swap.check_conservation()
+
+
+def test_swap_release_and_store_misuse_detected():
+    cache = _paged()
+    swap = SwapManager(cache, host_blocks=4)
+    cache.allocate_slot(0, total_len=8)
+    cache.ensure_capacity(0, 8)
+    rec = cache.swap_out(0, swap, uid=1, total_len=8, context_len=8)
+    swap.release(rec)
+    with pytest.raises(RuntimeError):
+        swap.release(rec)                          # stale record
+    cache.allocate_slot(0, total_len=8)
+    cache.ensure_capacity(0, 8)
+    cache.swap_out(0, swap, uid=2, total_len=8, context_len=8)
+    cache.allocate_slot(1, total_len=8)
+    cache.ensure_capacity(1, 8)
+    with pytest.raises(RuntimeError):
+        # uid 2 already has a live record
+        swap.store(cache, uid=2, total_len=8, context_len=8,
+                   blocks=[int(b) for b in cache.block_table[1][:2]],
+                   skip=0, hashes=[])
+
+
+def test_swap_capacity_refusal():
+    cache = _paged()
+    swap = SwapManager(cache, host_blocks=2)
+    assert swap.can_store(2)
+    assert not swap.can_store(3)
+    cache.allocate_slot(0, total_len=8)
+    cache.ensure_capacity(0, 8)                    # 2 blocks
+    assert cache.swap_footprint(0) == 2
+    cache.swap_out(0, swap, uid=1, total_len=8, context_len=8)
+    assert not swap.can_store(1)                   # pool exhausted
+
+
+def test_prefix_swap_restores_full_blocks_by_rebind():
+    """Published full blocks come back without touching their host
+    copies; only the partial (unpublishable) tail uploads."""
+    cache = _prefix()
+    prompt = np.arange(10, dtype=np.int32)         # 2 full blocks + 2 tokens
+    cache.allocate_slot(0, 16, prompt=prompt)
+    cache.ensure_capacity(0, prompt.size)
+    cache.commit(0, prompt)
+    swap = SwapManager(cache)
+    rec = cache.swap_out(0, swap, uid=3, total_len=16, context_len=10)
+    assert rec.num_blocks == 3 and len(rec.hashes) == 2
+    resume = cache.restore_slot(1, rec, swap)
+    assert resume == 10
+    assert swap.stats["restored_blocks"] == 1      # the partial tail only
+    assert cache.stats["bound_blocks"] >= 2        # full blocks re-bound
+    swap.release(rec)
+    cache.free_slot(1)
+    cache.check_conservation()
+    swap.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# Engine level: preemption/restore token identity
+# ---------------------------------------------------------------------------
+
+def tiny_cfg(**kw) -> ModelConfig:
+    base = dict(name="t", family="decoder_lm", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                max_seq_len=128, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _params(cfg, seed=0):
+    from repro.models.registry import get_family
+    from repro.nn import init
+
+    return init(get_family(cfg).specs(cfg), jax.random.PRNGKey(seed))
+
+
+def _preempt_requests():
+    """Two long LOW decodes that fill both slots, then a HIGH arrival
+    that can only be admitted by evicting one of them."""
+    reqs = [Request(uid=i, prompt=np.arange(6, dtype=np.int32) + 3 * i,
+                    max_new_tokens=20, arrival_ms=0.0, priority=Priority.LOW)
+            for i in range(2)]
+    reqs.append(Request(uid=2, prompt=np.arange(5, dtype=np.int32) + 50,
+                        max_new_tokens=4, arrival_ms=75.0,
+                        priority=Priority.HIGH))
+    return reqs
+
+
+def _drive(eng, requests):
+    """Deterministic engine loop: a fixed virtual clock (10ms per step)
+    instead of run()'s wall clock, so which request is mid-decode when
+    the HIGH arrival lands never depends on host speed."""
+    for r in requests:
+        eng.scheduler.add(r)
+    done = {}
+    clock = 0.0
+    while eng.scheduler.has_work():
+        nxt = eng.scheduler.next_arrival_ms()
+        if not eng.scheduler.running and nxt is not None and nxt > clock:
+            clock = nxt
+        for st in eng.step(clock):
+            done[st.request.uid] = list(st.generated)
+        clock += 10.0
+    return done
+
+
+@pytest.mark.parametrize("moe", [False, True], ids=["dense", "dropless_hash"])
+@pytest.mark.parametrize("prefix", [False, True], ids=["paged", "prefix"])
+def test_preempt_restore_token_identity(moe, prefix):
+    from repro.serving.continuous import ContinuousEngine
+
+    cfg = tiny_cfg()
+    if moe:
+        cfg = cfg.replace_moe(impl="dropless", num_experts=4,
+                              routing="hash", capacity_factor=None)
+    params = _params(cfg)
+    reqs = _preempt_requests()
+
+    # reference: enough slots that nothing ever waits or gets evicted
+    ref_serve = ServeConfig(max_slots=4, kv_block_size=4, prefill_chunk=8,
+                            max_len=32)
+    ref = ContinuousEngine(cfg, params, ref_serve, check_invariants=True)
+    want = _drive(ref, [Request(uid=r.uid, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens)
+                        for r in reqs])
+
+    serve = ServeConfig(max_slots=2, kv_block_size=4, prefill_chunk=8,
+                        max_len=32, num_blocks=16, prefix_cache=prefix,
+                        sched_policy="priority_strict", slo=SLOConfig())
+    eng = ContinuousEngine(cfg, params, serve, check_invariants=True)
+    got = _drive(eng, reqs)
+
+    assert got == want                     # greedy: preemption is invisible
+    assert eng.scheduler.preemptions > 0
+    assert eng.scheduler.swap.stats["swapped_blocks"] > 0
+    assert (eng.scheduler.restore_tokens + eng.scheduler.recompute_tokens) > 0
+    assert not eng.scheduler.swap.records  # every record released
+    eng.scheduler.check_conservation()
+
+
+def test_preemption_respects_cap_and_host_pool():
+    """max_preemptions=0 turns every request into a non-victim, so the
+    HIGH arrival simply waits — pre-SLO behaviour, not an error."""
+    from repro.serving.continuous import ContinuousEngine
+
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    serve = ServeConfig(max_slots=2, kv_block_size=4, prefill_chunk=8,
+                        max_len=32, num_blocks=16,
+                        sched_policy="priority_strict",
+                        slo=SLOConfig(max_preemptions=0))
+    eng = ContinuousEngine(cfg, params, serve, check_invariants=True)
+    got = _drive(eng, _preempt_requests())
+    assert eng.scheduler.preemptions == 0
+    assert sorted(got) == [0, 1, 2]
+    assert len(got[2]) == 4
+
+
+# ---------------------------------------------------------------------------
+# synthetic_priority trace + per-class stats
+# ---------------------------------------------------------------------------
+
+def test_synthetic_priority_deterministic_and_typed():
+    a = synthetic_priority(32, 128, seed=3, qps=20.0)
+    b = synthetic_priority(32, 128, seed=3, qps=20.0)
+    assert len(a) == 32
+    for ra, rb in zip(a, b):
+        assert ra.arrival_ms == rb.arrival_ms
+        assert ra.priority is rb.priority
+        assert ra.deadline_ms == rb.deadline_ms
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    assert {r.priority for r in a} == set(Priority)
+    for r in a:                            # default budgets: LOW best-effort
+        assert (r.deadline_ms is None) == (r.priority is Priority.LOW)
+        if r.deadline_ms is not None:
+            assert r.deadline_ms > r.arrival_ms
+    c = synthetic_priority(32, 128, seed=4, qps=20.0)
+    assert any(ra.arrival_ms != rc.arrival_ms for ra, rc in zip(a, c))
+
+
+def test_priority_trace_roundtrip(tmp_path):
+    reqs = synthetic_priority(16, 64, seed=1)
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(path, reqs)
+    back = load_trace(path, 64, seed=1)
+    by_uid = {r.arrival_ms: r for r in back}
+    for r in reqs:
+        rb = by_uid[r.arrival_ms]
+        assert rb.priority is r.priority
+        assert rb.deadline_ms == r.deadline_ms
+        assert rb.prompt_len == r.prompt_len
+
+
+def test_slo_class_stats_shape():
+    p = np.arange(4, dtype=np.int32)
+    # single class, no deadlines: plain traffic keeps the plain stats
+    plain = []
+    for uid in range(3):
+        st = RequestState(Request(uid=uid, prompt=p, max_new_tokens=2))
+        st.finished_ms = 50.0
+        plain.append(st)
+    assert slo_class_stats(plain) == {}
+
+    mixed = []
+    for uid, (pri, dl) in enumerate([(Priority.HIGH, 40.0),
+                                     (Priority.HIGH, 200.0),
+                                     (Priority.LOW, None)]):
+        st = RequestState(Request(uid=uid, prompt=p, max_new_tokens=2,
+                                  priority=pri, deadline_ms=dl))
+        st.finished_ms = 100.0
+        mixed.append(st)
+    out = slo_class_stats(mixed)
+    assert out["high_n"] == 2.0 and out["low_n"] == 1.0
+    assert out["high_goodput"] == 0.5      # 100ms beat 200 but not 40
+    assert out["goodput"] == 0.5
+    assert "low_goodput" not in out        # best-effort class has no SLO
+    assert all(isinstance(v, float) for v in out.values())
+
+
+def test_run_reports_per_class_stats():
+    from repro.serving.continuous import ContinuousEngine
+
+    cfg = tiny_cfg()
+    params = _params(cfg)
+    reqs = synthetic_priority(10, cfg.vocab_size, seed=0, qps=500.0,
+                              gen_lens=(4, 8), prompt_lens=(4, 12))
+    serve = ServeConfig(max_slots=2, kv_block_size=4, prefill_chunk=8,
+                        max_len=64, num_blocks=32,
+                        sched_policy="priority_strict", slo=SLOConfig())
+    eng = ContinuousEngine(cfg, params, serve, check_invariants=True)
+    _, stats = eng.run(reqs)
+    for key in ("preemptions", "restore_tokens", "recompute_tokens",
+                "swapped_blocks", "restored_blocks", "goodput"):
+        assert key in stats, key
+    assert any(k.endswith("_p95_ms") for k in stats)
+    assert all(isinstance(v, float) for v in stats.values())
