@@ -21,11 +21,18 @@ block-starved pool, and the SLO sweep serves a 2x-overload bursty
 mixed-priority trace under fcfs vs the SLO-aware policies with
 preemption + KV swap-to-host.
 
+The mesh sweep serves one mixed trace on 1 vs 8 virtual devices
+(single-device engine vs 1x1 / 2x4 / 8x1 ``(data, expert)`` serving
+meshes, dropless throughout) and asserts token identity across every
+cell — mesh sharding must be invisible in outputs.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py
   -> experiments/BENCH_serve_throughput.json
   -> experiments/BENCH_spec_decode.json
   -> experiments/BENCH_prefix_cache.json
   -> experiments/BENCH_slo_sched.json
+  -> experiments/BENCH_mesh_serve.json   (re-execs itself with 8
+     virtual devices when the parent owns fewer; --mesh-sweep runs it alone)
 """
 from __future__ import annotations
 
@@ -240,6 +247,77 @@ def slo_sweep(cfg, params):
     return results
 
 
+def mesh_sweep(cfg, params):
+    """Single-device vs mesh-sharded serving on one mixed-length trace:
+    the trivial 1x1 mesh, a (data 2, expert 4) mesh and a pure-data
+    (8, 1) mesh, all dropless (the ragged EP path where the shape
+    divides the device grid).  Greedy, so every cell must be
+    token-identical to the unsharded engine (asserted) — on virtual CPU
+    devices the collectives are pure overhead, so the artifact records
+    the *cost* of sharding at toy scale next to the identity guarantee,
+    not a speedup."""
+    # group_size=1 keeps G = row count, which divides the 8-device grid
+    # for every compiled step shape here — the ragged EP path engages on
+    # the expert-sharded cells rather than falling back to GSPMD
+    cfg = cfg.replace_moe(impl="dropless", capacity_factor=None, group_size=1)
+    requests = synthetic_trace(16, cfg.vocab_size, **TRACE_KW)
+    serve_kw = dict(max_slots=8, kv_block_size=16, prefill_chunk=16,
+                    max_len=max(r.total_len for r in requests))
+    cells = {
+        "single": None,
+        "mesh_1x1": (("data", 1), ("expert", 1)),
+        "mesh_2x4": (("data", 2), ("expert", 4)),
+        "mesh_8x1": (("data", 8), ("expert", 1)),
+    }
+    results = {"trace": {
+        "num_requests": len(requests),
+        "devices": jax.device_count(),
+        "prompt_lens": [r.prompt_len for r in requests],
+        "gen_lens": [r.max_new_tokens for r in requests],
+    }}
+    outs = {}
+    for name, spec in cells.items():
+        need = 1 if spec is None else spec[0][1] * spec[1][1]
+        if jax.device_count() < need:
+            results[name] = {"skipped": f"needs {need} devices"}
+            continue
+        sv = ServeConfig(**serve_kw, mesh=spec)
+        eng = ContinuousEngine(cfg, params, sv, check_invariants=True)
+        eng.run(requests)                       # warmup/compile
+        outs[name], results[name] = eng.run(requests)
+        eng.cache.check_conservation()
+    for name in outs:
+        if name == "single":
+            continue
+        assert outs[name] == outs["single"], (
+            f"{name} diverged from the single-device engine — mesh "
+            f"sharding must be token-invisible under greedy decoding")
+        results[name]["tokens_per_s_vs_single"] = (
+            results[name]["generated_tokens_per_s"]
+            / results["single"]["generated_tokens_per_s"])
+    return results
+
+
+def main_mesh():
+    """The mesh sweep alone — run in an 8-virtual-device process (main()
+    re-execs this when the parent owns fewer)."""
+    cfg = bench_config(layers=2, d_model=64, d_ff=128, experts=8, vocab=512,
+                       impl="dropless", capacity_factor=None)
+    params = init(get_family(cfg).specs(cfg), jax.random.PRNGKey(0))
+    res = mesh_sweep(cfg, params)
+    for name in ("single", "mesh_1x1", "mesh_2x4", "mesh_8x1"):
+        c = res[name]
+        if "skipped" in c:
+            print(f"mesh[{name}]: skipped ({c['skipped']})")
+            continue
+        extra = (f" ({c['tokens_per_s_vs_single']:.2f}x vs single)"
+                 if "tokens_per_s_vs_single" in c else "")
+        print(f"mesh[{name}]: {c['generated_tokens_per_s']:.1f} tok/s, "
+              f"p50 {c['p50_ms']:.0f}ms p95 {c['p95_ms']:.0f}ms{extra}")
+    path = save_result("BENCH_mesh_serve", res)
+    print("wrote", path)
+
+
 def main():
     cfg = bench_config(layers=2, d_model=64, d_ff=128, experts=8, vocab=512,
                        impl="gather")
@@ -322,6 +400,19 @@ def main():
     path = save_result("BENCH_slo_sched", sres)
     print("wrote", path)
 
+    # -- mesh-sharded serving sweep (needs 8 virtual devices) --------------
+    if jax.device_count() >= 8:
+        main_mesh()
+    else:
+        import subprocess
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        subprocess.run([sys.executable, os.path.abspath(__file__),
+                        "--mesh-sweep"], check=True, env=env)
+
 
 if __name__ == "__main__":
-    main()
+    if "--mesh-sweep" in sys.argv:
+        main_mesh()
+    else:
+        main()

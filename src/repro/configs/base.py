@@ -296,15 +296,48 @@ class ServeConfig:
     # (repro.serving.slo).  None => no preemption; priorities and
     # deadlines still order admission under the slo policies.
     slo: Optional[SLOConfig] = None
+    # Serving device mesh as ((axis, size), ...) — must name exactly
+    # ("data", "expert"), in that order; size-1 axes are allowed.  Slots
+    # and KV block pools partition over "data" (contiguous slot ranges,
+    # one allocator per shard), expert FFN weights over "expert" (ragged
+    # all-to-all dispatch for the dropless backend).  None => the
+    # single-device engine, bit-for-bit the pre-mesh behaviour.
+    mesh: Optional[Tuple[Tuple[str, int], ...]] = None
 
     def __post_init__(self):
         if self.max_slots < 1 or self.kv_block_size < 1 or self.prefill_chunk < 1:
             raise ValueError("max_slots, kv_block_size, prefill_chunk must be >= 1")
         if self.max_len < 2:
             raise ValueError("max_len must be >= 2 (one prompt + one generated)")
+        if self.mesh is not None:
+            names = tuple(a for a, _ in self.mesh)
+            if names != ("data", "expert"):
+                raise ValueError(
+                    f"ServeConfig.mesh axes must be ('data', 'expert'), got {names}; "
+                    "use size 1 for an axis you don't shard over")
+            if any(int(n) < 1 for _, n in self.mesh):
+                raise ValueError("ServeConfig.mesh axis sizes must be >= 1")
+            d = self.data_shards
+            if self.max_slots % d:
+                raise ValueError(
+                    f"max_slots={self.max_slots} must divide evenly over "
+                    f"{d} data shards")
+            if self.resolved_num_blocks % d:
+                raise ValueError(
+                    f"num_blocks={self.resolved_num_blocks} must divide evenly "
+                    f"over {d} data shards")
         from repro.serving.scheduler import get_policy
 
         get_policy(self.sched_policy)   # raises with the registry key list
+
+    @property
+    def data_shards(self) -> int:
+        """Slot/KV-pool shards along the mesh's data axis (1 if unsharded)."""
+        return dict(self.mesh).get("data", 1) if self.mesh else 1
+
+    @property
+    def expert_shards(self) -> int:
+        return dict(self.mesh).get("expert", 1) if self.mesh else 1
 
     @property
     def blocks_per_slot(self) -> int:

@@ -151,7 +151,20 @@ def alltoall_dispatch(params, xg: jax.Array, plan: RoutingPlan,
 @register_dispatcher
 class AllToAllDispatcher:
     name = "alltoall"
+    # Dropless plans run the sorted-ragged machinery: explicit EP via the
+    # padded variable-size all_to_all over the RaggedView when an
+    # expert-sharded mesh is active, the GSPMD dropless path otherwise —
+    # never the (E, C)-buffered exchange above, and never gather.
+    supports_dropless = True
 
     def __call__(self, params, xg, plan: RoutingPlan, cfg: ModelConfig,
                  ctx: Optional[MoEContext] = None) -> jax.Array:
+        if cfg.moe.dropless:
+            from repro.core.dispatch.dropless import (
+                dropless_dispatch,
+                plan_block_rows,
+            )
+
+            return dropless_dispatch(params, xg, plan, cfg,
+                                     block_rows=plan_block_rows(plan))
         return alltoall_dispatch(params, xg, plan, cfg)

@@ -22,9 +22,15 @@ With a finite capacity the plan's overflowed choices carry gate 0 and
 empty rows, so outputs (including which tokens drop) match the einsum
 reference bit-for-bit in assignment — the cross-backend contract holds.
 
-Expert parallelism is implicit (GSPMD over the sharded group axis, like
-``gather``); the sorted layout intentionally keeps experts' weights
-replicated-or-sharded by the same rules as every other backend.
+Expert parallelism: under an expert-sharded ``Rules`` mesh (same
+placement test as the ``alltoall`` backend), :func:`ragged_ep_dispatch`
+runs *explicit* EP — a padded variable-size ``lax.all_to_all`` over the
+ragged layout ships each expert shard exactly its own experts' sorted
+row segments (``jax.lax.ragged_all_to_all`` would drop the padding once
+available; the exchange is already O(load), never O(E*C)).  Without
+such a mesh, parallelism stays implicit (GSPMD over the sharded group
+axis, like ``gather``), weights replicated-or-sharded by the same rules
+as every other backend.
 """
 from __future__ import annotations
 
@@ -32,10 +38,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.context import MoEContext
 from repro.core.dispatch import register_dispatcher
+from repro.core.dispatch.alltoall import _expert_mesh_plan
 from repro.core.routers.base import RoutingPlan
 from repro.distributed.sharding import shard
 from repro.kernels.moe_dropless import ops as dropless_ops
@@ -53,11 +62,99 @@ def plan_block_rows(plan: RoutingPlan, max_block: int = 128) -> int:
     return pick_block_rows(n, plan.num_experts, max_block)
 
 
+def ragged_ep_dispatch(params, xg: jax.Array, plan: RoutingPlan,
+                       cfg: ModelConfig, block_rows: int, placed) -> jax.Array:
+    """Explicit expert parallelism over the ragged (sorted) layout.
+
+    The :class:`~repro.core.routers.base.RaggedView` is expert-major with
+    every segment boundary block-aligned, so the rows bound for expert
+    shard ``s`` (local experts ``[s*E/ne, (s+1)*E/ne)``) form one
+    contiguous block-aligned range ``[offsets[s*Epl], offsets[(s+1)*Epl])``
+    per group.  Each device packs those ne ranges into a fixed ``(ne, R)``
+    row budget (padding parked on a zero row — the variable-size
+    all_to_all, per the ragged_all_to_all recipe on padded buffers), one
+    ``lax.all_to_all`` ships them, the local-expert ragged FFN runs with
+    *local* expert ids, and the reverse all_to_all + positional unpack
+    restore the original layout for the usual gate-weighted scatter-add
+    combine.
+
+    Packing moves whole row *blocks* (segment starts and lengths are all
+    multiples of ``block_rows``), so every FFN block holds exactly the
+    rows it holds in the single-device layout — the grouped GEMM computes
+    identical per-row results and the combine is bit-identical, which is
+    what the mesh-parity serving tests assert end to end.
+    """
+    mesh, e_ax, dp_axes = placed
+    ne = mesh.shape[e_ax]
+    E = plan.num_experts
+    epl = E // ne
+    dt = cfg.activation_dtype
+    G, T, M = xg.shape
+    bx = block_rows
+    rag = plan.ragged(bx)
+    R = rag.token.shape[1]
+    act = cfg.ffn_activation
+
+    p_names = [k for k in ("up", "gate", "down") if k in params]
+    p_local = {k: params[k] for k in p_names}
+    w_spec = {k: P(e_ax) for k in p_names}
+    grp = P((*dp_axes, e_ax))
+
+    def run(p, xl, token, gate, offsets, bexp):
+        Gl = xl.shape[0]
+        toks = jnp.maximum(token, 0)                           # -1 -> row 0
+        xs = jnp.take_along_axis(xl, toks[..., None], axis=1).astype(dt)
+        e_row = jnp.repeat(bexp, bx, axis=1)                   # (Gl, R) global ids
+        # destination boundaries: offsets at local-expert-count strides
+        offd = offsets[:, ::epl]                               # (Gl, ne + 1)
+        start, seglen = offd[:, :-1], offd[:, 1:] - offd[:, :-1]
+        j = jnp.arange(R, dtype=offsets.dtype)
+        src = start[:, :, None] + j                            # (Gl, ne, R)
+        valid = j < seglen[:, :, None]
+        srcp = jnp.where(valid, src, R)                        # park on pad row
+        gi = jnp.arange(Gl)[:, None, None]
+        xpad = jnp.concatenate([xs, jnp.zeros((Gl, 1, M), dt)], axis=1)
+        buf = xpad[gi, srcp]                                   # (Gl, ne, R, M)
+        epad = jnp.concatenate([e_row, jnp.zeros((Gl, 1), e_row.dtype)], axis=1)
+        e_src = jnp.take_along_axis(
+            epad, srcp.reshape(Gl, ne * R), axis=1).reshape(Gl, ne, R)
+        dest = jnp.arange(ne, dtype=e_src.dtype)[None, :, None]
+        ebuf = jnp.where(valid, e_src - dest * epl, 0)         # local expert ids
+        # ship: leading axis = destination expert shard
+        recv = jax.lax.all_to_all(jnp.swapaxes(buf, 0, 1), e_ax,
+                                  split_axis=0, concat_axis=0, tiled=True)
+        erecv = jax.lax.all_to_all(jnp.swapaxes(ebuf, 0, 1), e_ax,
+                                   split_axis=0, concat_axis=0, tiled=True)
+        out = dropless_ops.ragged_ffn(
+            recv.reshape(ne * Gl * R, M),
+            erecv.reshape(-1, bx)[:, 0].astype(jnp.int32),
+            p["up"].astype(dt),
+            p["gate"].astype(dt) if "gate" in p else None,
+            p["down"].astype(dt), act, block_x=bx)
+        back = jax.lax.all_to_all(out.reshape(ne, Gl, R, M), e_ax,
+                                  split_axis=0, concat_axis=0, tiled=True)
+        back = jnp.swapaxes(back, 0, 1)                        # (Gl, ne, R, M)
+        back = jnp.where(valid[..., None], back, 0)
+        res = jnp.zeros((Gl, R + 1, M), dt).at[gi, srcp].add(back)[:, :R]
+        vals = res * gate[..., None].astype(dt)
+        g2 = jnp.arange(Gl)[:, None]
+        return jnp.zeros((Gl, T, M), dt).at[g2, toks].add(vals)
+
+    args = (p_local, xg, rag.token, rag.gate, rag.expert_offsets,
+            rag.block_expert)
+    specs = (w_spec, grp, grp, grp, grp, grp)
+    return shard_map(run, mesh=mesh, in_specs=specs, out_specs=grp,
+                     check_rep=False)(*args)
+
+
 def dropless_dispatch(params, xg: jax.Array, plan: RoutingPlan,
                       cfg: ModelConfig, block_rows: int = 0) -> jax.Array:
     dt = cfg.activation_dtype
     G, T, M = xg.shape
     block_rows = block_rows or plan_block_rows(plan)
+    placed = _expert_mesh_plan(plan, G)
+    if placed is not None:
+        return ragged_ep_dispatch(params, xg, plan, cfg, block_rows, placed)
     rag = plan.ragged(block_rows)
     R = rag.token.shape[1]
 

@@ -1,5 +1,10 @@
 from repro.kernels.decode_attention import ops
-from repro.kernels.decode_attention.ops import decode_attention, paged_decode_attention
+from repro.kernels.decode_attention.ops import (
+    decode_attention,
+    paged_decode_attention,
+    paged_update_attention,
+    sharded_paged_update_attention,
+)
 from repro.kernels.decode_attention.ref import (
     decode_attention_ref,
     paged_decode_attention_ref,

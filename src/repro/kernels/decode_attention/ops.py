@@ -65,5 +65,50 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out.reshape(N, Hq, D)
 
 
+def paged_update_attention(q, k, v, k_pool, v_pool, write_blocks,
+                           write_offsets, block_tables, lengths):
+    """One serving step's K/V write + paged attention, fused at the op
+    level: scatter this step's per-row K/V at ``(write_blocks, :,
+    write_offsets)``, then attend through the block tables.  The write
+    lands before the read, so a prefill-chunk row sees its same-step
+    predecessors (exact causal prefill).  Returns ``(out, k_pool,
+    v_pool)`` — pools flow through so callers can donate them.
+
+    q: (N, Hq, D); k/v: (N, Hkv, D); pools: (P, Hkv, bs, D);
+    write_blocks/write_offsets: (N,) pool coords (masked rows target the
+    garbage block); block_tables: (N, MB); lengths: (N,).
+    """
+    k_pool = k_pool.at[write_blocks, :, write_offsets].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[write_blocks, :, write_offsets].set(v.astype(v_pool.dtype))
+    out = paged_decode_attention(q, k_pool, v_pool, block_tables, lengths)
+    return out, k_pool, v_pool
+
+
+def sharded_paged_update_attention(q, k, v, k_pool, v_pool, write_blocks,
+                                   write_offsets, block_tables, lengths,
+                                   *, mesh, axis="data"):
+    """:func:`paged_update_attention` under shard_map over the mesh's
+    data axis.
+
+    Every operand partitions on its leading dimension: rows (the engine
+    lays step rows out shard-major, each shard's rows covering its own
+    slots) and the stacked pool (each shard owns a contiguous
+    ``(shard_blocks + 1)``-row slice ending in its private garbage
+    block).  Block tables and write coords carry *shard-local* ids, so
+    each body indexes only its own pool slice — attention never reads
+    another shard's blocks, and no unsharded ``(num_blocks, ...)`` pool
+    appears inside the mapped computation.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    dx = P(axis)
+    fn = shard_map(paged_update_attention, mesh=mesh, in_specs=(dx,) * 9,
+                   out_specs=(dx, dx, dx), check_rep=False)
+    return fn(q, k, v, k_pool, v_pool, write_blocks, write_offsets,
+              block_tables, lengths)
+
+
 __all__ = ["decode_attention", "decode_attention_ref",
-           "paged_decode_attention", "paged_decode_attention_ref"]
+           "paged_decode_attention", "paged_decode_attention_ref",
+           "paged_update_attention", "sharded_paged_update_attention"]

@@ -1,10 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines: jax locks device count on first init.
-# (REPRO_DRYRUN_DEVICES overrides for small-scale CI runs.)
-if os.environ.get("REPRO_DRYRUN_DEVICES"):
-    os.environ["XLA_FLAGS"] = (
-        "--xla_force_host_platform_device_count=" + os.environ["REPRO_DRYRUN_DEVICES"])
+# MUST run before anything imports jax: it locks device count on first
+# init.  Append to (never clobber) caller-set XLA_FLAGS, and respect a
+# device count the caller already forced; REPRO_DRYRUN_DEVICES overrides
+# the 512 default for small-scale CI runs.
+_existing = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _existing:
+    _count = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+    os.environ["XLA_FLAGS"] = " ".join(
+        f for f in (_existing, f"--xla_force_host_platform_device_count={_count}")
+        if f)
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
 the production mesh with 512 virtual host devices, proving the sharding

@@ -27,3 +27,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many devices this process has."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(spec):
+    """Mesh for ``ServeConfig.mesh``: ((axis, size), ...) pairs.
+
+    Unlike ``jax.make_mesh`` this tolerates *more* local devices than the
+    mesh needs — it lays the mesh over the first prod(sizes) devices — so
+    a (1, 1) parity cell runs on a laptop and a (2, 4) cell on the same
+    8-virtual-device process as an (8, 1) one.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    names = tuple(a for a, _ in spec)
+    sizes = tuple(int(n) for _, n in spec)
+    need = int(np.prod(sizes))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise ValueError(
+            f"mesh {spec!r} needs {need} devices, have {len(devices)}")
+    return Mesh(np.array(devices[:need]).reshape(sizes), names)

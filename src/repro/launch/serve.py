@@ -39,6 +39,27 @@ from repro.serving.trace import (
 )
 
 
+def parse_mesh(text: str):
+    """'data=2,expert=4' or bare '2,4' -> ServeConfig.mesh tuples."""
+    sizes = {}
+    parts = [p.strip() for p in text.split(",") if p.strip()]
+    if all("=" in p for p in parts):
+        for p in parts:
+            name, _, n = p.partition("=")
+            sizes[name.strip()] = int(n)
+    else:
+        if len(parts) > 2:
+            raise SystemExit(f"--mesh {text!r}: at most data,expert sizes")
+        for name, n in zip(("data", "expert"), parts):
+            sizes[name] = int(n)
+    unknown = set(sizes) - {"data", "expert"}
+    if unknown:
+        raise SystemExit(
+            f"--mesh {text!r}: unknown axes {sorted(unknown)} "
+            "(serving meshes have axes data, expert)")
+    return (("data", sizes.get("data", 1)), ("expert", sizes.get("expert", 1)))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmoe-1b-7b", choices=ALL_IDS)
@@ -77,6 +98,12 @@ def main(argv=None):
     ap.add_argument("--kv-block", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--mesh", default=None,
+                    help="shard the continuous engine over a (data, expert) "
+                         "device mesh: 'data=2,expert=4' (or bare '2,4'). "
+                         "Slots and KV block pools partition over the data "
+                         "axis, expert FFN weights over the expert axis "
+                         "(ragged all-to-all dropless dispatch)")
     from repro.serving.scheduler import available_policies
     ap.add_argument("--sched-policy", default="fcfs",
                     choices=available_policies(),
@@ -117,6 +144,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    mesh_spec = None
+    if args.mesh is not None:
+        if args.engine != "continuous":
+            raise SystemExit("--mesh needs --engine continuous")
+        mesh_spec = parse_mesh(args.mesh)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.moe_impl and cfg.moe.num_experts:
@@ -178,7 +211,8 @@ def main(argv=None):
                                 kv_block_size=args.kv_block,
                                 prefill_chunk=args.prefill_chunk,
                                 max_len=max(args.max_len, max_len),
-                                spec=spec, sched_policy=args.sched_policy)
+                                spec=spec, sched_policy=args.sched_policy,
+                                mesh=mesh_spec)
             engine = ContinuousEngine(cfg, params, serve,
                                       temperature=args.temperature,
                                       seed=args.seed, draft_model=draft_model)
@@ -222,7 +256,8 @@ def main(argv=None):
                             prefill_chunk=args.prefill_chunk,
                             max_len=max(args.max_len, longest),
                             spec=spec, sched_policy=args.sched_policy,
-                            prefix_cache=args.prefix_cache, slo=slo)
+                            prefix_cache=args.prefix_cache, slo=slo,
+                            mesh=mesh_spec)
         engine = ContinuousEngine(cfg, params, serve,
                                   temperature=args.temperature, seed=args.seed,
                                   draft_model=draft_model)

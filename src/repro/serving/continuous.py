@@ -80,12 +80,15 @@ from repro.configs.base import ModelConfig, ServeConfig
 from repro.core.context import MoEContext
 from repro.core.moe import moe_ffn_apply
 from repro.distributed.sharding import Rules, shard, use_rules
-from repro.kernels.decode_attention import paged_decode_attention
+from repro.kernels.decode_attention import (
+    paged_update_attention,
+    sharded_paged_update_attention,
+)
 from repro.models import layers as L
 from repro.models.attention import _project_qkv
 from repro.models.registry import get_family
 from repro.models.transformer import _is_moe_layer
-from repro.serving.kv_cache import PagedKVCache
+from repro.serving.kv_cache import PagedKVCache, ShardedPagedKVCache
 from repro.serving.request import Request, RequestState, Status
 from repro.serving.scheduler import Scheduler
 from repro.serving.speculative.accept import accept_greedy_ids, accept_rejection
@@ -100,20 +103,30 @@ _RECURRENT_FAMILIES = ("xlstm",)
 # ---------------------------------------------------------------------------
 
 def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
-                 lengths, row_tables, wb, wo, kp, vp, ctx):
+                 lengths, row_tables, wb, wo, kp, vp, ctx, mesh=None):
     """One pre-norm block over the flat row batch ``x: (1, N, d)``.
 
     K/V for every row are written into the pool at (wb, wo) *before* the
     paged-attention read, so chunk rows see their same-step predecessors
     — exact causal semantics for prefill and decode alike.  Masked rows
     write into the garbage block and read length 0.
+
+    With ``mesh``, the write + attention pair runs under shard_map over
+    the data axis: rows are laid out shard-major (each shard's rows
+    cover its own slots) and (wb, wo)/row_tables carry shard-local block
+    ids into the shard's private pool slice.  This is sequential with —
+    never nested inside — the MoE dispatcher's own shard_map.
     """
     N = x.shape[1]
     h = L.norm_apply(bp["ln_attn"], x, cfg)
     q, k, v = _project_qkv(bp["attn"], h, cfg, positions)       # (1, N, H*, D)
-    kp = kp.at[wb, :, wo].set(k[0].astype(kp.dtype))            # (N, Hkv, D) scatter
-    vp = vp.at[wb, :, wo].set(v[0].astype(vp.dtype))
-    out = paged_decode_attention(q[0], kp, vp, row_tables, lengths)  # (N, Hq, D)
+    if mesh is None:
+        out, kp, vp = paged_update_attention(
+            q[0], k[0], v[0], kp, vp, wb, wo, row_tables, lengths)
+    else:
+        out, kp, vp = sharded_paged_update_attention(
+            q[0], k[0], v[0], kp, vp, wb, wo, row_tables, lengths,
+            mesh=mesh, axis="data")
     attn_out = L.dense_apply(bp["attn"]["wo"], out.reshape(1, N, -1), cfg)
     x = x + attn_out
     x = shard(x, "batch", "seq", "embed")
@@ -129,7 +142,7 @@ def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
 
 
 def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
-                  lengths, row_tables, wb, wo, k_pools, v_pools):
+                  lengths, row_tables, wb, wo, k_pools, v_pools, mesh=None):
     """Flat-row forward: embed -> blocks (scan or unrolled) -> logits.
 
     Returns (float32 logits (N, V), new k_pools, new v_pools).  Shared
@@ -150,7 +163,7 @@ def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
             x, kp, vp = _paged_block(
                 bp, x, cfg, moe_layer=_is_moe_layer(cfg, i), positions=pos2,
                 lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
-                kp=k_pools[i], vp=v_pools[i], ctx=ctx)
+                kp=k_pools[i], vp=v_pools[i], ctx=ctx, mesh=mesh)
             ks.append(kp)
             vs.append(vp)
         k_pools, v_pools = jnp.stack(ks), jnp.stack(vs)
@@ -162,7 +175,7 @@ def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
             h, kp, vp = _paged_block(
                 bp, h, cfg, moe_layer=moe_layer, positions=pos2,
                 lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
-                kp=kp, vp=vp, ctx=ctx)
+                kp=kp, vp=vp, ctx=ctx, mesh=mesh)
             return h, (kp, vp)
 
         x, (k_pools, v_pools) = jax.lax.scan(body, x, (blocks, k_pools, v_pools))
@@ -196,7 +209,7 @@ def _fill_row(b, cache, r: int, slot: int, token: int, pos: int) -> None:
     b["lengths"][r] = pos + 1
     b["slots"][r] = slot
     b["wb"][r], b["wo"][r] = cache.write_coords(slot, pos)
-    b["row_tables"][r] = cache.block_table[slot]
+    b["row_tables"][r] = cache.row_table(slot)
 
 
 def _sample_rows(logits, slots, positions, *, temperature: float, key):
@@ -261,6 +274,33 @@ class ContinuousEngine:
         self.steps = 0
         self.check_invariants = check_invariants
 
+        self.mesh = None
+        self.data_shards = serve.data_shards
+        if serve.mesh is not None:
+            if self.mode != "paged":
+                raise NotImplementedError(
+                    "mesh serving needs the paged KV cache (recurrent slot "
+                    "states have no block partition)")
+            if serve.spec is not None:
+                raise NotImplementedError(
+                    "speculative decoding is not supported with "
+                    "ServeConfig.mesh yet (the verify row layout is not "
+                    "shard-major)")
+            if serve.slo is not None:
+                raise NotImplementedError(
+                    "SLO scheduling is not supported with ServeConfig.mesh "
+                    "yet (KV swap-to-host assumes a single device pool)")
+            from repro.launch.mesh import make_serve_mesh
+
+            self.mesh = make_serve_mesh(serve.mesh)
+            if rules is None:
+                from repro.distributed.sharding import make_rules
+
+                # data axis carries slots/groups, expert axis the FFN
+                # experts — exactly what the ragged EP dispatch wants
+                rules = make_rules(cfg, self.mesh, expert_axis="expert")
+                self.rules = rules
+
         self.spec = serve.spec
         self.drafter = None
         self.spec_stats = {"verify_steps": 0, "proposed": 0, "accepted": 0,
@@ -287,31 +327,36 @@ class ContinuousEngine:
                 "for priority/deadline ordering alone")
 
         if self.mode == "paged":
-            if serve.prefix_cache:
+            if serve.mesh is not None:
+                self.cache: Optional[PagedKVCache] = ShardedPagedKVCache(
+                    cfg, serve)
+            elif serve.prefix_cache:
                 from repro.serving.prefix_cache import PrefixCachingKVCache
 
-                self.cache: Optional[PagedKVCache] = PrefixCachingKVCache(
-                    cfg, serve)
+                self.cache = PrefixCachingKVCache(cfg, serve)
             else:
                 self.cache = PagedKVCache(cfg, serve)
             self.scheduler = Scheduler(serve.max_slots, serve.max_len,
                                        self.cache, policy=serve.sched_policy,
                                        slo=serve.slo)
             temp = self.temperature
+            mesh = self.mesh
 
             def step_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
                         lengths, row_tables, wb, wo, slots, key):
                 with use_rules(rules):
                     logits, k_pools, v_pools = _paged_logits(
                         p, cfg, tokens, ctx_ids, positions, lengths,
-                        row_tables, wb, wo, k_pools, v_pools)
+                        row_tables, wb, wo, k_pools, v_pools, mesh=mesh)
                     tok = _sample_rows(logits, slots, positions,
                                        temperature=temp, key=key)
                 return tok, k_pools, v_pools
 
             # Static shapes only: N = max_slots (decode-only),
-            # N = max_slots + prefill_chunk (mixed), and — speculative —
-            # N = max_slots * (gamma + 1) (verify); jit caches each once.
+            # N = max_slots + data_shards * prefill_chunk (mixed), and —
+            # speculative — N = max_slots * (gamma + 1) (verify); jit
+            # caches each once.
+            self._step_fn_raw = step_fn    # structural tests trace this
             self._step_fn = jax.jit(step_fn, donate_argnums=(1, 2))
 
             def verify_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
@@ -400,7 +445,20 @@ class ContinuousEngine:
             stream = pre.confirmed_tokens
             target = pre.prefill_target
             chunk = min(serve.prefill_chunk, target - pre.prefill_pos)
-        N = S + (serve.prefill_chunk if pre is not None else 0)
+        # Shard-major row layout over the mesh's data axis (D = 1 reduces
+        # to the original [S decode rows] + [chunk rows]): shard d owns
+        # rows [d * per, (d+1) * per) — its own slots' decode rows first,
+        # then chunk rows, which live on (and are masked on all but) the
+        # shard of the prefilling slot.  shard_map then splits the row
+        # batch along the data axis with no data movement.
+        D = self.data_shards
+        spd = S // D
+        per = spd + (serve.prefill_chunk if pre is not None else 0)
+        N = D * per
+
+        def row_of(slot: int) -> int:
+            return (slot // spd) * per + slot % spd
+
         b = _row_buffers(N, serve.blocks_per_slot, cache.garbage_block)
         sample_rows: List[Tuple[int, RequestState]] = []
 
@@ -409,13 +467,14 @@ class ContinuousEngine:
                 continue
             pos = st.context_len
             cache.ensure_capacity(slot, pos + 1)
-            _fill_row(b, cache, slot, slot, st.last_token, pos)
-            sample_rows.append((slot, st))
+            _fill_row(b, cache, row_of(slot), slot, st.last_token, pos)
+            sample_rows.append((row_of(slot), st))
 
         if pre is not None:
             cache.ensure_capacity(pre.slot, pre.prefill_pos + chunk)
+            base = (pre.slot // spd) * per + spd
             for j in range(chunk):
-                row, p = S + j, pre.prefill_pos + j
+                row, p = base + j, pre.prefill_pos + j
                 _fill_row(b, cache, row, pre.slot, stream[p], p)
                 # sample off the last *prompt* row only on first ingest:
                 # a resume past it already holds that sample in generated

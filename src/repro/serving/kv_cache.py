@@ -105,6 +105,8 @@ class PagedKVCache:
     length grows past it.
     """
 
+    num_shards = 1   # ShardedPagedKVCache overrides; schedulers branch on it
+
     def __init__(self, cfg: ModelConfig, serve: ServeConfig):
         self.cfg = cfg
         self.serve = serve
@@ -128,6 +130,31 @@ class PagedKVCache:
 
     def blocks_needed(self, total_len: int) -> int:
         return -(-total_len // self.block_size)
+
+    @property
+    def max_request_blocks(self) -> int:
+        """Largest worst-case footprint any single request may reserve.
+        The whole pool here; one *shard's* pool under a sharded cache
+        (a request lives entirely on the shard that owns its slot)."""
+        return self.num_blocks
+
+    def can_allocate_slot_on(self, slot: int, total_len: int, prompt=None) -> bool:
+        """Admission gate for a *specific* slot.  All slots draw on the
+        one pool here, so the slot is irrelevant; the sharded cache
+        routes to the allocator of the shard owning ``slot``."""
+        return self.can_allocate_slot(total_len, prompt=prompt)
+
+    def row_table(self, slot: int) -> np.ndarray:
+        """Block-table row the jit'd step should attend through for
+        ``slot`` — pool-local ids here, *shard-local* ids under a
+        sharded cache (each shard_map body indexes its own pool slice)."""
+        return self.block_table[slot]
+
+    def detach_pools(self) -> None:
+        """Drop this cache's device pools.  Used by the sharded cache,
+        which owns one stacked global pool and keeps sub-caches for host
+        accounting (tables, allocators, reservations) only."""
+        self.k_pool = self.v_pool = None
 
     def can_allocate_slot(self, total_len: int, prompt=None) -> bool:
         """Admission gate: does the pool have unreserved room for this
@@ -273,5 +300,189 @@ class PagedKVCache:
 
     def update_pools(self, k_pool: jax.Array, v_pool: jax.Array) -> None:
         """Adopt the step function's donated-output pools."""
+        self.k_pool = k_pool
+        self.v_pool = v_pool
+
+
+class ShardedPagedKVCache:
+    """D per-shard caches behind the single-cache interface.
+
+    The mesh's data axis partitions slots *contiguously* — slot ``s``
+    lives on shard ``s // slots_per_shard`` — and each shard runs its own
+    allocator (:class:`BlockAllocator`, or the refcounted prefix-caching
+    one when ``serve.prefix_cache``) over a private pool slice with its
+    own garbage block.  Block ids in tables, write coords and the step's
+    row buffers are therefore **shard-local**: exactly what each
+    shard_map body needs to index its ``(shard_blocks + 1, ...)`` pool
+    slice, and structurally what keeps any unsharded ``(num_blocks, ...)``
+    pool out of the mapped computation.
+
+    Admission invariants hold at both levels.  Per shard, each sub-cache
+    enforces its own reservation bound (``reserved <= shard_blocks``),
+    so a shard's running slots can never starve on their own free list
+    no matter what other shards do.  In aggregate, this class's
+    :meth:`check_conservation` re-asserts the summed invariants.  The
+    :class:`~repro.serving.scheduler.Scheduler` keeps the *global*
+    admission view: it probes :meth:`can_allocate_slot_on` per free slot,
+    so a request is admitted iff some shard with a free slot has room.
+
+    The device pools live *here*, stacked over shards:
+    ``(num_layers, D * (shard_blocks + 1), Hkv, bs, hd)``, shard ``d``
+    owning rows ``[d * (shard_blocks+1), (d+1) * (shard_blocks+1))`` with
+    its garbage block last in its slice.  Sub-caches run detached
+    (host accounting only).
+
+    Not supported with data sharding: KV swap-to-host preemption (the
+    swap pool is single-device) — the engine rejects ``serve.slo`` with
+    preemption before construction, and the hooks here raise.
+    """
+
+    def __init__(self, cfg: ModelConfig, serve: ServeConfig):
+        import dataclasses
+
+        d = serve.data_shards
+        self.cfg = cfg
+        self.serve = serve
+        self.num_shards = d
+        self.block_size = serve.kv_block_size
+        self.num_blocks = serve.resolved_num_blocks
+        self.slots_per_shard = serve.max_slots // d
+        self.shard_blocks = self.num_blocks // d
+        # shard-local garbage index: last row of each shard's pool slice
+        self.garbage_block = self.shard_blocks
+        sub_serve = dataclasses.replace(
+            serve, mesh=None, max_slots=self.slots_per_shard,
+            num_blocks=self.shard_blocks)
+        if serve.prefix_cache:
+            from repro.serving.prefix_cache import PrefixCachingKVCache
+            sub_cls = PrefixCachingKVCache
+        else:
+            sub_cls = PagedKVCache
+        self.shards = [sub_cls(cfg, sub_serve) for _ in range(d)]
+        for s in self.shards:
+            s.detach_pools()
+        hd = cfg.resolved_head_dim
+        pool_shape = (cfg.num_layers, d * (self.shard_blocks + 1),
+                      cfg.num_kv_heads, self.block_size, hd)
+        dtype = cfg.activation_dtype
+        self.k_pool = jnp.zeros(pool_shape, dtype)
+        self.v_pool = jnp.zeros(pool_shape, dtype)
+
+    def _loc(self, slot: int) -> Tuple[int, int]:
+        """(shard, shard-local slot) for a global slot id."""
+        return divmod(slot, self.slots_per_shard)
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.slots_per_shard
+
+    # -- admission / accounting (scheduler-facing) ---------------------------
+
+    @property
+    def max_request_blocks(self) -> int:
+        return self.shard_blocks
+
+    @property
+    def reserved_total(self) -> int:
+        return sum(s.reserved_total for s in self.shards)
+
+    def blocks_needed(self, total_len: int) -> int:
+        return -(-total_len // self.block_size)
+
+    def can_allocate_slot(self, total_len: int, prompt=None) -> bool:
+        """True when *some* shard has room (slot-blind compatibility
+        view; the scheduler uses :meth:`can_allocate_slot_on`)."""
+        return any(s.can_allocate_slot(total_len, prompt=prompt)
+                   for s in self.shards)
+
+    def can_allocate_slot_on(self, slot: int, total_len: int, prompt=None) -> bool:
+        d, _ = self._loc(slot)
+        return self.shards[d].can_allocate_slot(total_len, prompt=prompt)
+
+    def allocate_slot(self, slot: int, total_len: int, prompt=None) -> int:
+        d, ls = self._loc(slot)
+        return self.shards[d].allocate_slot(ls, total_len, prompt=prompt)
+
+    def commit(self, slot: int, tokens) -> None:
+        d, ls = self._loc(slot)
+        self.shards[d].commit(ls, tokens)
+
+    def committed_blocks(self, slot: int) -> int:
+        d, ls = self._loc(slot)
+        return self.shards[d].committed_blocks(ls)
+
+    def free_slot(self, slot: int) -> None:
+        d, ls = self._loc(slot)
+        self.shards[d].free_slot(ls)
+
+    def ensure_capacity(self, slot: int, length: int) -> None:
+        d, ls = self._loc(slot)
+        self.shards[d].ensure_capacity(ls, length)
+
+    def truncate_slot(self, slot: int, new_len: int) -> None:
+        d, ls = self._loc(slot)
+        self.shards[d].truncate_slot(ls, new_len)
+
+    def write_coords(self, slot: int, position: int) -> Tuple[int, int]:
+        """Shard-local (block, offset): the step's scatter and attention
+        run under shard_map, where each body sees only its pool slice."""
+        d, ls = self._loc(slot)
+        return self.shards[d].write_coords(ls, position)
+
+    def row_table(self, slot: int) -> np.ndarray:
+        d, ls = self._loc(slot)
+        return self.shards[d].row_table(ls)
+
+    def held_blocks(self, slot: int) -> int:
+        d, ls = self._loc(slot)
+        return self.shards[d].held_blocks(ls)
+
+    def warm_prefix_tokens(self, prompt) -> int:
+        return max(s.warm_prefix_tokens(prompt) for s in self.shards)
+
+    @property
+    def stats(self):
+        """Summed prefix-cache counters across shards."""
+        totals: Dict[str, int] = {}
+        for s in self.shards:
+            for k, v in s.stats.items():
+                totals[k] = totals.get(k, 0) + v
+        return totals
+
+    # -- preemption swap hooks: unsupported under data sharding --------------
+
+    def swap_footprint(self, slot: int) -> int:
+        raise NotImplementedError(
+            "KV swap-to-host preemption is not supported on a sharded cache")
+
+    def swap_out(self, slot, swap, *, uid, total_len, context_len):
+        raise NotImplementedError(
+            "KV swap-to-host preemption is not supported on a sharded cache")
+
+    def can_restore(self, rec) -> bool:
+        raise NotImplementedError(
+            "KV swap-to-host preemption is not supported on a sharded cache")
+
+    def restore_slot(self, slot, rec, swap) -> int:
+        raise NotImplementedError(
+            "KV swap-to-host preemption is not supported on a sharded cache")
+
+    def check_conservation(self) -> None:
+        """Every shard's full invariant suite, then the aggregate view:
+        summed reservations within the global pool and summed
+        free/allocated conservation across per-shard allocators."""
+        for s in self.shards:
+            s.check_conservation()
+        assert self.reserved_total <= self.num_blocks
+        free = live = cached = 0
+        for s in self.shards:
+            a = s.allocator
+            free += a.free_count
+            # plain allocator: allocated; refcounted: live + cached-LRU
+            live += getattr(a, "allocated_count", 0) + getattr(a, "live_count", 0)
+            cached += getattr(a, "cached_count", 0)
+        assert free + live + cached == self.num_blocks, (
+            free, live, cached, self.num_blocks)
+
+    def update_pools(self, k_pool: jax.Array, v_pool: jax.Array) -> None:
         self.k_pool = k_pool
         self.v_pool = v_pool

@@ -424,6 +424,15 @@ class PrefixCachingKVCache(PagedKVCache):
                                published=self.index.published(old))
         if self.allocator.refcount(old) > 0:
             self.stats["cow_detaches"] += 1
+        if self.k_pool is None:
+            # Detached per-shard sub-cache (ShardedPagedKVCache owns the
+            # stacked pools).  Only speculative rollback into a partial
+            # *shared* block reaches a COW detach, and the engine rejects
+            # spec + mesh before construction — so this is a guard, not a
+            # path.
+            raise NotImplementedError(
+                "copy-on-write detach needs device pools; not supported on "
+                "a detached per-shard cache")
         new = self.allocator.alloc(1, owner=slot)[0]
         if new != old:      # eviction can hand the same id straight back
             self.k_pool = self.k_pool.at[:, new].set(self.k_pool[:, old])

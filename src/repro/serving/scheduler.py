@@ -183,12 +183,14 @@ class Scheduler:
                 f"{request.total_len} exceeds serve max_len {self.max_len}")
         if self.kv_cache is not None:
             need = self.kv_cache.blocks_needed(request.total_len)
-            if need > self.kv_cache.allocator.num_blocks:
-                # would never fit even an empty pool: admission would
-                # spin on it (fcfs) or skip it for ever (sjf/first-fit)
+            if need > self.kv_cache.max_request_blocks:
+                # would never fit even an empty pool (one *shard's* pool
+                # under a sharded cache): admission would spin on it
+                # (fcfs) or skip it for ever (sjf/first-fit)
                 raise ValueError(
-                    f"request {request.uid}: needs {need} KV blocks but the "
-                    f"pool only has {self.kv_cache.allocator.num_blocks}")
+                    f"request {request.uid}: needs {need} KV blocks but a "
+                    f"request can hold at most "
+                    f"{self.kv_cache.max_request_blocks}")
         st = RequestState(request)
         self.waiting.append(st)
         return st
@@ -196,12 +198,36 @@ class Scheduler:
     # -- admission ----------------------------------------------------------
 
     def _fits(self, st: RequestState) -> bool:
+        """Global admission view: does some *free slot's* shard have room
+        for this request's worst-case footprint?  With a single pool
+        every free slot is equivalent, so one probe suffices; a sharded
+        cache is probed per free slot (slots are bound to shards)."""
         if self.kv_cache is None:
             return True
         if st.status is Status.PREEMPTED:
             return self.kv_cache.can_restore(st.swap_record)
-        return self.kv_cache.can_allocate_slot(st.request.total_len,
+        slots = self.free_slots
+        if self.kv_cache.num_shards == 1:
+            slots = slots[-1:] or [0]   # one pool: any slot is the same probe
+        return any(
+            self.kv_cache.can_allocate_slot_on(slot, st.request.total_len,
                                                prompt=st.request.prompt)
+            for slot in reversed(slots))
+
+    def _pick_slot(self, st: RequestState) -> int:
+        """The free slot this admission lands on: LIFO for a single pool
+        (exactly the pre-mesh behaviour), else the LIFO-first free slot
+        whose shard can take the reservation.  Only called after
+        ``_fits`` said yes, so a fitting slot exists."""
+        if (self.kv_cache is None or self.kv_cache.num_shards == 1
+                or st.status is Status.PREEMPTED):
+            return self.free_slots.pop()
+        for i in range(len(self.free_slots) - 1, -1, -1):
+            slot = self.free_slots[i]
+            if self.kv_cache.can_allocate_slot_on(slot, st.request.total_len,
+                                                  prompt=st.request.prompt):
+                return self.free_slots.pop(i)
+        raise AssertionError("admit without a fitting shard")  # _fits lied
 
     def admit(self, clock_ms: float) -> List[RequestState]:
         """Admit from the queue under the configured policy: arrived
@@ -219,7 +245,7 @@ class Scheduler:
             if idx is None:
                 break
             st = self.waiting.pop(idx)
-            slot = self.free_slots.pop()
+            slot = self._pick_slot(st)
             st.cached_tokens = 0
             if st.status is Status.PREEMPTED:
                 rec, st.swap_record = st.swap_record, None

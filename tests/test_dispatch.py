@@ -61,11 +61,16 @@ class TestRegistry:
     def test_dropless_requires_capable_backend(self):
         """capacity_factor=None is validated against the registry: only
         backends declaring supports_dropless may execute it."""
-        for impl in ("einsum", "gather", "pallas", "alltoall"):
+        for impl in ("einsum", "gather", "pallas"):
             with pytest.raises(ValueError, match="dropless"):
                 MoEConfig(num_experts=4, impl=impl, capacity_factor=None)
         m = MoEConfig(num_experts=4, impl="dropless", capacity_factor=None)
         assert m.dropless
+        # alltoall routes dropless plans through the ragged expert-parallel
+        # exchange (falling back to the single-device ragged layout off a
+        # mesh), so it declares supports_dropless too.
+        assert MoEConfig(num_experts=4, impl="alltoall",
+                         capacity_factor=None).dropless
         # dropless capacity is the per-group token count: a token's K
         # choices target distinct experts, so nothing can ever overflow.
         assert m.capacity(64) == 64
@@ -465,9 +470,11 @@ def test_alltoall_in_process_on_8_devices(mesh8, moe_model_cfg):
 
 
 def test_dropless_in_process_on_8_devices(mesh8, moe_model_cfg):
-    """Dropless conservation holds under a sharded (2, 4) mesh: the
-    ragged dispatch runs with Rules active (GSPMD parallelism) and still
-    matches the einsum reference with zero drops, fwd + bwd."""
+    """Dropless conservation holds under a sharded (2, 4) mesh: with the
+    expert axis 4-way sharded and G divisible by the device grid, the
+    backend runs the *ragged expert-parallel* exchange (structurally
+    asserted: all_to_all in the jaxpr) and still matches the einsum
+    reference with zero drops, fwd + bwd."""
     from repro.distributed.sharding import make_rules, use_rules
 
     mesh = mesh8
@@ -488,6 +495,11 @@ def test_dropless_in_process_on_8_devices(mesh8, moe_model_cfg):
     assert float(jax.device_get(aux["moe_dropped_fraction"])) == 0.0
     np.testing.assert_allclose(np.asarray(y0), np.asarray(jax.device_get(y1)),
                                atol=2e-5)
+    # the expert-sharded mesh must engage the ragged EP exchange, not
+    # fall back to the GSPMD path (let alone gather)
+    with use_rules(rules):
+        assert "all_to_all" in str(jax.make_jaxpr(
+            lambda p, xx: moe_ffn_apply(p, xx, cfg)[0])(params, x))
 
     def loss(c, r):
         def g(p):
@@ -502,6 +514,59 @@ def test_dropless_in_process_on_8_devices(mesh8, moe_model_cfg):
         a, b = np.asarray(g_e[k]), np.asarray(jax.device_get(g_d[k]))
         np.testing.assert_allclose(a, b, atol=1e-4 * max(np.abs(a).max(), 1e-9),
                                    err_msg=k)
+
+
+def test_ragged_ep_alltoall_impl_in_process(mesh8, moe_model_cfg,
+                                            dense_shape_present):
+    """capacity_factor=None on the ``alltoall`` backend: dropless plans
+    route through the ragged EP dispatch (the (E,C)-buffered exchange
+    has no capacity dimension to buffer) and match the single-device
+    dropless path fwd + bwd; the jaxpr holds the all_to_all exchange and
+    no dense capacity tensor, global or per-shard."""
+    from repro.distributed.sharding import make_rules, use_rules
+
+    mesh = mesh8
+    cfg = moe_model_cfg("topk", impl="alltoall", capacity_factor=None,
+                        group_size=32)
+    rules = make_rules(cfg, mesh)
+    params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32))   # G = 8
+    cfg_d = cfg.replace_moe(impl="dropless")
+    y0, _ = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg_d))(params, x)
+
+    def fwd(p, xx):
+        with use_rules(rules):
+            return moe_ffn_apply(p, xx, cfg)[0]
+
+    with mesh:
+        y1 = jax.jit(fwd)(params, x)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(jax.device_get(y1)),
+                               atol=2e-5)
+
+    def loss(c, r):
+        def g(p):
+            with use_rules(r):
+                return jnp.sum(moe_ffn_apply(p, x, c)[0] ** 2)
+        return g
+
+    g_d = jax.grad(loss(cfg_d, None))(params)
+    with mesh:
+        g_a = jax.jit(jax.grad(loss(cfg, rules)))(params)
+    for k in g_d:
+        a, b = np.asarray(g_d[k]), np.asarray(jax.device_get(g_a[k]))
+        np.testing.assert_allclose(a, b, atol=1e-4 * max(np.abs(a).max(), 1e-9),
+                                   err_msg=k)
+
+    xg, G = group_tokens(x, cfg.moe)
+    T = xg.shape[1]
+    E, C = cfg.moe.num_experts, cfg.moe.capacity(T)
+    with use_rules(rules):
+        closed = jax.make_jaxpr(fwd)(params, x)
+    assert "all_to_all" in str(closed)
+    from conftest import _walk_avals
+    shapes = {getattr(a, "shape", None) for a in _walk_avals(closed.jaxpr)}
+    assert (G, T, E, C) not in shapes           # global dense
+    assert (G // 8, T, E, C) not in shapes      # per-shard dense
 
 
 @pytest.mark.skipif(jax.device_count() >= 8,
@@ -645,3 +710,84 @@ def test_dropless_on_mesh_conserves_tokens(run_sub):
     print("dropless-mesh-ok")
     """
     assert "dropless-mesh-ok" in run_sub(code)
+
+
+@pytest.mark.skipif(jax.device_count() >= 8,
+                    reason="multi-device parent runs the in-process ragged-EP "
+                           "tests instead; the subprocess variant belongs to "
+                           "the single-device CI job")
+def test_ragged_ep_on_mesh_matches_dropless(run_sub):
+    """8-virtual-device (2, 4) mesh: the ragged expert-parallel dispatch
+    (dropless plans on the ``dropless`` AND ``alltoall`` backends)
+    matches the single-device dropless reference fwd + bwd, engages the
+    all_to_all exchange and builds no dense capacity tensor."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.core.moe import group_tokens, moe_ffn_apply, moe_ffn_specs
+    from repro.distributed.sharding import make_rules, use_rules
+    from repro.launch.mesh import make_debug_mesh
+    from repro.nn import init
+
+    assert jax.device_count() == 8
+    mesh = make_debug_mesh(2, 4)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                yield v.aval
+            for p in eqn.params.values():
+                for pv in (p if isinstance(p, (list, tuple)) else [p]):
+                    inner = getattr(pv, "jaxpr", pv)
+                    if hasattr(inner, "eqns"):
+                        yield from walk(inner)
+
+    for routing, impl in (("topk", "alltoall"), ("hash", "dropless")):
+        cfg = ModelConfig(d_model=32, d_ff=48, dtype="float32",
+                          moe=MoEConfig(num_experts=8, routing=routing,
+                                        top_k=2, group_size=32,
+                                        capacity_factor=None, impl=impl))
+        rules = make_rules(cfg, mesh)
+        params = init(moe_ffn_specs(cfg), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 32))  # G = 8
+        cfg_d = cfg.replace_moe(impl="dropless")
+        y0, _ = jax.jit(lambda p, xx: moe_ffn_apply(p, xx, cfg_d))(params, x)
+
+        def fwd(p, xx):
+            with use_rules(rules):
+                return moe_ffn_apply(p, xx, cfg)[0]
+
+        with mesh:
+            y1 = jax.jit(fwd)(params, x)
+        np.testing.assert_allclose(np.asarray(y0),
+                                   np.asarray(jax.device_get(y1)), atol=2e-5)
+
+        def loss(c, r):
+            def g(p):
+                with use_rules(r):
+                    return jnp.sum(moe_ffn_apply(p, x, c)[0] ** 2)
+            return g
+
+        g_d = jax.grad(loss(cfg_d, None))(params)
+        with mesh:
+            g_a = jax.jit(jax.grad(loss(cfg, rules)))(params)
+        for k in g_d:
+            a = np.asarray(g_d[k]); b = np.asarray(jax.device_get(g_a[k]))
+            np.testing.assert_allclose(
+                a, b, atol=1e-4 * max(np.abs(a).max(), 1e-9),
+                err_msg=routing + "/" + k)
+
+        xg, G = group_tokens(x, cfg.moe)
+        T = xg.shape[1]
+        E, C = cfg.moe.num_experts, cfg.moe.capacity(T)
+        with use_rules(rules):
+            closed = jax.make_jaxpr(fwd)(params, x)
+        assert "all_to_all" in str(closed), (routing, impl)
+        shapes = {getattr(a, "shape", None) for a in walk(closed.jaxpr)}
+        assert (G, T, E, C) not in shapes, (routing, impl)
+        assert (G // 8, T, E, C) not in shapes, (routing, impl)
+        print(routing, impl, "ragged-ep-ok")
+    """
+    out = run_sub(code, timeout=1500)
+    assert "topk alltoall ragged-ep-ok" in out
+    assert "hash dropless ragged-ep-ok" in out

@@ -1,0 +1,66 @@
+"""Regression tests: ``repro.launch.dryrun`` must *append* its
+``--xla_force_host_platform_device_count`` to caller-set ``XLA_FLAGS``
+at import time — never clobber them — and must respect a device count
+the caller already forced (it used to overwrite both, silently dropping
+e.g. a debugger's dump flags and breaking any parent that had already
+pinned a smaller virtual-device grid).
+
+Each test runs in a subprocess because the flag block executes once, at
+first import, before jax initialises."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, **env_over) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_DRYRUN_DEVICES", None)
+    env.update(env_over)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_appends_to_existing_xla_flags():
+    """Caller-set flags survive, the device-count flag is added, and jax
+    actually sees the requested virtual device count."""
+    out = _run("""
+        import os
+        import repro.launch.dryrun  # noqa: F401  (flag block runs at import)
+        flags = os.environ["XLA_FLAGS"]
+        assert "--xla_cpu_enable_fast_math=false" in flags, flags
+        assert "--xla_force_host_platform_device_count=4" in flags, flags
+        import jax
+        print("devices", jax.device_count())
+    """, XLA_FLAGS="--xla_cpu_enable_fast_math=false",
+        REPRO_DRYRUN_DEVICES="4")
+    assert "devices 4" in out
+
+
+def test_respects_caller_forced_device_count():
+    """A device count the caller already forced wins: no second
+    (conflicting) flag is appended."""
+    out = _run("""
+        import os
+        import repro.launch.dryrun  # noqa: F401
+        flags = os.environ["XLA_FLAGS"]
+        assert flags.count("--xla_force_host_platform_device_count") == 1, flags
+        import jax
+        print("devices", jax.device_count())
+    """, XLA_FLAGS="--xla_force_host_platform_device_count=2")
+    assert "devices 2" in out
+
+
+def test_default_is_512_virtual_devices():
+    out = _run("""
+        import os
+        import repro.launch.dryrun  # noqa: F401
+        print("flags:", os.environ["XLA_FLAGS"])
+    """)
+    assert "--xla_force_host_platform_device_count=512" in out

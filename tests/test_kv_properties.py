@@ -230,6 +230,194 @@ def test_prefix_cache_interleavings(case):
     check_prefix_sequence(*case)
 
 
+# ---------------------------------------------------------------------------
+# Sharded pools: N per-shard allocators vs one host-side global model
+# (the mesh-serving tentpole — admission holds per shard AND in aggregate)
+# ---------------------------------------------------------------------------
+
+def check_sharded_allocator_sequence(num_shards, blocks_per_shard, ops):
+    """ops: (kind, shard, amount) with kind 0=alloc, 1=free-oldest,
+    2=free-newest, each targeting one shard's allocator.  A host-side
+    global model tracks every shard's live chunks; after every op the
+    per-shard invariants (conservation, free-count) AND the aggregate
+    ones (summed conservation, the no-starvation witness: a 1-block
+    admission can proceed somewhere iff the aggregate pool has headroom)
+    must hold."""
+    shards = [BlockAllocator(blocks_per_shard) for _ in range(num_shards)]
+    live = [[] for _ in range(num_shards)]
+    total = num_shards * blocks_per_shard
+    for kind, sh, amount in ops:
+        sh = sh % num_shards
+        a = shards[sh]
+        if kind == 0:
+            n = amount % (blocks_per_shard + 2)
+            if a.can_alloc(n):
+                got = a.alloc(n)
+                assert len(got) == n == len(set(got))
+                assert all(0 <= b < blocks_per_shard for b in got)
+                flat = {b for chunk in live[sh] for b in chunk}
+                assert not (set(got) & flat)
+                if got:
+                    live[sh].append(got)
+            else:
+                # a full shard rejects even when its *peers* have room —
+                # routing around that is the admission layer's job
+                with pytest.raises(RuntimeError):
+                    a.alloc(n)
+        elif live[sh]:
+            chunk = live[sh].pop(0 if kind == 1 else -1)
+            a.free(chunk)
+            with pytest.raises(RuntimeError):
+                a.free(chunk)               # double-free detected per shard
+        held = 0
+        for s2, a2 in enumerate(shards):
+            a2.check_conservation()
+            h = sum(len(c) for c in live[s2])
+            assert a2.free_count == blocks_per_shard - h
+            held += h
+        assert sum(a2.free_count for a2 in shards) == total - held
+        assert any(a2.can_alloc(1) for a2 in shards) == (held < total)
+    for sh, a in enumerate(shards):
+        for chunk in live[sh]:
+            a.free(chunk)
+        a.check_conservation()
+        assert a.free_count == blocks_per_shard
+
+
+@st.composite
+def sharded_allocator_cases(draw):
+    num_shards = draw(st.integers(1, 4))
+    blocks_per_shard = draw(st.integers(1, 12))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, 2), st.integers(0, 3), st.integers(0, 24)),
+        max_size=40))
+    return num_shards, blocks_per_shard, ops
+
+
+@given(sharded_allocator_cases())
+@settings(**SETTINGS)
+def test_sharded_allocator_interleavings(case):
+    check_sharded_allocator_sequence(*case)
+
+
+def test_free_on_the_wrong_shard_raises():
+    """Block ids are shard-local: handing shard 1 a chunk allocated on
+    shard 0 must be rejected as a double-free (those ids are free on
+    shard 1), leaving both shards' books intact."""
+    shards = [BlockAllocator(8), BlockAllocator(8)]
+    chunk = shards[0].alloc(3)
+    with pytest.raises(RuntimeError, match="double-free"):
+        shards[1].free(chunk)
+    shards[1].check_conservation()
+    assert shards[1].free_count == 8        # nothing leaked into shard 1
+    shards[0].free(chunk)
+    shards[0].check_conservation()
+    assert shards[0].free_count == 8
+
+
+def check_sharded_cache_sequence(data_shards, slots_per_shard, bs,
+                                 blocks_per_shard, ops):
+    """ops: (kind, slot, amount); kind 0=allocate_slot, 1=ensure_capacity,
+    2=truncate_slot, 3=free_slot against a ShardedPagedKVCache.  Slot
+    ``s`` lives on shard ``s // slots_per_shard``; a host model of
+    per-slot (reserved_len, cur_len) decides legality *per shard* — a
+    request fits iff its owning shard has reservation headroom, however
+    much room the peers have."""
+    from repro.serving.kv_cache import ShardedPagedKVCache
+
+    max_slots = data_shards * slots_per_shard
+    serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
+                        max_len=max(blocks_per_shard * bs, 2),
+                        num_blocks=data_shards * blocks_per_shard,
+                        mesh=(("data", data_shards), ("expert", 1)))
+    cache = ShardedPagedKVCache(_cfg(), serve)
+    assert cache.num_shards == data_shards
+    assert cache.max_request_blocks == blocks_per_shard
+    model = {}                                  # slot -> [total_len, cur_len]
+
+    def reserved(sh):
+        return sum(-(-t // bs) for s, (t, _) in model.items()
+                   if s // slots_per_shard == sh)
+
+    for kind, slot, amount in ops:
+        slot = slot % max_slots
+        sh = slot // slots_per_shard
+        if kind == 0 and slot not in model:
+            total = 1 + amount % serve.max_len
+            fits = reserved(sh) + -(-total // bs) <= blocks_per_shard
+            assert cache.can_allocate_slot_on(slot, total) == fits
+            if fits:
+                cache.allocate_slot(slot, total)
+                model[slot] = [total, 0]
+                assert cache.held_blocks(slot) == 0
+        elif kind == 1 and slot in model:
+            total, cur = model[slot]
+            length = min(1 + amount % serve.max_len, total)
+            cache.ensure_capacity(slot, length)
+            model[slot][1] = max(cur, length)
+            assert cache.held_blocks(slot) == -(-model[slot][1] // bs)
+        elif kind == 2 and slot in model:
+            total, cur = model[slot]
+            new_len = amount % (cur + 1)
+            cache.truncate_slot(slot, new_len)
+            model[slot][1] = new_len
+        elif kind == 3 and slot in model:
+            cache.free_slot(slot)
+            del model[slot]
+        cache.check_conservation()              # per-shard + aggregate
+        # reservation accounting, per shard and summed
+        for s2, sub in enumerate(cache.shards):
+            assert sub.reserved_total == reserved(s2)
+            assert sub.reserved_total <= blocks_per_shard
+        assert cache.reserved_total == sum(
+            reserved(s2) for s2 in range(data_shards))
+        # no-starvation witness: some shard can admit a 1-token request
+        # iff some shard has reservation headroom
+        assert cache.can_allocate_slot(1) == any(
+            reserved(s2) < blocks_per_shard for s2 in range(data_shards))
+    for slot in list(model):
+        cache.free_slot(slot)
+    cache.check_conservation()
+    assert cache.reserved_total == 0
+
+
+@st.composite
+def sharded_cache_cases(draw):
+    data_shards = draw(st.sampled_from([1, 2, 4]))
+    slots_per_shard = draw(st.integers(1, 2))
+    bs = draw(st.sampled_from([1, 4]))
+    blocks_per_shard = draw(st.integers(1, 12))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 7), st.integers(0, 256)),
+        max_size=40))
+    return data_shards, slots_per_shard, bs, blocks_per_shard, ops
+
+
+@given(sharded_cache_cases())
+@settings(**SETTINGS)
+def test_sharded_cache_interleavings(case):
+    check_sharded_cache_sequence(*case)
+
+
+def test_sharded_cache_rejects_swap():
+    """Preemption swap is per-shard state the sharded facade does not
+    support yet (ServeConfig forbids slo with a mesh); the hooks fail
+    loudly rather than corrupting a shard's books."""
+    from repro.serving.kv_cache import ShardedPagedKVCache
+
+    serve = ServeConfig(max_slots=2, kv_block_size=4, max_len=8, num_blocks=4,
+                        mesh=(("data", 2), ("expert", 1)))
+    cache = ShardedPagedKVCache(_cfg(), serve)
+    cache.allocate_slot(0, 5)
+    cache.ensure_capacity(0, 5)
+    with pytest.raises(NotImplementedError):
+        cache.swap_footprint(0)
+    with pytest.raises(NotImplementedError):
+        cache.swap_out(0, None, uid=0, total_len=5, context_len=5)
+    cache.free_slot(0)
+    cache.check_conservation()
+
+
 def test_cache_checkers_run_without_hypothesis():
     """Fixed-grid drive of the check_* helpers (mirrors the
     test_plan_properties.py convention)."""
@@ -244,3 +432,11 @@ def test_cache_checkers_run_without_hypothesis():
         (0, 0, 12), (1, 0, 12), (5, 1, 0),          # back into slot 1
         (4, 0, 0), (4, 1, 0), (5, 0, 0), (5, 1, 1),
         (3, 0, 0), (3, 1, 0)])
+    # sharded pools: fill one shard while the other stays free (the
+    # per-shard rejection + aggregate no-starvation witness), then the
+    # slot-routed facade over two data shards
+    check_sharded_allocator_sequence(2, 4, [
+        (0, 0, 4), (0, 0, 1), (0, 1, 2), (1, 0, 0), (0, 0, 3), (2, 1, 0)])
+    check_sharded_cache_sequence(2, 2, 4, 4, [
+        (0, 0, 15), (1, 0, 10), (0, 2, 9), (1, 2, 6),
+        (0, 1, 12), (2, 0, 3), (3, 2, 0), (0, 3, 7), (3, 0, 0), (3, 1, 0)])
