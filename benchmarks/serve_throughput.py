@@ -49,6 +49,7 @@ import numpy as np
 
 from common import bench_config, save_result
 from repro.configs.base import ServeConfig, SLOConfig, SpecConfig
+from repro.obs import Observability
 from repro.models.registry import get_family
 from repro.nn import init
 from repro.serving.continuous import ContinuousEngine
@@ -66,6 +67,39 @@ TRACE_KW = dict(seed=0, qps=1e6,                # saturated: measure batching, n
                 prompt_lens=(8, 24),
                 gen_lens=(8, 8, 8, 64))         # long tail: lockstep's worst case
 SPEC_GAMMA = 4
+
+
+def obs_sweep(cfg, params, requests, serve: ServeConfig):
+    """Instrumentation overhead: the same trace served with observability
+    at its default level (registry only) vs fully on (span tracing +
+    periodic metrics snapshots).  Greedy, so the cells must be
+    token-identical (asserted) — instrumentation reads engine state, it
+    never steers it.  The artifact records the throughput ratio; the
+    in-code bound is deliberately loose (>= 0.75) because toy-model CPU
+    steps are microseconds — the acceptance target (within 5%) applies
+    at realistic step times where the fixed per-step cost amortises."""
+    eng_off = ContinuousEngine(cfg, params, serve)
+    eng_off.run(requests)                           # warmup/compile
+    out_off, stats_off = eng_off.run(requests)
+
+    obs = Observability(tracing=True)
+    obs.metrics_every = 10
+    eng_on = ContinuousEngine(cfg, params, serve, obs=obs)
+    eng_on.run(requests)                            # warmup/compile
+    out_on, stats_on = eng_on.run(requests)
+
+    assert out_on == out_off, "observability changed generated tokens"
+    ratio = (stats_on["generated_tokens_per_s"]
+             / stats_off["generated_tokens_per_s"])
+    assert ratio >= 0.75, f"observability overhead too high ({ratio:.2f}x)"
+    return {
+        "off": stats_off,
+        "on": stats_on,
+        "tokens_per_s_ratio_on_over_off": ratio,
+        "trace_events": len(obs.tracer.events()),
+        "trace_dropped_events": obs.tracer.dropped_events,
+        "metrics": obs.metrics.snapshot(),
+    }
 
 
 def spec_sweep(cfg, params, requests, serve: ServeConfig):
@@ -102,6 +136,7 @@ def spec_sweep(cfg, params, requests, serve: ServeConfig):
         eng.run(requests)                       # warmup/compile
         outs[name], stats = eng.run(requests)
         results[name] = stats
+    results["metrics"] = eng.obs.metrics.snapshot()
     for name in ("ngram", "model"):             # greedy => identical outputs
         assert outs[name] == outs["off"], f"{name} diverged from baseline"
         results[name]["speedup_vs_off"] = (
@@ -150,6 +185,7 @@ def prefix_sweep(cfg, params):
     outs["cold"], results["cold"] = eng.run(requests)
     outs["warm"], results["warm"] = eng.run(requests)
     results["cache_stats"] = dict(eng.cache.stats)
+    results["metrics"] = eng.obs.metrics.snapshot()
     eng.cache.check_conservation()
 
     for name in ("cold", "warm"):
@@ -234,6 +270,7 @@ def slo_sweep(cfg, params):
         cell = ContinuousEngine(cfg, params, sv, check_invariants=True)
         cell.run(warmup)                                  # warmup/compile
         outs[name], results[name] = cell.run(requests)
+    results["metrics"] = cell.obs.metrics.snapshot()
     for name in ("priority_strict", "edf", "cache_aware"):
         assert outs[name] == outs["fcfs"], (
             f"{name} diverged from fcfs outputs — preemption must be "
@@ -286,6 +323,7 @@ def mesh_sweep(cfg, params):
         eng.run(requests)                       # warmup/compile
         outs[name], results[name] = eng.run(requests)
         eng.cache.check_conservation()
+        results["metrics"] = eng.obs.metrics.snapshot()
     for name in outs:
         if name == "single":
             continue
@@ -342,6 +380,7 @@ def main():
     cont = ContinuousEngine(cfg, params, serve)
     cont.run(requests)                                     # warmup/compile
     _, results["continuous"] = cont.run(requests)          # engine drains clean
+    results["metrics"] = cont.obs.metrics.snapshot()
 
     s, c = results["static"], results["continuous"]
     results["speedup_tokens_per_s"] = (
@@ -351,6 +390,11 @@ def main():
     print(f"continuous: {c['generated_tokens_per_s']:.1f} tok/s, "
           f"p50 {c['p50_ms']:.0f}ms p95 {c['p95_ms']:.0f}ms "
           f"({results['speedup_tokens_per_s']:.2f}x)")
+    results["obs"] = obs_sweep(cfg, params, requests, serve)
+    print(f"obs overhead: "
+          f"{results['obs']['tokens_per_s_ratio_on_over_off']:.2f}x tok/s "
+          f"with tracing+metrics on "
+          f"({results['obs']['trace_events']} trace events)")
     path = save_result("BENCH_serve_throughput", results)
     print("wrote", path)
 

@@ -22,6 +22,38 @@ def dropped_fraction(expert_loads: jax.Array, total_slots: int) -> jax.Array:
     return jnp.maximum(float(total_slots) - kept, 0.0) / float(total_slots)
 
 
+def gate_entropy(gate: jax.Array, valid: jax.Array) -> jax.Array:
+    """Mean per-token entropy (nats) of the *kept* gate distribution.
+
+    ``gate``/``valid`` are the plan's ``(G, T, K)`` index-view arrays;
+    each token's surviving gates are renormalised over its kept choices
+    before the entropy, so a token routed to one expert contributes
+    exactly 0 and a token split evenly over k experts contributes
+    ``log(k)``.  Tokens with every choice dropped contribute 0.
+    """
+    g = jnp.where(valid, gate, 0.0)
+    tot = jnp.sum(g, axis=-1, keepdims=True)
+    p = g / jnp.maximum(tot, 1e-9)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-9)), 0.0),
+                   axis=-1)
+    return jnp.mean(ent)
+
+
+def load_entropy(expert_loads) -> float:
+    """Entropy (nats) of the normalised expert-load distribution — the
+    host-side summary the serving telemetry publishes per layer.  A
+    perfectly balanced layer reports ``log(E)``; a collapsed router 0."""
+    import numpy as np
+
+    loads = np.asarray(expert_loads, np.float64)
+    tot = loads.sum()
+    if tot <= 0:
+        return 0.0
+    p = loads / tot
+    p = p[p > 0]
+    return float(-(p * np.log(p)).sum())
+
+
 def merge_aux(aux_list: List[Dict]) -> Dict:
     """Combine per-layer aux dicts: losses summed, metrics stacked."""
     if not aux_list:
@@ -38,10 +70,16 @@ def merge_aux(aux_list: List[Dict]) -> Dict:
     return out
 
 
-def empty_aux() -> Dict:
+def empty_aux(num_experts: int = 0) -> Dict:
+    """The aux dict a dense layer contributes.  ``num_experts`` sizes the
+    telemetry keys so per-layer stacking stays shape-uniform when dense
+    layers interleave with MoE layers (``moe_layer_period > 1``)."""
     return {
         "moe_aux_loss": jnp.zeros((), jnp.float32),
         "moe_z_loss": jnp.zeros((), jnp.float32),
         "moe_cv": jnp.zeros((), jnp.float32),
         "moe_dropped_fraction": jnp.zeros((), jnp.float32),
+        "moe_expert_tokens": jnp.zeros((num_experts,), jnp.float32),
+        "moe_gate_entropy": jnp.zeros((), jnp.float32),
+        "moe_routed_choices": jnp.zeros((), jnp.float32),
     }

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core.context import MoEContext
 from repro.core.dispatch import get_dispatcher
+from repro.core.metrics import gate_entropy
 from repro.core.routers import get_router
 from repro.core.routing import RoutingPlan, route
 from repro.distributed.sharding import shard
@@ -110,9 +111,11 @@ def moe_ffn_apply(params, x, cfg: ModelConfig,
     router_w = params.get("router")
     if router_w is not None:
         router_w = router_w.astype(jnp.float32)
-    plan = route(xg, router_w, m, capacity, ctx=gctx)
+    with jax.named_scope("moe_route"):
+        plan = route(xg, router_w, m, capacity, ctx=gctx)
 
-    y = get_dispatcher(m.impl)(params, xg, plan, cfg, ctx=gctx)
+    with jax.named_scope(f"moe_dispatch_{m.impl}"):
+        y = get_dispatcher(m.impl)(params, xg, plan, cfg, ctx=gctx)
 
     y = y.reshape(B, S, M).astype(x.dtype)
     aux = {
@@ -120,5 +123,14 @@ def moe_ffn_apply(params, x, cfg: ModelConfig,
         "moe_z_loss": plan.z_loss,
         "moe_cv": plan.metrics["cv"],
         "moe_dropped_fraction": plan.metrics["dropped_fraction"],
+        # live telemetry (repro.obs): per-expert kept-choice counts, the
+        # kept-gate entropy, and the drop denominator — all derived from
+        # the plan the dispatcher actually executed
+        "moe_expert_tokens":
+            plan.metrics["expert_loads"].astype(jnp.float32),
+        "moe_gate_entropy": gate_entropy(plan.gate, plan.valid),
+        "moe_routed_choices": plan.metrics.get(
+            "routed_choices",
+            jnp.asarray(float(plan.expert_index.size), jnp.float32)),
     }
     return y, aux

@@ -315,4 +315,8 @@ def index_load_metrics(expert_index: jax.Array, valid: jax.Array,
     cv = jnp.std(loads) / (mean + 1e-9)
     return {"cv": cv,
             "dropped_fraction": dropped_fraction(loads, total_slots),
-            "expert_loads": loads}
+            "expert_loads": loads,
+            # the dropped_fraction denominator, carried so consumers can
+            # aggregate drop *counts* exactly across steps (serving
+            # telemetry) instead of re-deriving it per router
+            "routed_choices": jnp.asarray(float(total_slots), jnp.float32)}

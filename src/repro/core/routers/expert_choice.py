@@ -76,6 +76,7 @@ def expert_choice_plan(logits: jax.Array, cfg: MoEConfig, capacity: int,
         "cv": jnp.zeros((), jnp.float32),
         "dropped_fraction": unrouted,
         "expert_loads": jnp.full((E,), float(G * c_eff), jnp.float32),
+        "routed_choices": jnp.asarray(float(G * T), jnp.float32),
     }
     return RoutingPlan(expert_index, slot_index, gate, valid, E, capacity,
                        jnp.zeros((), jnp.float32), zl, metrics, combine_dtype,

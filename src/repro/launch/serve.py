@@ -60,6 +60,22 @@ def parse_mesh(text: str):
     return (("data", sizes.get("data", 1)), ("expert", sizes.get("expert", 1)))
 
 
+def _write_obs(engine, args) -> None:
+    """Flush the engine's tracer / metrics registry to the requested
+    output files (docs/observability.md documents both formats)."""
+    if args.trace_out:
+        if args.trace_out.endswith(".jsonl"):
+            engine.obs.tracer.write_jsonl(args.trace_out)
+        else:
+            engine.obs.tracer.write_chrome_trace(args.trace_out)
+        print(f"trace -> {args.trace_out} "
+              f"({len(engine.obs.tracer.events())} events, "
+              f"{engine.obs.tracer.dropped_events} dropped)")
+    if args.metrics_out:
+        engine.obs.write_metrics_jsonl(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmoe-1b-7b", choices=ALL_IDS)
@@ -143,6 +159,20 @@ def main(argv=None):
                     help="gamma, or 'none' for dropless serving")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    # observability (repro.obs; continuous engine only)
+    ap.add_argument("--trace-out", default=None,
+                    help="write request-lifecycle + engine-step spans here: "
+                         "Chrome-trace JSON (open in Perfetto), or span "
+                         "JSONL when the path ends in .jsonl")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write registry snapshots as metrics JSONL "
+                         "(periodic rows per --metrics-every + a final row)")
+    ap.add_argument("--metrics-every", type=int, default=50,
+                    help="snapshot the registry every N engine steps")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler device trace of the serve "
+                         "run into this directory (view with TensorBoard "
+                         "or Perfetto)")
     args = ap.parse_args(argv)
 
     mesh_spec = None
@@ -150,6 +180,17 @@ def main(argv=None):
         if args.engine != "continuous":
             raise SystemExit("--mesh needs --engine continuous")
         mesh_spec = parse_mesh(args.mesh)
+
+    obs = None
+    if args.trace_out or args.metrics_out or args.profile_dir:
+        if args.engine != "continuous":
+            raise SystemExit("--trace-out/--metrics-out/--profile-dir need "
+                             "--engine continuous")
+        from repro.obs import Observability
+
+        obs = Observability(tracing=args.trace_out is not None)
+        if args.metrics_out:
+            obs.metrics_every = max(args.metrics_every, 1)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.moe_impl and cfg.moe.num_experts:
@@ -215,8 +256,16 @@ def main(argv=None):
                                 mesh=mesh_spec)
             engine = ContinuousEngine(cfg, params, serve,
                                       temperature=args.temperature,
-                                      seed=args.seed, draft_model=draft_model)
-            toks, stats = engine.generate(prompts, args.gen)
+                                      seed=args.seed, draft_model=draft_model,
+                                      obs=obs)
+            if args.profile_dir:
+                jax.profiler.start_trace(args.profile_dir)
+            try:
+                toks, stats = engine.generate(prompts, args.gen)
+            finally:
+                if args.profile_dir:
+                    jax.profiler.stop_trace()
+            _write_obs(engine, args)
         print("generated:", np.asarray(toks)[:, :16])
         print({k: round(float(v), 4) for k, v in stats.items()})
         return
@@ -260,14 +309,21 @@ def main(argv=None):
                             mesh=mesh_spec)
         engine = ContinuousEngine(cfg, params, serve,
                                   temperature=args.temperature, seed=args.seed,
-                                  draft_model=draft_model)
+                                  draft_model=draft_model, obs=obs)
 
         def stream(st):
             head = st.generated[:8]
             print(f"  req {st.request.uid}: {len(st.generated)} tokens, "
                   f"latency {st.latency_ms():.0f}ms, first {head}")
 
-        _, stats = engine.run(requests, on_finish=stream)
+        if args.profile_dir:
+            jax.profiler.start_trace(args.profile_dir)
+        try:
+            _, stats = engine.run(requests, on_finish=stream)
+        finally:
+            if args.profile_dir:
+                jax.profiler.stop_trace()
+        _write_obs(engine, args)
         if spec is not None:
             print(f"speculative[{spec.drafter}]: acceptance "
                   f"{stats['acceptance_rate']:.2f}, "

@@ -86,6 +86,16 @@ def main(argv=None):
     ap.add_argument("--model", default=1, type=int, help="model mesh axis")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-restarts", type=int, default=3)
+    # observability (repro.obs)
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-train-step spans here: Chrome-trace "
+                         "JSON (Perfetto), or span JSONL for .jsonl paths")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write registry snapshots (one row per logged "
+                         "step) as metrics JSONL")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler device trace of the train "
+                         "loop into this directory")
     args = ap.parse_args(argv)
 
     cfg = build(args)
@@ -116,6 +126,11 @@ def main(argv=None):
     watchdog = StepWatchdog()
     logs = []
 
+    from repro.obs import Observability
+    obs = Observability(tracing=args.trace_out is not None)
+    if args.metrics_out:
+        obs.metrics_every = max(args.log_every, 1)
+
     def fresh_state():
         params = init_params(specs, jax.random.PRNGKey(args.seed))
         params = jax.device_put(params, p_shard)
@@ -131,10 +146,15 @@ def main(argv=None):
         if ckpt is not None and start_step > 0:
             state = ckpt.restore(start_step, jax.eval_shape(lambda: state))
         t_tokens = args.batch * args.seq
+        reg = obs.metrics
         for step in range(start_step, args.steps):
             t0 = time.time()
             batch = {k: jnp.asarray(v) for k, v in pipeline.batch_at(step).items()}
-            state, metrics = jit_step(state, batch)
+            with obs.tracer.span("train_step", cat="train", step=step,
+                                 tokens=t_tokens):
+                state, metrics = jit_step(state, batch)
+            reg.counter("train_steps_total").inc()
+            reg.counter("train_tokens_total").inc(t_tokens)
             if step % args.log_every == 0 or step == args.steps - 1:
                 m = {k: float(np.mean(jax.device_get(v))) for k, v in metrics.items()}
                 dt = time.time() - t0
@@ -142,6 +162,14 @@ def main(argv=None):
                 m.update(step=step, step_time_s=round(dt, 3),
                          tokens_per_s=round(t_tokens / dt, 1))
                 logs.append(m)
+                for key in ("loss", "ce", "moe_cv", "moe_dropped_fraction",
+                            "moe_aux_loss", "moe_z_loss"):
+                    if key in m:
+                        reg.gauge(f"train_{key}").set(m[key])
+                reg.gauge("train_tokens_per_s").set(m["tokens_per_s"])
+                reg.histogram("train_step_ms").observe(dt * 1e3)
+                if args.metrics_out:
+                    obs.metrics_row(step=step)
                 print(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
                       f"cv {m.get('moe_cv', 0):.3f} drop {m.get('moe_dropped_fraction', 0):.3f} "
                       f"({m['tokens_per_s']:.0f} tok/s)", flush=True)
@@ -152,9 +180,22 @@ def main(argv=None):
             ckpt.save(args.steps, state)
         return args.steps
 
-    with mesh:
-        run_with_restarts(loop, resume_step, max_restarts=args.max_restarts)
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
+    try:
+        with mesh:
+            run_with_restarts(loop, resume_step, max_restarts=args.max_restarts)
+    finally:
+        if args.profile_dir:
+            jax.profiler.stop_trace()
 
+    if args.trace_out:
+        if args.trace_out.endswith(".jsonl"):
+            obs.tracer.write_jsonl(args.trace_out)
+        else:
+            obs.tracer.write_chrome_trace(args.trace_out)
+    if args.metrics_out:
+        obs.write_metrics_jsonl(args.metrics_out)
     if args.log_file:
         with open(args.log_file, "w") as f:
             json.dump(logs, f, indent=1)

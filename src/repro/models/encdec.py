@@ -122,7 +122,8 @@ def _dec_block(bp, h, memory_kv, cfg, *, positions, cache=None,
     if cfg.moe.num_experts > 0:
         ffn, aux = moe_ffn_apply(bp["ffn"], f, cfg, ctx=ctx)
     else:
-        ffn, aux = L.ffn_apply(bp["ffn"], f, cfg), empty_aux()
+        ffn, aux = (L.ffn_apply(bp["ffn"], f, cfg),
+                    empty_aux(cfg.moe.num_experts))
     h = h + ffn
     return h, aux, new_cache
 

@@ -81,7 +81,8 @@ def block_apply(params, x, cfg: ModelConfig, *, positions, moe_layer: bool,
             aux = {k: aux[k] + attn_aux[k] if k.endswith("_loss") else aux[k]
                    for k in aux}
     else:
-        ffn_out, aux = L.ffn_apply(params["ffn"], h, cfg), empty_aux()
+        ffn_out, aux = (L.ffn_apply(params["ffn"], h, cfg),
+                        empty_aux(cfg.moe.num_experts))
     x = x + ffn_out
     x = shard(x, "batch", "seq", "embed")
     return x, aux, new_cache

@@ -88,6 +88,7 @@ from repro.models import layers as L
 from repro.models.attention import _project_qkv
 from repro.models.registry import get_family
 from repro.models.transformer import _is_moe_layer
+from repro.obs import Observability
 from repro.serving.kv_cache import PagedKVCache, ShardedPagedKVCache
 from repro.serving.request import Request, RequestState, Status
 from repro.serving.scheduler import Scheduler
@@ -133,21 +134,44 @@ def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
 
     h = L.norm_apply(bp["ln_ffn"], x, cfg)
     if moe_layer:
-        ffn_out, _ = moe_ffn_apply(bp["ffn"], h, cfg, ctx=ctx)
+        with jax.named_scope("moe_ffn"):
+            ffn_out, aux = moe_ffn_apply(bp["ffn"], h, cfg, ctx=ctx)
+        telem = _layer_telemetry(aux, cfg.moe.num_experts)
     else:
         ffn_out = L.ffn_apply(bp["ffn"], h, cfg)
+        telem = _layer_telemetry(None, cfg.moe.num_experts)
     x = x + ffn_out
     x = shard(x, "batch", "seq", "embed")
-    return x, kp, vp
+    return x, kp, vp, telem
+
+
+def _layer_telemetry(aux, num_experts: int) -> dict:
+    """Per-layer routing telemetry with a shape uniform across MoE and
+    dense layers, so the per-layer stack (scan ys or manual) is a clean
+    ``(L, ...)`` pytree.  Dense layers contribute exact zeros."""
+    if aux is None:
+        return {"expert_tokens": jnp.zeros((num_experts,), jnp.float32),
+                "gate_entropy": jnp.zeros((), jnp.float32),
+                "dropped": jnp.zeros((), jnp.float32),
+                "routed_choices": jnp.zeros((), jnp.float32)}
+    choices = aux["moe_routed_choices"]
+    return {"expert_tokens": aux["moe_expert_tokens"],
+            "gate_entropy": aux["moe_gate_entropy"],
+            # drop *count* (fraction × denominator): summable across
+            # steps, and exactly 0.0 when the fraction is exactly 0.0
+            "dropped": aux["moe_dropped_fraction"] * choices,
+            "routed_choices": choices}
 
 
 def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
                   lengths, row_tables, wb, wo, k_pools, v_pools, mesh=None):
     """Flat-row forward: embed -> blocks (scan or unrolled) -> logits.
 
-    Returns (float32 logits (N, V), new k_pools, new v_pools).  Shared
-    by the decode/mixed step (which samples on top) and the speculative
-    verify step (which ships the logits to the host acceptance rule)."""
+    Returns (float32 logits (N, V), new k_pools, new v_pools, telem) —
+    ``telem`` is the per-layer routing telemetry stack ({} for dense
+    models; see ``_layer_telemetry``).  Shared by the decode/mixed step
+    (which samples on top) and the speculative verify step (which ships
+    the logits to the host acceptance rule)."""
     x = L.embedding_apply(params["embed"], tokens[None], cfg)   # (1, N, d)
     pos2 = positions[None]
     if cfg.pos_embed == "learned":
@@ -158,32 +182,37 @@ def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
 
     blocks = params["blocks"]
     if isinstance(blocks, (list, tuple)):       # unrolled (mixed layer kinds)
-        ks, vs = [], []
+        ks, vs, telems = [], [], []
         for i, bp in enumerate(blocks):
-            x, kp, vp = _paged_block(
+            x, kp, vp, tl = _paged_block(
                 bp, x, cfg, moe_layer=_is_moe_layer(cfg, i), positions=pos2,
                 lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
                 kp=k_pools[i], vp=v_pools[i], ctx=ctx, mesh=mesh)
             ks.append(kp)
             vs.append(vp)
+            telems.append(tl)
         k_pools, v_pools = jnp.stack(ks), jnp.stack(vs)
+        telem = {k: jnp.stack([t[k] for t in telems]) for k in telems[0]}
     else:
         moe_layer = _is_moe_layer(cfg, 0)
 
         def body(h, scanned):
             bp, kp, vp = scanned
-            h, kp, vp = _paged_block(
+            h, kp, vp, tl = _paged_block(
                 bp, h, cfg, moe_layer=moe_layer, positions=pos2,
                 lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
                 kp=kp, vp=vp, ctx=ctx, mesh=mesh)
-            return h, (kp, vp)
+            return h, (kp, vp, tl)
 
-        x, (k_pools, v_pools) = jax.lax.scan(body, x, (blocks, k_pools, v_pools))
+        x, (k_pools, v_pools, telem) = jax.lax.scan(
+            body, x, (blocks, k_pools, v_pools))
+    if cfg.moe.num_experts == 0:
+        telem = {}      # dense model: nothing to report, nothing to ship
 
     x = L.norm_apply(params["final_norm"], x, cfg)
     unembed = params.get("unembed", params["embed"])
     logits = L.unembed_apply(unembed, x, cfg)[0].astype(jnp.float32)  # (N, V)
-    return logits, k_pools, v_pools
+    return logits, k_pools, v_pools, telem
 
 
 def _row_buffers(N: int, blocks_per_slot: int, garbage_block: int):
@@ -247,7 +276,8 @@ class ContinuousEngine:
                  *, temperature: float = 0.0, seed: int = 0,
                  rules: Optional[Rules] = None,
                  draft_model: Optional[Tuple] = None,
-                 check_invariants: bool = False):
+                 check_invariants: bool = False,
+                 obs: Optional[Observability] = None):
         if cfg.family in _PAGED_FAMILIES:
             self.mode = "paged"
             if cfg.attn_logit_softcap > 0:
@@ -273,6 +303,10 @@ class ContinuousEngine:
         self._key = jax.random.PRNGKey(seed)   # fixed base key; per-row folds
         self.steps = 0
         self.check_invariants = check_invariants
+        self.obs = obs if obs is not None else Observability()
+        self._moe_acc = None        # device-side telemetry accumulator
+        self._moe_rows = 0          # host row count backing the entropy mean
+        self._seen_variants = 0     # compiled-variant census (recompile det.)
 
         self.mesh = None
         self.data_shards = serve.data_shards
@@ -303,8 +337,6 @@ class ContinuousEngine:
 
         self.spec = serve.spec
         self.drafter = None
-        self.spec_stats = {"verify_steps": 0, "proposed": 0, "accepted": 0,
-                           "emitted": 0}
         if self.spec is not None:
             if self.mode != "paged":
                 raise NotImplementedError(
@@ -338,19 +370,19 @@ class ContinuousEngine:
                 self.cache = PagedKVCache(cfg, serve)
             self.scheduler = Scheduler(serve.max_slots, serve.max_len,
                                        self.cache, policy=serve.sched_policy,
-                                       slo=serve.slo)
+                                       slo=serve.slo, obs=self.obs)
             temp = self.temperature
             mesh = self.mesh
 
             def step_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
                         lengths, row_tables, wb, wo, slots, key):
                 with use_rules(rules):
-                    logits, k_pools, v_pools = _paged_logits(
+                    logits, k_pools, v_pools, telem = _paged_logits(
                         p, cfg, tokens, ctx_ids, positions, lengths,
                         row_tables, wb, wo, k_pools, v_pools, mesh=mesh)
                     tok = _sample_rows(logits, slots, positions,
                                        temperature=temp, key=key)
-                return tok, k_pools, v_pools
+                return tok, k_pools, v_pools, telem
 
             # Static shapes only: N = max_slots (decode-only),
             # N = max_slots + data_shards * prefill_chunk (mixed), and —
@@ -362,22 +394,27 @@ class ContinuousEngine:
             def verify_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
                           lengths, row_tables, wb, wo):
                 with use_rules(rules):
-                    logits, k_pools, v_pools = _paged_logits(
+                    logits, k_pools, v_pools, telem = _paged_logits(
                         p, cfg, tokens, ctx_ids, positions, lengths,
                         row_tables, wb, wo, k_pools, v_pools)
                 # greedy acceptance only compares token ids: ship N int32
                 # argmaxes, not the (N, V) logits matrix, to the host
                 if temp <= 0.0:
                     return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
-                            k_pools, v_pools)
-                return logits, k_pools, v_pools
+                            k_pools, v_pools, telem)
+                return logits, k_pools, v_pools, telem
 
             self._verify_fn = jax.jit(verify_fn, donate_argnums=(1, 2))
+            # the documented compiled census: {mixed, decode-only} for
+            # the step fn, plus the verify shape when speculating —
+            # anything beyond this is a recompile worth flagging
+            self._expected_variants = 3 if self.spec is not None else 2
         else:
             self.cache = None
             self.scheduler = Scheduler(serve.max_slots, serve.max_len, None,
                                        policy=serve.sched_policy,
-                                       slo=serve.slo)
+                                       slo=serve.slo, obs=self.obs)
+            self._expected_variants = 1         # one (max_slots, 1) shape
             self._state = self.fam.init_state(cfg, serve.max_slots, serve.max_len)
             temp = self.temperature
             serve_ctx = MoEContext(is_training=False)
@@ -399,6 +436,126 @@ class ContinuousEngine:
 
             self._step_fn = jax.jit(rec_step, donate_argnums=(1,))
             self._reset_fn = jax.jit(reset_slot, donate_argnums=(0,))
+
+    # -- observability ------------------------------------------------------
+
+    @property
+    def spec_stats(self) -> Dict[str, int]:
+        """Legacy dict view over the speculative-decoding counters."""
+        m = self.obs.metrics
+        return {"verify_steps": int(m.get("spec_verify_steps_total")),
+                "proposed": int(m.get("spec_proposed_total")),
+                "accepted": int(m.get("spec_accepted_total")),
+                "emitted": int(m.get("spec_emitted_total"))}
+
+    def compiled_variants(self) -> int:
+        """Jit-cache entry count for the engine's step functions — the
+        compiled-shape census the recompile detector watches."""
+        n = 0
+        for fn in (getattr(self, "_step_fn", None),
+                   getattr(self, "_verify_fn", None)
+                   if self.spec is not None else None):
+            size = getattr(fn, "_cache_size", None)
+            if size is not None:
+                n += int(size())
+        return n
+
+    def _obs_step(self, kind: str, live_rows: int, total_rows: int) -> None:
+        """Per-step registry publication: step/row counters, queue and
+        pool gauges, prefix-cache counter mirror, recompile check."""
+        m = self.obs.metrics
+        sched = self.scheduler
+        m.counter("engine_steps_total", kind=kind).inc()
+        m.counter("engine_rows_total", state="live").inc(live_rows)
+        m.counter("engine_rows_total",
+                  state="padded").inc(total_rows - live_rows)
+        m.gauge("queue_depth").set(len(sched.waiting))
+        m.gauge("running_slots").set(len(sched.running))
+        m.gauge("serve_peak_running").set_max(len(sched.running))
+        if self.cache is not None:
+            for d, occ in enumerate(self.cache.occupancy()):
+                for state in ("free", "live", "cached"):
+                    m.gauge("kv_blocks", state=state, shard=d).set(occ[state])
+                m.gauge("kv_reserved_blocks", shard=d).set(occ["reserved"])
+            if self.serve.prefix_cache:
+                for k, v in self.cache.stats.items():
+                    m.counter(f"prefix_{k}_total").set_to(v)
+        n = self.compiled_variants()
+        if n != self._seen_variants:
+            m.gauge("engine_compiled_variants").set(n)
+            if n > self._expected_variants:
+                m.counter("engine_recompiles_total").inc(
+                    n - max(self._seen_variants, self._expected_variants))
+                self.obs.tracer.instant("recompile", variants=n,
+                                        expected=self._expected_variants)
+            self._seen_variants = n
+        self.obs.maybe_metrics_row(self.steps)
+
+    # -- MoE routing telemetry ----------------------------------------------
+    # Device-side accumulation (four tiny adds per step, no sync); the
+    # host pull happens once per run() — or at a metrics-JSONL flush —
+    # via _moe_pull().
+
+    def _moe_reset(self) -> None:
+        self._moe_acc = None
+        self._moe_rows = 0
+
+    def _moe_accum(self, telem, rows: int) -> None:
+        if not telem:
+            return
+        add = {"expert_tokens": telem["expert_tokens"],          # (L, E)
+               "gate_entropy": telem["gate_entropy"] * float(rows),  # (L,)
+               "dropped": telem["dropped"],                      # (L,)
+               "routed_choices": telem["routed_choices"]}        # (L,)
+        if self._moe_acc is None:
+            self._moe_acc = add
+        else:
+            self._moe_acc = jax.tree_util.tree_map(
+                jnp.add, self._moe_acc, add)
+        self._moe_rows += rows
+
+    def _moe_pull(self) -> Dict[str, float]:
+        """Host pull of the accumulated routing telemetry: publish the
+        per-layer gauges and return the run-level scalar stats."""
+        if self._moe_acc is None:
+            return {}
+        from repro.core.metrics import load_entropy
+
+        acc = jax.device_get(self._moe_acc)
+        tok = np.asarray(acc["expert_tokens"], np.float64)      # (L, E)
+        ent = np.asarray(acc["gate_entropy"], np.float64)       # (L,)
+        drop = np.asarray(acc["dropped"], np.float64)           # (L,)
+        choices = np.asarray(acc["routed_choices"], np.float64)  # (L,)
+        rows = max(self._moe_rows, 1)
+        m = self.obs.metrics
+        for layer in range(tok.shape[0]):
+            if choices[layer] <= 0:
+                continue                    # dense layer (or never ran)
+            tot = tok[layer].sum()
+            for e in range(tok.shape[1]):
+                m.gauge("moe_expert_load_share", layer=layer, expert=e).set(
+                    tok[layer, e] / max(tot, 1.0))
+            m.gauge("moe_load_entropy", layer=layer).set(
+                load_entropy(tok[layer]))
+            m.gauge("moe_gate_entropy", layer=layer).set(ent[layer] / rows)
+            m.gauge("moe_dropped_fraction", layer=layer).set(
+                drop[layer] / choices[layer])
+        total_choices = choices.sum()
+        moe_layers = choices > 0
+        loads = tok[moe_layers].sum(axis=0)
+        mean = loads.mean() if loads.size else 0.0
+        stats = {
+            # exact 0.0 on dropless paths: drop is a sum of exact zeros
+            "moe_dropped_fraction": float(
+                drop.sum() / max(total_choices, 1.0)),
+            "moe_gate_entropy": float(
+                ent[moe_layers].mean() / rows) if moe_layers.any() else 0.0,
+            "moe_load_entropy": float(load_entropy(loads)),
+            "moe_load_cv": float(loads.std() / (mean + 1e-9)),
+        }
+        m.gauge("moe_dropped_fraction_overall").set(
+            stats["moe_dropped_fraction"])
+        return stats
 
     # -- one engine step ----------------------------------------------------
 
@@ -481,19 +638,29 @@ class ContinuousEngine:
                 if p == pre.request.prompt_len - 1 and not pre.generated:
                     sample_rows.append((row, pre))
 
-        next_tok, k_pools, v_pools = self._step_fn(
-            self.params, cache.k_pool, cache.v_pool, b["tokens"],
-            b["ctx_ids"], b["positions"], b["lengths"], b["row_tables"],
-            b["wb"], b["wo"], b["slots"], self._key)
-        cache.update_pools(k_pools, v_pools)
+        kind = "mixed" if pre is not None else "decode"
+        live = len(sample_rows) + (chunk if pre is not None else 0)
+        if pre is not None and any(st is pre for _, st in sample_rows):
+            live -= 1       # pre's sample row is one of its chunk rows
+        with self.obs.tracer.span("engine_step", kind=kind, step=self.steps,
+                                  rows=N, live_rows=live):
+            next_tok, k_pools, v_pools, telem = self._step_fn(
+                self.params, cache.k_pool, cache.v_pool, b["tokens"],
+                b["ctx_ids"], b["positions"], b["lengths"], b["row_tables"],
+                b["wb"], b["wo"], b["slots"], self._key)
+            cache.update_pools(k_pools, v_pools)
+        self._moe_accum(telem, N)
 
         if pre is not None:
             pre.prefill_pos += chunk
             if pre.prefill_pos == target:
                 pre.status = Status.DECODE
+                self.obs.request_phase(pre.request.uid, "decode",
+                                       slot=pre.slot)
         finished = self._collect_samples(np.asarray(next_tok), sample_rows,
                                          clock_ms)
         self._commit_running()
+        self._obs_step(kind, live, N)
         return finished
 
     def _commit_running(self) -> None:
@@ -561,11 +728,15 @@ class ContinuousEngine:
                 _fill_row(b, cache, slot * W + j, slot, row_toks[j], c + j)
             per_slot[slot] = (st, d, c)
 
-        scores, k_pools, v_pools = self._verify_fn(
-            self.params, cache.k_pool, cache.v_pool, b["tokens"],
-            b["ctx_ids"], b["positions"], b["lengths"], b["row_tables"],
-            b["wb"], b["wo"])
-        cache.update_pools(k_pools, v_pools)
+        live = sum(int(d.size) + 1 for _, d, _ in per_slot.values())
+        with self.obs.tracer.span("engine_step", kind="verify",
+                                  step=self.steps, rows=N, live_rows=live):
+            scores, k_pools, v_pools, telem = self._verify_fn(
+                self.params, cache.k_pool, cache.v_pool, b["tokens"],
+                b["ctx_ids"], b["positions"], b["lengths"], b["row_tables"],
+                b["wb"], b["wo"])
+            cache.update_pools(k_pools, v_pools)
+        self._moe_accum(telem, N)
         scores = np.asarray(scores)     # (N,) argmax ids | (N, V) logits
 
         finished = []
@@ -584,14 +755,15 @@ class ContinuousEngine:
             if eos is not None and eos in emitted:
                 emitted = emitted[:emitted.index(eos) + 1]
             assert emitted, "verify step must emit at least the bonus token"
-            self.spec_stats["proposed"] += g
+            m = self.obs.metrics
+            m.counter("spec_proposed_total").inc(g)
             # accepted = draft tokens actually *used*: the EOS/budget cut
             # can discard accepted drafts, which must not inflate the rate
-            self.spec_stats["accepted"] += min(len(emitted), n_acc)
+            m.counter("spec_accepted_total").inc(min(len(emitted), n_acc))
             st.generated.extend(int(t) for t in emitted)
             if st.first_token_ms is None:
                 st.first_token_ms = clock_ms
-            self.spec_stats["emitted"] += len(emitted)
+            m.counter("spec_emitted_total").inc(len(emitted))
             if st.done():
                 self.scheduler.finish(st, clock_ms)
                 finished.append(st)
@@ -601,8 +773,9 @@ class ContinuousEngine:
                 # every kept row IS the fed-back token); rejected rows
                 # beyond rewind, their spill blocks return to the pool
                 cache.truncate_slot(slot, c + len(emitted))
-        self.spec_stats["verify_steps"] += 1
+        self.obs.metrics.counter("spec_verify_steps_total").inc()
         self._commit_running()
+        self._obs_step("verify", live, N)
         return finished
 
     def _recurrent_host_step(self, clock_ms: float) -> List[RequestState]:
@@ -623,12 +796,17 @@ class ContinuousEngine:
                 tokens[slot, 0] = st.last_token
                 sample_rows.append((slot, st))
 
-        next_tok, self._state = self._step_fn(self.params, self._state,
-                                              tokens, positions, self._key)
+        live = len(self.scheduler.running)
+        with self.obs.tracer.span("engine_step", kind="decode",
+                                  step=self.steps, rows=S, live_rows=live):
+            next_tok, self._state = self._step_fn(self.params, self._state,
+                                                  tokens, positions, self._key)
         for st in prefill_advanced:
             st.prefill_pos += 1
             if st.prefill_pos == st.request.prompt_len:
                 st.status = Status.DECODE
+                self.obs.request_phase(st.request.uid, "decode", slot=st.slot)
+        self._obs_step("decode", live, S)
         return self._collect_samples(np.asarray(next_tok), sample_rows, clock_ms)
 
     def _collect_samples(self, next_tok: np.ndarray, sample_rows, clock_ms: float
@@ -651,19 +829,19 @@ class ContinuousEngine:
         """Serve a trace to completion.  The clock is wall time since the
         call, fast-forwarded over idle gaps to the next arrival (so a
         sparse trace doesn't busy-wait); request latency = finish - arrival
-        on that clock.  Returns ({uid: generated tokens}, stats)."""
+        on that clock.  Returns ({uid: generated tokens}, stats) —
+        every counter-derived stat is a registry delta over this run
+        (``repro.obs``), not a hand-kept snapshot."""
+        m = self.obs.metrics
         for r in requests:
             self.scheduler.add(r)
         t0 = time.perf_counter()
-        steps0 = self.steps
-        spec0 = dict(self.spec_stats)
+        mark = m.mark()
+        m.gauge("serve_peak_running").set(0.0)
+        self._moe_reset()
         sched = self.scheduler
-        pre0 = (sched.preemptions, sched.restore_tokens,
-                sched.recompute_tokens)
-        swap0 = dict(sched.swap.stats) if sched.swap is not None else None
         clock = 0.0
         done: List[RequestState] = []
-        peak_running = 0
         while self.scheduler.has_work():
             clock = max(clock, (time.perf_counter() - t0) * 1e3)
             if not self.scheduler.running:
@@ -671,8 +849,9 @@ class ContinuousEngine:
                 if nxt is not None and nxt > clock:
                     clock = nxt                      # idle: jump to next arrival
             finished = self.step(clock)
-            peak_running = max(peak_running,
-                               len(self.scheduler.running) + len(finished))
+            # finished requests were still running when the step began
+            m.gauge("serve_peak_running").set_max(
+                len(self.scheduler.running) + len(finished))
             for st in finished:
                 done.append(st)
                 if on_finish is not None:
@@ -684,34 +863,35 @@ class ContinuousEngine:
 
         stats = latency_stats([st.latency_ms() for st in done], total_ms,
                               sum(len(st.generated) for st in done))
-        stats["steps"] = float(self.steps - steps0)
-        stats["peak_running"] = float(peak_running)
+        stats["steps"] = m.delta(mark, "engine_steps_total")
+        stats["peak_running"] = m.get("serve_peak_running")
         # per-class percentiles + goodput: global p50/p95 hide exactly
         # the targeted degradation SLO scheduling is for
         stats.update(slo_class_stats(done))
         if sched.swap is not None:
-            stats["preemptions"] = float(sched.preemptions - pre0[0])
-            stats["restore_tokens"] = float(sched.restore_tokens - pre0[1])
-            stats["recompute_tokens"] = float(sched.recompute_tokens - pre0[2])
-            stats["swapped_blocks"] = float(
-                sched.swap.stats["swapped_blocks"] - swap0["swapped_blocks"])
-            stats["restored_blocks"] = float(
-                sched.swap.stats["restored_blocks"] - swap0["restored_blocks"])
+            stats["preemptions"] = m.delta(mark, "sched_preemptions_total")
+            stats["restore_tokens"] = m.delta(mark,
+                                              "sched_restore_tokens_total")
+            stats["recompute_tokens"] = m.delta(
+                mark, "sched_recompute_tokens_total")
+            stats["swapped_blocks"] = m.delta(mark,
+                                              "swap_swapped_blocks_total")
+            stats["restored_blocks"] = m.delta(mark,
+                                               "swap_restored_blocks_total")
         if self.serve.prefix_cache:
-            cached = sum(st.cached_tokens for st in done)
-            prompt = sum(st.request.prompt_len for st in done)
-            stats["cached_tokens"] = float(cached)
-            stats["prompt_tokens"] = float(prompt)
+            cached = m.delta(mark, "prefix_cached_tokens_total")
+            prompt = m.delta(mark, "prefix_prompt_tokens_total")
+            stats["cached_tokens"] = cached
+            stats["prompt_tokens"] = prompt
             stats["cached_token_ratio"] = cached / max(prompt, 1)
         if self.spec is not None:
-            proposed = self.spec_stats["proposed"] - spec0["proposed"]
-            vsteps = self.spec_stats["verify_steps"] - spec0["verify_steps"]
+            proposed = m.delta(mark, "spec_proposed_total")
+            vsteps = m.delta(mark, "spec_verify_steps_total")
             stats["acceptance_rate"] = (
-                (self.spec_stats["accepted"] - spec0["accepted"])
-                / max(proposed, 1))
+                m.delta(mark, "spec_accepted_total") / max(proposed, 1))
             stats["spec_tokens_per_step"] = (
-                (self.spec_stats["emitted"] - spec0["emitted"])
-                / max(vsteps, 1))
+                m.delta(mark, "spec_emitted_total") / max(vsteps, 1))
+        stats.update(self._moe_pull())
         return {st.request.uid: list(st.generated) for st in done}, stats
 
     def generate(self, prompts: jax.Array, num_tokens: int, seed: int = 0):

@@ -303,6 +303,20 @@ class PagedKVCache:
         self.k_pool = k_pool
         self.v_pool = v_pool
 
+    def occupancy(self) -> list:
+        """Per-shard block occupancy for the metrics registry: one dict
+        per shard with ``free``/``live``/``cached``/``reserved`` block
+        counts.  ``cached`` is the refcounted prefix allocator's
+        cached-LRU population (0 for the plain allocator)."""
+        a = self.allocator
+        return [{
+            "free": a.free_count,
+            "live": (getattr(a, "allocated_count", 0)
+                     + getattr(a, "live_count", 0)),
+            "cached": getattr(a, "cached_count", 0),
+            "reserved": self.reserved_total,
+        }]
+
 
 class ShardedPagedKVCache:
     """D per-shard caches behind the single-cache interface.
@@ -447,6 +461,10 @@ class ShardedPagedKVCache:
             for k, v in s.stats.items():
                 totals[k] = totals.get(k, 0) + v
         return totals
+
+    def occupancy(self) -> list:
+        """Per-shard occupancy — one entry per private allocator."""
+        return [d for s in self.shards for d in s.occupancy()]
 
     # -- preemption swap hooks: unsupported under data sharding --------------
 

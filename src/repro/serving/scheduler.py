@@ -155,24 +155,46 @@ class Scheduler:
     def __init__(self, max_slots: int, max_len: int,
                  kv_cache: Optional[PagedKVCache] = None,
                  policy: str = "fcfs",
-                 slo: Optional[SLOConfig] = None):
+                 slo: Optional[SLOConfig] = None,
+                 obs=None):
         self.max_slots = max_slots
         self.max_len = max_len
         self.kv_cache = kv_cache
         self.policy = get_policy(policy)
         self.slo = slo
+        if obs is None:
+            from repro.obs import Observability
+
+            obs = Observability()          # standalone use (tests)
+        self.obs = obs
         self.swap = None
         if slo is not None and slo.preemption and kv_cache is not None:
             from repro.serving.slo.swap import SwapManager
 
-            self.swap = SwapManager(kv_cache, host_blocks=slo.host_blocks)
+            self.swap = SwapManager(kv_cache, host_blocks=slo.host_blocks,
+                                    metrics=obs.metrics)
         self.waiting: List[RequestState] = []
         self.running: Dict[int, RequestState] = {}     # slot -> state
         self.free_slots: List[int] = list(range(max_slots - 1, -1, -1))
         self._admit_seq = 0                            # admission-order tiebreaker
-        self.preemptions = 0                           # swap-out count
-        self.restore_tokens = 0                        # context resumed from KV
-        self.recompute_tokens = 0                      # context re-prefilled
+
+    # Legacy int attributes, now views over the registry (the engine's
+    # run() reads the same counters through mark()/delta()).
+
+    @property
+    def preemptions(self) -> int:
+        """Swap-out count."""
+        return int(self.obs.metrics.get("sched_preemptions_total"))
+
+    @property
+    def restore_tokens(self) -> int:
+        """Context resumed from swapped/re-bound KV."""
+        return int(self.obs.metrics.get("sched_restore_tokens_total"))
+
+    @property
+    def recompute_tokens(self) -> int:
+        """Context re-prefilled after a restore hole."""
+        return int(self.obs.metrics.get("sched_recompute_tokens_total"))
 
     # -- intake -------------------------------------------------------------
 
@@ -193,6 +215,9 @@ class Scheduler:
                     f"{self.kv_cache.max_request_blocks}")
         st = RequestState(request)
         self.waiting.append(st)
+        self.obs.metrics.counter("sched_requests_total").inc()
+        self.obs.request_arrived(request.uid, prompt_len=request.prompt_len,
+                                 max_new_tokens=request.max_new_tokens)
         return st
 
     # -- admission ----------------------------------------------------------
@@ -253,8 +278,13 @@ class Scheduler:
                 if self.kv_cache is not None:
                     resume = self.kv_cache.restore_slot(slot, rec, self.swap)
                     self.swap.release(rec)
-                    self.restore_tokens += resume
-                    self.recompute_tokens += rec.context_len - resume
+                    m = self.obs.metrics
+                    m.counter("sched_restore_tokens_total").inc(resume)
+                    m.counter("sched_recompute_tokens_total").inc(
+                        rec.context_len - resume)
+                    self.obs.tracer.instant(
+                        "restore", uid=st.request.uid, restored=resume,
+                        recomputed=rec.context_len - resume)
                 st.prefill_pos = resume
                 st.status = (Status.DECODE if resume >= st.prefill_target
                              else Status.PREFILL)
@@ -273,6 +303,12 @@ class Scheduler:
             st.admit_seq = self._admit_seq
             self._admit_seq += 1
             self.running[slot] = st
+            self.obs.metrics.histogram("request_queue_ms").observe(
+                max(clock_ms - st.request.arrival_ms, 0.0))
+            self.obs.request_phase(
+                st.request.uid,
+                "decode" if st.status is Status.DECODE else "prefill",
+                slot=slot)
             admitted.append(st)
         return admitted
 
@@ -296,6 +332,15 @@ class Scheduler:
         # records collect the states step()/finish() hand back
         st.status = Status.FINISHED
         st.finished_ms = clock_ms
+        m = self.obs.metrics
+        m.counter("sched_finished_total").inc()
+        m.counter("generated_tokens_total").inc(len(st.generated))
+        # final (post-restore) per-request values, so the registry sums
+        # match the old sum-over-done-states prefix accounting exactly
+        m.counter("prefix_cached_tokens_total").inc(st.cached_tokens)
+        m.counter("prefix_prompt_tokens_total").inc(st.request.prompt_len)
+        m.histogram("request_latency_ms").observe(st.latency_ms())
+        self.obs.request_finished(st.request.uid)
 
     # -- preemption (repro.serving.slo) --------------------------------------
 
@@ -320,7 +365,10 @@ class Scheduler:
         st.slot = -1
         st.status = Status.PREEMPTED
         st.preemptions += 1
-        self.preemptions += 1
+        self.obs.metrics.counter("sched_preemptions_total").inc()
+        self.obs.tracer.instant("preempt", uid=st.request.uid, slot=slot,
+                                context_len=ctx)
+        self.obs.request_phase(st.request.uid, "preempted")
         keys = [(w.request.arrival_ms, w.request.uid) for w in self.waiting]
         self.waiting.insert(
             bisect.bisect_left(keys, (st.request.arrival_ms, st.request.uid)),

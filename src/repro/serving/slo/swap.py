@@ -67,7 +67,8 @@ class SwapManager:
     ``(host_blocks, num_layers, Hkv, block_size, head_dim)``, so one
     record's blocks copy as a single fancy-index slice each way."""
 
-    def __init__(self, cache: PagedKVCache, host_blocks: Optional[int] = None):
+    def __init__(self, cache: PagedKVCache, host_blocks: Optional[int] = None,
+                 metrics=None):
         self.host_blocks = int(host_blocks) if host_blocks else cache.num_blocks
         layers, _, hkv, bs, hd = cache.k_pool.shape
         dtype = np.dtype(cache.k_pool.dtype)      # bf16 via ml_dtypes
@@ -76,9 +77,21 @@ class SwapManager:
         self._v_host = np.zeros(shape, dtype)
         self.allocator = BlockAllocator(self.host_blocks)
         self.records: Dict[int, SwapRecord] = {}  # uid -> live record
-        self.stats = {"swap_outs": 0, "swap_ins": 0,
-                      "swapped_blocks": 0, "restored_blocks": 0}
+        if metrics is None:
+            from repro.obs import MetricsRegistry
+
+            metrics = MetricsRegistry()    # standalone use (tests, tools)
+        self.metrics = metrics
         self._prewarm(cache)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Legacy dict view over the registry counters."""
+        m = self.metrics
+        return {"swap_outs": int(m.get("swap_outs_total")),
+                "swap_ins": int(m.get("swap_ins_total")),
+                "swapped_blocks": int(m.get("swap_swapped_blocks_total")),
+                "restored_blocks": int(m.get("swap_restored_blocks_total"))}
 
     @staticmethod
     def _pad_width(cache: PagedKVCache) -> int:
@@ -139,8 +152,8 @@ class SwapManager:
                          skip=skip, hashes=list(hashes),
                          host_of=dict(zip(copy_ks, host_ids)))
         self.records[uid] = rec
-        self.stats["swap_outs"] += 1
-        self.stats["swapped_blocks"] += len(copy_ks)
+        self.metrics.counter("swap_outs_total").inc()
+        self.metrics.counter("swap_swapped_blocks_total").inc(len(copy_ks))
         return rec
 
     # -- host -> device ------------------------------------------------------
@@ -163,8 +176,8 @@ class SwapManager:
         v = jnp.asarray(np.moveaxis(self._v_host[host_ids], 0, 1))
         cache.k_pool = cache.k_pool.at[:, dev_ids].set(k)
         cache.v_pool = cache.v_pool.at[:, dev_ids].set(v)
-        self.stats["swap_ins"] += 1
-        self.stats["restored_blocks"] += n
+        self.metrics.counter("swap_ins_total").inc()
+        self.metrics.counter("swap_restored_blocks_total").inc(n)
 
     def release(self, rec: SwapRecord) -> None:
         """Return the record's host blocks (after restore, or when the

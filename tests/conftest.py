@@ -28,7 +28,12 @@ def run_sub():
         env = dict(os.environ)
         env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-        env.pop("JAX_PLATFORMS", None)
+        # Pin the backend rather than popping it: the forced host device
+        # count composes with JAX_PLATFORMS=cpu, and an unset backend
+        # makes the subprocess re-discover accelerators — on hosts with
+        # libtpu installed but no TPU that stalls for minutes behind the
+        # TPU plugin's /tmp lockfile before falling back to CPU.
+        env["JAX_PLATFORMS"] = "cpu"
         out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                              capture_output=True, text=True, env=env,
                              timeout=timeout)
