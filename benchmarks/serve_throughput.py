@@ -26,11 +26,17 @@ The mesh sweep serves one mixed trace on 1 vs 8 virtual devices
 meshes, dropless throughout) and asserts token identity across every
 cell — mesh sharding must be invisible in outputs.
 
+The KV-quantization sweep serves the same trace with the KV cache at
+none / int8 / fp8 (greedy token-match rate + max logit divergence per
+cell), then re-serves a block-starved trace on pools sized to one
+fixed byte budget — the capacity int8 quantization buys.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py
   -> experiments/BENCH_serve_throughput.json
   -> experiments/BENCH_spec_decode.json
   -> experiments/BENCH_prefix_cache.json
   -> experiments/BENCH_slo_sched.json
+  -> experiments/BENCH_kv_quant.json
   -> experiments/BENCH_mesh_serve.json   (re-execs itself with 8
      virtual devices when the parent owns fewer; --mesh-sweep runs it alone)
 """
@@ -284,6 +290,135 @@ def slo_sweep(cfg, params):
     return results
 
 
+def _token_match(ref, got):
+    """Fraction of greedy tokens identical to the baseline, per position
+    per request (missing/extra positions count as mismatches)."""
+    tot = hit = 0
+    for uid in ref:
+        a, b = ref[uid], got.get(uid, [])
+        tot += max(len(a), len(b))
+        hit += sum(1 for x, y in zip(a, b) if x == y)
+    return hit / max(tot, 1)
+
+
+def quant_sweep(cfg, params):
+    """KV-cache quantization none / int8 / fp8 (repro.quant) on one
+    saturated mixed-length trace, answering two questions.
+
+    Fidelity: what does storing K/V as int8 codes + per-block scales
+    cost in outputs?  Each cell records tokens/s and the greedy
+    token-match rate against the f32 baseline, plus the maximum
+    per-row logit divergence measured on a single-request replay
+    through the engine's ``logit_tap`` (rows matched by (slot,
+    position); padding rows excluded).
+
+    Capacity: what do the saved bytes buy?  The capacity cell re-serves
+    a block-starved trace on pools sized to one fixed device byte
+    budget — int8 codes + scales pack ~3.9x the blocks of f32 into the
+    same bytes, so block reservations stop gating admission and peak
+    concurrency rises (>= 1.3x asserted) while greedy outputs stay
+    >= 98% token-identical (asserted; dropless dispatch keeps routing
+    batch-composition-invariant, so the only divergence source is
+    quantization error itself).  Every cell re-asserts conservation
+    after every step, including the code-pool/scale-pool bijection
+    (``check_invariants=True``)."""
+    cfg = cfg.replace_moe(impl="dropless", capacity_factor=None)
+    requests = synthetic_trace(16, cfg.vocab_size, **TRACE_KW)
+    serve = ServeConfig(max_slots=MAX_SLOTS, kv_block_size=16,
+                        prefill_chunk=16,
+                        max_len=max(r.total_len for r in requests))
+
+    results = {"trace": {
+        "num_requests": len(requests),
+        "prompt_lens": [r.prompt_len for r in requests],
+        "gen_lens": [r.max_new_tokens for r in requests],
+    }}
+    outs = {}
+    for name in ("none", "int8", "fp8"):
+        sv = dataclasses.replace(serve, kv_quant=name)
+        eng = ContinuousEngine(cfg, params, sv, check_invariants=True)
+        eng.run(requests)                       # warmup/compile
+        outs[name], results[name] = eng.run(requests)
+        occ = eng.cache.occupancy()[0]
+        results[name]["block_bytes"] = occ["block_bytes"]
+        results[name]["kv_pool_bytes"] = (occ["block_bytes"]
+                                          * eng.cache.num_blocks)
+        eng.cache.check_conservation()
+    results["metrics"] = eng.obs.metrics.snapshot()
+
+    # -- logit divergence: single-request greedy replay under the tap ------
+    probe = synthetic_trace(1, cfg.vocab_size, seed=3, qps=1e6,
+                            prompt_lens=(24, 24), gen_lens=(64, 64))
+
+    def replay(name):
+        rows = {}
+
+        def tap(lg, slots, pos, lens):
+            for i, ln in enumerate(lens):
+                if ln > 0:                      # length 0 = padding row
+                    rows[int(slots[i]), int(pos[i])] = np.array(lg[i])
+
+        sv = dataclasses.replace(serve, max_slots=1, kv_quant=name,
+                                 max_len=max(r.total_len for r in probe))
+        eng = ContinuousEngine(cfg, params, sv, logit_tap=tap)
+        return eng.run(probe)[0], rows
+
+    base_out, base_rows = replay("none")
+    results["none"]["token_match_rate"] = 1.0
+    results["none"]["max_logit_divergence"] = 0.0
+    for name in ("int8", "fp8"):
+        out, rows = replay(name)
+        common = base_rows.keys() & rows.keys()
+        results[name]["max_logit_divergence"] = max(
+            float(np.abs(rows[k] - base_rows[k]).max()) for k in common)
+        results[name]["logit_rows_compared"] = len(common)
+        results[name]["token_match_rate"] = _token_match(outs["none"],
+                                                         outs[name])
+        results[name]["tokens_per_s_vs_none"] = (
+            results[name]["generated_tokens_per_s"]
+            / results["none"]["generated_tokens_per_s"])
+
+    # -- capacity at one fixed device byte budget ---------------------------
+    # shorter generations than TRACE_KW: a 3-block worst-case footprint
+    # lets the block-rich int8 pool actually run many requests at once
+    # instead of queueing on slots
+    cap_kw = dict(seed=0, qps=1e6, prompt_lens=(8, 16), gen_lens=(16, 24))
+    cap_req = synthetic_trace(24, cfg.vocab_size, **cap_kw)
+    bs = 16
+    per_entry = cfg.num_kv_heads * bs * cfg.resolved_head_dim
+    bbytes = {"none": 2 * cfg.num_layers * per_entry * 4,
+              "int8": 2 * cfg.num_layers * (per_entry
+                                            + 4 * cfg.num_kv_heads)}
+    budget = 8 * bbytes["none"]                 # an 8-f32-block pool
+    cap = {"trace": {"num_requests": len(cap_req), **cap_kw,
+                     "budget_bytes": budget}}
+    cap_outs = {}
+    for name in ("none", "int8"):
+        nblocks = budget // bbytes[name]
+        sv = ServeConfig(max_slots=8, kv_block_size=bs, prefill_chunk=16,
+                         num_blocks=nblocks, kv_quant=name,
+                         max_len=max(r.total_len for r in cap_req))
+        eng = ContinuousEngine(cfg, params, sv, check_invariants=True)
+        assert eng.cache.block_bytes == bbytes[name], "budget math drifted"
+        eng.run(cap_req)                        # warmup/compile
+        cap_outs[name], cap[name] = eng.run(cap_req)
+        cap[name]["num_blocks"] = nblocks
+        cap[name]["kv_pool_bytes"] = nblocks * bbytes[name]
+        eng.cache.check_conservation()
+    cap["int8"]["token_match_rate"] = _token_match(cap_outs["none"],
+                                                   cap_outs["int8"])
+    cap["peak_running_multiplier"] = (
+        cap["int8"]["peak_running"] / max(cap["none"]["peak_running"], 1e-9))
+    assert cap["peak_running_multiplier"] >= 1.3, (
+        f"equal-byte int8 pool should lift peak concurrency "
+        f"({cap['peak_running_multiplier']:.2f}x)")
+    assert cap["int8"]["token_match_rate"] >= 0.98, (
+        f"int8 capacity cell drifted from f32 outputs "
+        f"({cap['int8']['token_match_rate']:.3f} match)")
+    results["capacity"] = cap
+    return results
+
+
 def mesh_sweep(cfg, params):
     """Single-device vs mesh-sharded serving on one mixed-length trace:
     the trivial 1x1 mesh, a (data 2, expert 4) mesh and a pure-data
@@ -442,6 +577,25 @@ def main():
     print(f"high-class p95: fcfs/priority_strict = "
           f"{sres['high_p95_ratio_fcfs_over_strict']:.2f}x")
     path = save_result("BENCH_slo_sched", sres)
+    print("wrote", path)
+
+    # -- KV-quantization sweep (fidelity + equal-byte capacity) ------------
+    qres = quant_sweep(cfg, params)
+    for name in ("none", "int8", "fp8"):
+        c = qres[name]
+        extra = ""
+        if name != "none":
+            extra = (f", match {c['token_match_rate']:.1%}, "
+                     f"max logit drift {c['max_logit_divergence']:.3g}")
+        print(f"quant[{name}]: {c['generated_tokens_per_s']:.1f} tok/s, "
+              f"{c['block_bytes']} B/block{extra}")
+    qc = qres["capacity"]
+    print(f"quant capacity: {qc['int8']['num_blocks']} int8 vs "
+          f"{qc['none']['num_blocks']} f32 blocks in "
+          f"{qc['trace']['budget_bytes']} B -> "
+          f"{qc['peak_running_multiplier']:.2f}x peak running, "
+          f"match {qc['int8']['token_match_rate']:.1%}")
+    path = save_result("BENCH_kv_quant", qres)
     print("wrote", path)
 
     # -- mesh-sharded serving sweep (needs 8 virtual devices) --------------

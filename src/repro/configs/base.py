@@ -255,6 +255,13 @@ class SLOConfig:
     # requests out of their slots costs more throughput than the queue
     # reordering buys.
     preempt_threshold: int = 0
+    # Deadline-aware admission shedding: reject (finish with status
+    # "shed", counted in requests_shed_total) queued requests whose
+    # effective_deadline_ms is provably unmeetable given their prefill
+    # length and the measured decode ms/token.  Off by default — a shed
+    # request gets *no* tokens, so the gate must be an explicit opt-in
+    # (--slo-shed).  Requests without a deadline are never shed.
+    shed: bool = False
 
     def __post_init__(self):
         if self.host_blocks is not None and self.host_blocks < 1:
@@ -296,6 +303,12 @@ class ServeConfig:
     # (repro.serving.slo).  None => no preemption; priorities and
     # deadlines still order admission under the slo policies.
     slo: Optional[SLOConfig] = None
+    # KV-cache quantization: a key into the repro.quant policy registry
+    # ("none" | "int8" | "fp8").  Quantized pools store int8 codes plus
+    # per-(layer, block, kv_head) float32 absmax scales; decode
+    # attention dequantizes in-kernel.  "none" keeps the full-precision
+    # pools bitwise identical to the pre-quant engine.
+    kv_quant: str = "none"
     # Serving device mesh as ((axis, size), ...) — must name exactly
     # ("data", "expert"), in that order; size-1 axes are allowed.  Slots
     # and KV block pools partition over "data" (contiguous slot ranges,
@@ -329,6 +342,9 @@ class ServeConfig:
         from repro.serving.scheduler import get_policy
 
         get_policy(self.sched_policy)   # raises with the registry key list
+        from repro.quant import get_kv_quant
+
+        get_kv_quant(self.kv_quant)     # likewise for KV quantization
 
     @property
     def data_shards(self) -> int:

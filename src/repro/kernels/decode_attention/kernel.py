@@ -174,3 +174,94 @@ def paged_decode_attention_kernel(q, k_pool, v_pool, block_tables, lengths, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# Quantized paged variant: int8 code pools + per-(block, head) f32 scales
+# ---------------------------------------------------------------------------
+
+def _quant_paged_kernel(tbl_ref, len_ref, q_ref, k_ref, ks_ref, v_ref,
+                        vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        scale, bs, n_b, decode):
+    """``_paged_kernel`` with in-register dequant: the K/V tiles arrive
+    as int8 codes (half the HBM->VMEM bytes of bf16 — the decode
+    bandwidth win), their (1, 1) scale blocks ride the same
+    ``tbl[i, b]`` index map, and ``value = decode(code) * scale`` is
+    materialised in VMEM registers inside the online-softmax loop —
+    never written back anywhere."""
+    i = pl.program_id(0)
+    b = pl.program_id(2)
+
+    @pl.when(b == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[i]
+    @pl.when(b * bs < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = decode(k_ref[0, 0]) * ks_ref[0, 0]               # (bs, D) f32
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bs)
+        cols = b * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        v = decode(v_ref[0, 0]) * vs_ref[0, 0]               # (bs, D) f32
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(b == n_b - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def quantized_paged_decode_attention_kernel(q, k_pool, v_pool, k_scales,
+                                            v_scales, block_tables, lengths,
+                                            *, decode,
+                                            interpret: bool = False):
+    """q: (N, Hkv, G, D); k_pool/v_pool: (P, Hkv, bs, D) int8 codes;
+    k_scales/v_scales: (P, Hkv) float32; block_tables: (N, MB) int32;
+    lengths: (N,) int32; decode: the policy's code -> f32 map (must be
+    Pallas-traceable — the built-ins are astype / bitcast).
+    Returns (N, Hkv, G, D)."""
+    N, Hkv, G, D = q.shape
+    _, _, bs, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    grid = (N, Hkv, MB)
+
+    kernel = functools.partial(_quant_paged_kernel, scale=D ** -0.5, bs=bs,
+                               n_b=MB, decode=decode)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda i, h, b, tbl, lens: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda i, h, b, tbl, lens: (tbl[i, b], h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, b, tbl, lens: (tbl[i, b], h)),
+            pl.BlockSpec((1, 1, bs, D), lambda i, h, b, tbl, lens: (tbl[i, b], h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, b, tbl, lens: (tbl[i, b], h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda i, h, b, tbl, lens: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, Hkv, G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, k_scales, v_pool, v_scales)

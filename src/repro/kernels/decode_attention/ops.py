@@ -11,10 +11,12 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention.kernel import (
     decode_attention_kernel,
     paged_decode_attention_kernel,
+    quantized_paged_decode_attention_kernel,
 )
 from repro.kernels.decode_attention.ref import (
     decode_attention_ref,
     paged_decode_attention_ref,
+    quantized_paged_decode_attention_ref,
 )
 
 
@@ -84,6 +86,51 @@ def paged_update_attention(q, k, v, k_pool, v_pool, write_blocks,
     return out, k_pool, v_pool
 
 
+@partial(jax.jit, static_argnames=("policy",))
+def quantized_paged_decode_attention(q, k_pool, v_pool, k_scales, v_scales,
+                                     block_tables, lengths, *, policy):
+    """:func:`paged_decode_attention` over a quantized pool: k_pool /
+    v_pool hold int8 codes, k_scales/v_scales (P, Hkv) float32 absmax
+    scales keyed by the same block ids (``value = policy.decode(code) *
+    scale``).  ``policy`` is a :class:`repro.quant.KVQuantPolicy`
+    singleton riding in the jit static args.  On TPU the Pallas kernel
+    dequantizes tiles in-register inside the online-softmax loop;
+    elsewhere the pure-jnp gather reference runs."""
+    N, Hq, D = q.shape
+    Hkv = k_pool.shape[1]
+    if jax.default_backend() != "tpu":
+        return quantized_paged_decode_attention_ref(
+            q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths,
+            policy=policy)
+    G = Hq // Hkv
+    qg = q.reshape(N, Hkv, G, D)
+    out = quantized_paged_decode_attention_kernel(
+        qg, k_pool, v_pool, k_scales, v_scales, block_tables, lengths,
+        decode=policy.decode)
+    return out.reshape(N, Hq, D)
+
+
+def quantized_paged_update_attention(q, k, v, k_pool, v_pool, k_scales,
+                                     v_scales, write_blocks, write_offsets,
+                                     block_tables, lengths, *, policy):
+    """Quantized :func:`paged_update_attention`: quantize-scatter this
+    step's per-row K/V (maintaining the per-block absmax scales — fresh
+    blocks restart at 0, grown blocks rescale their resident codes),
+    then attend through the block tables with fused dequant.  Returns
+    ``(out, k_pool, v_pool, k_scales, v_scales)`` so callers can donate
+    all four pool buffers."""
+    from repro.quant.policy import quant_write_kv
+
+    k_pool, k_scales = quant_write_kv(k_pool, k_scales, k, write_blocks,
+                                      write_offsets, policy=policy)
+    v_pool, v_scales = quant_write_kv(v_pool, v_scales, v, write_blocks,
+                                      write_offsets, policy=policy)
+    out = quantized_paged_decode_attention(
+        q, k_pool, v_pool, k_scales, v_scales, block_tables, lengths,
+        policy=policy)
+    return out, k_pool, v_pool, k_scales, v_scales
+
+
 def sharded_paged_update_attention(q, k, v, k_pool, v_pool, write_blocks,
                                    write_offsets, block_tables, lengths,
                                    *, mesh, axis="data"):
@@ -109,6 +156,30 @@ def sharded_paged_update_attention(q, k, v, k_pool, v_pool, write_blocks,
               block_tables, lengths)
 
 
+def sharded_quantized_paged_update_attention(q, k, v, k_pool, v_pool,
+                                             k_scales, v_scales,
+                                             write_blocks, write_offsets,
+                                             block_tables, lengths, *,
+                                             policy, mesh, axis="data"):
+    """:func:`quantized_paged_update_attention` under shard_map over the
+    mesh's data axis — the same leading-dimension partitioning as
+    :func:`sharded_paged_update_attention`, with the scale pools sharded
+    alongside their code pools (both are keyed by shard-local ids)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    dx = P(axis)
+    body = partial(quantized_paged_update_attention, policy=policy)
+    fn = shard_map(body, mesh=mesh, in_specs=(dx,) * 11,
+                   out_specs=(dx,) * 5, check_rep=False)
+    return fn(q, k, v, k_pool, v_pool, k_scales, v_scales, write_blocks,
+              write_offsets, block_tables, lengths)
+
+
 __all__ = ["decode_attention", "decode_attention_ref",
            "paged_decode_attention", "paged_decode_attention_ref",
-           "paged_update_attention", "sharded_paged_update_attention"]
+           "paged_update_attention", "sharded_paged_update_attention",
+           "quantized_paged_decode_attention",
+           "quantized_paged_decode_attention_ref",
+           "quantized_paged_update_attention",
+           "sharded_quantized_paged_update_attention"]

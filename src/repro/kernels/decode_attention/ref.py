@@ -55,3 +55,33 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     out = jnp.einsum("nkgt,nktd->nkgd", probs, v.astype(jnp.float32))
     out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
     return out.reshape(N, Hq, D).astype(q.dtype)
+
+
+def quantized_paged_decode_attention_ref(q, k_pool, v_pool, k_scales,
+                                         v_scales, block_tables, lengths,
+                                         *, policy):
+    """Quantized-pool oracle: identical math to
+    :func:`paged_decode_attention_ref` after dequantizing the gathered
+    tiles.  k_pool/v_pool hold int8 codes; k_scales/v_scales are
+    (P, Hkv) float32 per-block-per-head absmax scales keyed by the same
+    block ids, so value = policy.decode(code) * scale.
+    """
+    N, Hq, D = q.shape
+    _, Hkv, bs, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    G = Hq // Hkv
+    # (N, MB, Hkv, bs, D) codes * (N, MB, Hkv, 1, 1) scales
+    k = policy.decode(k_pool[block_tables]) * \
+        k_scales[block_tables][..., None, None]
+    v = policy.decode(v_pool[block_tables]) * \
+        v_scales[block_tables][..., None, None]
+    k = jnp.transpose(k, (0, 2, 1, 3, 4)).reshape(N, Hkv, MB * bs, D)
+    v = jnp.transpose(v, (0, 2, 1, 3, 4)).reshape(N, Hkv, MB * bs, D)
+    qg = q.reshape(N, Hkv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("nkgd,nktd->nkgt", qg, k) * (D ** -0.5)
+    valid = jnp.arange(MB * bs)[None, :] < lengths[:, None]         # (N, T)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("nkgt,nktd->nkgd", probs, v)
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
+    return out.reshape(N, Hq, D).astype(q.dtype)

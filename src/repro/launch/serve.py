@@ -133,9 +133,21 @@ def main(argv=None):
                          "evict a running lower-priority request, swapping its "
                          "KV blocks to a host pool for later restore "
                          "(continuous engine only)")
+    ap.add_argument("--slo-shed", action="store_true",
+                    help="deadline-aware admission shedding: reject a queued "
+                         "request at the door once its deadline is provably "
+                         "unmeetable from the measured decode rate "
+                         "(continuous engine only)")
     ap.add_argument("--host-blocks", type=int, default=None,
                     help="host swap pool size in KV blocks "
                          "(default: mirror the device pool)")
+    from repro.quant import available_kv_quants
+    ap.add_argument("--kv-quant", default="none",
+                    choices=available_kv_quants(),
+                    help="KV-cache pool representation: quantized pools store "
+                         "int8 codes + per-block-per-head f32 scales, with "
+                         "fused dequant in paged attention "
+                         "(continuous engine only)")
     # speculative decoding (continuous engine only)
     from repro.serving.speculative import available_drafters
     ap.add_argument("--spec-drafter", default=None,
@@ -253,7 +265,7 @@ def main(argv=None):
                                 prefill_chunk=args.prefill_chunk,
                                 max_len=max(args.max_len, max_len),
                                 spec=spec, sched_policy=args.sched_policy,
-                                mesh=mesh_spec)
+                                kv_quant=args.kv_quant, mesh=mesh_spec)
             engine = ContinuousEngine(cfg, params, serve,
                                       temperature=args.temperature,
                                       seed=args.seed, draft_model=draft_model,
@@ -298,15 +310,16 @@ def main(argv=None):
                                     temperature=args.temperature,
                                     seed=args.seed)
     else:
-        slo = (SLOConfig(preemption=True, host_blocks=args.host_blocks)
-               if args.slo_preempt else None)
+        slo = (SLOConfig(preemption=args.slo_preempt,
+                         host_blocks=args.host_blocks, shed=args.slo_shed)
+               if (args.slo_preempt or args.slo_shed) else None)
         serve = ServeConfig(max_slots=args.max_slots,
                             kv_block_size=args.kv_block,
                             prefill_chunk=args.prefill_chunk,
                             max_len=max(args.max_len, longest),
                             spec=spec, sched_policy=args.sched_policy,
                             prefix_cache=args.prefix_cache, slo=slo,
-                            mesh=mesh_spec)
+                            kv_quant=args.kv_quant, mesh=mesh_spec)
         engine = ContinuousEngine(cfg, params, serve,
                                   temperature=args.temperature, seed=args.seed,
                                   draft_model=draft_model, obs=obs)

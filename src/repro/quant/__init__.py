@@ -1,0 +1,23 @@
+"""Quantized KV-cache subsystem.
+
+``repro.quant.policy`` defines the :class:`KVQuantPolicy` registry
+(``none`` | ``int8`` | ``fp8``) and the scale-maintaining pool-write
+primitive; ``repro.quant.kv_cache`` provides the quantized
+paged-cache variants (plain / prefix-caching) that
+``repro.serving.kv_cache.make_kv_cache`` selects from
+``ServeConfig.kv_quant``.  Layout, rewrite rule, and composition notes:
+``docs/serving.md`` "Quantized KV cache".
+"""
+from repro.quant.policy import (            # noqa: F401
+    KVQuantPolicy,
+    available_kv_quants,
+    check_quant_roundtrip,
+    get_kv_quant,
+    quant_write_kv,
+    register_kv_quant,
+)
+
+__all__ = [
+    "KVQuantPolicy", "available_kv_quants", "check_quant_roundtrip",
+    "get_kv_quant", "quant_write_kv", "register_kv_quant",
+]

@@ -1,0 +1,97 @@
+"""Quantized paged KV-cache variants.
+
+The :class:`_QuantPools` mixin swaps a paged cache's device pools for
+int8 *code* pools plus per-(layer, block, kv_head) float32 absmax
+*scale* pools indexed by the same block table
+(``value = policy.decode(code) * scale`` — see
+:mod:`repro.quant.policy`).  Everything host-side — allocator, block
+tables, reservations, refcounts, the whole invariant suite — is
+representation-blind and inherited unchanged; only pool allocation,
+copy-on-write, and byte accounting know about the scales:
+
+* :class:`QuantizedPagedKVCache` — the plain paged cache over int8
+  pools.
+* :class:`QuantizedPrefixCachingKVCache` — the prefix-caching variant;
+  its COW detach copies the old block's scale rows alongside its code
+  rows, so a detached copy decodes identically.  Chain-hash identity is
+  untouched: prefix hashes are over int32 tokens, never K/V bytes, so
+  warm-prefix reuse returns the quantized block bytes *exactly* as
+  published.
+
+The sharded composition lives in
+:class:`repro.serving.kv_cache.ShardedPagedKVCache`, which instantiates
+these as detached per-shard sub-caches and stacks the int8 + scale
+pools itself.  Selection from ``ServeConfig.kv_quant`` happens in
+:func:`repro.serving.kv_cache.make_kv_cache`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.quant.policy import get_kv_quant
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.prefix_cache import PrefixCachingKVCache
+
+__all__ = ["QuantizedPagedKVCache", "QuantizedPrefixCachingKVCache"]
+
+
+class _QuantPools:
+    """Pool-representation mixin: int8 codes + f32 scales."""
+
+    def _alloc_pools(self, cfg: ModelConfig, serve: ServeConfig) -> None:
+        self.policy = get_kv_quant(serve.kv_quant)
+        assert self.policy.quantized, (
+            "quantized cache built with kv_quant='none'; use make_kv_cache")
+        hd = cfg.resolved_head_dim
+        rows = self.num_blocks + 1          # + garbage block
+        pool_shape = (cfg.num_layers, rows, cfg.num_kv_heads,
+                      self.block_size, hd)
+        self.k_pool = jnp.zeros(pool_shape, self.policy.pool_dtype)
+        self.v_pool = jnp.zeros(pool_shape, self.policy.pool_dtype)
+        self.k_scales = jnp.zeros(
+            (cfg.num_layers, rows, cfg.num_kv_heads), jnp.float32)
+        self.v_scales = jnp.zeros_like(self.k_scales)
+
+    @property
+    def block_bytes(self) -> int:
+        """int8 codes (itemsize 1) plus the f32 scale rows, K + V."""
+        cfg = self.cfg
+        codes = cfg.num_kv_heads * self.block_size * cfg.resolved_head_dim
+        scales = cfg.num_kv_heads * 4
+        return 2 * cfg.num_layers * (codes + scales)
+
+    def check_conservation(self) -> None:
+        super().check_conservation()
+        # Scale-pool / code-pool bijection: every pool row has exactly
+        # one scale row under the same (layer, block) key — the block
+        # table indexes both with the same ids.
+        if self.k_pool is not None:
+            assert self.k_scales.shape == self.k_pool.shape[:2] + (
+                self.k_pool.shape[2],), (self.k_scales.shape,
+                                         self.k_pool.shape)
+            assert self.v_scales.shape == self.k_scales.shape
+
+
+class QuantizedPagedKVCache(_QuantPools, PagedKVCache):
+    """:class:`~repro.serving.kv_cache.PagedKVCache` over int8 pools."""
+
+
+class QuantizedPrefixCachingKVCache(_QuantPools, PrefixCachingKVCache):
+    """:class:`~repro.serving.prefix_cache.PrefixCachingKVCache` over
+    int8 pools.  Published blocks are immutable codes + an immutable
+    scale: the triple write-guard (bound / refcount > 1 / published)
+    protects the scale rows exactly as it protects the code rows, so a
+    double-write of a published block's scale raises before any device
+    update."""
+
+    def _cow_replace(self, slot: int, k: int) -> None:
+        held = self._slot_blocks[slot]
+        old = held[k]
+        super()._cow_replace(slot, k)
+        new = held[k]
+        if new != old:
+            # the copy must decode identically: codes alone are
+            # meaningless without the block's scale rows
+            self.k_scales = self.k_scales.at[:, new].set(self.k_scales[:, old])
+            self.v_scales = self.v_scales.at[:, new].set(self.v_scales[:, old])

@@ -1,0 +1,230 @@
+"""KV-cache quantization policies: per-block-per-head absmax scaling.
+
+A :class:`KVQuantPolicy` describes how a paged K/V pool stores its
+tokens: the device pool holds small integer *codes* (int8 for every
+quantized policy — ``fp8`` stores float8_e4m3fn bit patterns in an int8
+carrier so the pool works on backends without native fp8 pools) plus a
+per-(layer, block, kv_head) float32 *scale* pool indexed by the same
+block table.  A stored value decodes as ``decode(code) * scale``.
+
+Scales are absmax: for each (block, head) the scale is
+``max|value| / qmax`` over every token row the block has ever held, so
+quantize/dequantize error is bounded elementwise by
+:meth:`KVQuantPolicy.error_bound` (scale/2 for int8 — half a
+quantization step; scale * 16 for fp8 — half a ulp at the top e4m3
+binade).  Partial-block appends may *grow* a block's absmax; the write
+primitive :func:`quant_write_kv` then rescales the block's existing
+codes to the new scale before writing the new rows (the rewrite rule:
+scales are monotone non-decreasing over a block's fill lifetime, and
+the error bound always holds against the *current* scale).
+
+Registry mirrors the router/dispatcher registries: policies are
+singletons looked up by name (``none`` | ``int8`` | ``fp8``) and hash
+by identity, so they can ride in ``jit``'s static args.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "KVQuantPolicy", "register_kv_quant", "get_kv_quant",
+    "available_kv_quants", "quant_write_kv", "check_quant_roundtrip",
+]
+
+# Guard for divisions by a block scale: all-zero blocks have scale 0.
+_TINY = 1e-30
+
+
+class KVQuantPolicy:
+    """One KV quantization scheme.
+
+    Attributes
+    ----------
+    name: registry key.
+    quantized: False only for the ``none`` passthrough policy.
+    qmax: largest representable magnitude of the code space; the scale
+        for a block is ``absmax / qmax``.
+    pool_dtype: device dtype of the code pool (int8 for all quantized
+        policies).
+    """
+
+    def __init__(self, name: str, *, quantized: bool, qmax: float,
+                 encode: Optional[Callable] = None,
+                 decode: Optional[Callable] = None,
+                 error_ulps: float = 0.5):
+        self.name = name
+        self.quantized = quantized
+        self.qmax = qmax
+        self._encode = encode
+        self._decode = decode
+        # Elementwise bound in units of the scale: int8's uniform grid
+        # gives 0.5 (half a step of size `scale`); fp8's top binade has
+        # step 32 (e4m3 mantissa=3 at 256..448), i.e. 16 ulps-of-scale.
+        self.error_ulps = error_ulps
+        self.pool_dtype = jnp.int8
+
+    # Policies are singletons: identity hash/eq lets a policy ride in
+    # jit static_argnames without defining dataclass equality.
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other
+
+    def __repr__(self):
+        return f"KVQuantPolicy({self.name!r})"
+
+    def encode(self, u):
+        """Scaled values -> int8 codes (u is value / scale)."""
+        return self._encode(u)
+
+    def decode(self, codes):
+        """int8 codes -> float32 scaled values."""
+        return self._decode(codes)
+
+    def error_bound(self, scale):
+        """Elementwise |dequant - value| bound for a block with `scale`."""
+        return scale * self.error_ulps
+
+
+_REGISTRY: Dict[str, KVQuantPolicy] = {}
+
+
+def register_kv_quant(policy: KVQuantPolicy) -> KVQuantPolicy:
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def get_kv_quant(name: str) -> KVQuantPolicy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kv_quant {name!r}; registered: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def available_kv_quants() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# -- built-in policies -------------------------------------------------------
+
+def _int8_encode(u):
+    return jnp.clip(jnp.round(u), -127.0, 127.0).astype(jnp.int8)
+
+
+def _int8_decode(codes):
+    return codes.astype(jnp.float32)
+
+
+def _fp8_encode(u):
+    # e4m3 saturates at +-448; values beyond cast to nan, so clip first.
+    c = jnp.clip(u.astype(jnp.float32), -448.0, 448.0)
+    return jax.lax.bitcast_convert_type(
+        c.astype(jnp.float8_e4m3fn), jnp.int8)
+
+
+def _fp8_decode(codes):
+    return jax.lax.bitcast_convert_type(
+        codes, jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+NONE = register_kv_quant(KVQuantPolicy("none", quantized=False, qmax=0.0))
+INT8 = register_kv_quant(KVQuantPolicy(
+    "int8", quantized=True, qmax=127.0,
+    encode=_int8_encode, decode=_int8_decode, error_ulps=0.5))
+# "fp8" simulated via e4m3 bit patterns in an int8 pool: bitwise the
+# real fp8 representation, decodable on CPU (tests/interpret) and TPU.
+FP8 = register_kv_quant(KVQuantPolicy(
+    "fp8", quantized=True, qmax=448.0,
+    encode=_fp8_encode, decode=_fp8_decode, error_ulps=16.0))
+
+
+# -- pool write primitive ----------------------------------------------------
+
+def quant_write_kv(codes_pool, scales, x, write_blocks, write_offsets,
+                   *, policy: KVQuantPolicy):
+    """Scatter new token rows into a quantized pool, maintaining scales.
+
+    Args:
+      codes_pool: (P, Hkv, bs, D) int8 code pool for one layer.
+      scales:     (P, Hkv) float32 per-block-per-head absmax scales.
+      x:          (N, Hkv, D) new rows (one token per row).
+      write_blocks, write_offsets: (N,) int32 destination coordinates.
+      policy: a quantized :class:`KVQuantPolicy`.
+
+    Returns ``(codes_pool, scales)`` updated.
+
+    Scale maintenance (the partial-block rewrite rule):
+      * A block is *fresh* iff some row writes offset 0 this step — the
+        allocator hands out blocks empty and rows fill sequentially, so
+        offset 0 is always the first write a block ever sees.  Fresh
+        blocks restart their scale from 0 (stale scale from a previous
+        tenant must not inflate the bound).
+      * Each touched block's new scale is max(old-or-0, absmax of its
+        incoming rows / qmax) — scatter-max handles several rows
+        landing in one block.
+      * If the scale grew, the block's *existing* codes are rescaled
+        (decode at old scale, re-encode at new scale) before the new
+        rows are written.  When the scale did *not* grow the rewrite is
+        a lossless identity (decode -> divide by the same scale ->
+        re-encode reproduces the codes bit-for-bit), so error only
+        compounds on actual growth: a resident token's error against
+        the current scale is <= ``(1 + g) * error_bound(scale)`` where
+        ``g`` is the number of scale growths since it was written —
+        at most ``block_size * error_bound`` over a block's lifetime,
+        and exactly ``error_bound`` for a freshly written row.
+    """
+    qmax = policy.qmax
+    x32 = x.astype(jnp.float32)
+    # Per-row per-head requested scale.
+    s_req = jnp.max(jnp.abs(x32), axis=-1) / qmax            # (N, Hkv)
+    fresh = jnp.zeros(scales.shape[:1], bool).at[write_blocks].max(
+        write_offsets == 0)                                  # (P,)
+    s_pool0 = jnp.where(fresh[:, None], 0.0, scales)         # (P, Hkv)
+    new_scales = s_pool0.at[write_blocks].max(s_req)         # (P, Hkv)
+
+    # Rescale the existing codes of every touched block.  Duplicate
+    # write_blocks rows compute identical content, so the unordered
+    # scatter is deterministic; fresh blocks have s_pool0 == 0 and
+    # their codes collapse to 0 before the new rows land.
+    old = codes_pool[write_blocks]                           # (N, Hkv, bs, D)
+    vals = policy.decode(old) * s_pool0[write_blocks][..., None, None]
+    s_new_b = jnp.maximum(new_scales[write_blocks], _TINY)   # (N, Hkv)
+    resc = policy.encode(vals / s_new_b[..., None, None])
+    codes_pool = codes_pool.at[write_blocks].set(resc)
+
+    # Write the new rows at the (possibly grown) block scale.
+    codes_pool = codes_pool.at[write_blocks, :, write_offsets].set(
+        policy.encode(x32 / jnp.maximum(
+            new_scales[write_blocks], _TINY)[..., None]))
+    return codes_pool, new_scales
+
+
+# -- property checker --------------------------------------------------------
+
+def check_quant_roundtrip(x, policy: KVQuantPolicy, *, atol: float = 1e-6):
+    """Assert per-block absmax quantize/dequantize error stays within
+    :meth:`KVQuantPolicy.error_bound` elementwise.
+
+    ``x`` is any float array treated as one block: scale = absmax/qmax
+    over the whole array, every element must round-trip to within
+    ``error_bound(scale)`` (+ ``atol`` slack for f32 arithmetic).
+    Returns ``(dequant, scale, max_err)`` for further inspection.
+    """
+    x32 = jnp.asarray(x, jnp.float32)
+    scale = float(jnp.max(jnp.abs(x32))) / policy.qmax
+    s = max(scale, _TINY)
+    codes = policy.encode(x32 / s)
+    deq = policy.decode(codes) * s
+    err = jnp.abs(deq - x32)
+    max_err = float(jnp.max(err)) if x32.size else 0.0
+    bound = float(policy.error_bound(scale)) + atol
+    assert max_err <= bound, (
+        f"{policy.name}: round-trip error {max_err} exceeds bound {bound} "
+        f"(scale={scale})")
+    return deq, scale, max_err

@@ -82,7 +82,9 @@ from repro.core.moe import moe_ffn_apply
 from repro.distributed.sharding import Rules, shard, use_rules
 from repro.kernels.decode_attention import (
     paged_update_attention,
+    quantized_paged_update_attention,
     sharded_paged_update_attention,
+    sharded_quantized_paged_update_attention,
 )
 from repro.models import layers as L
 from repro.models.attention import _project_qkv
@@ -104,7 +106,8 @@ _RECURRENT_FAMILIES = ("xlstm",)
 # ---------------------------------------------------------------------------
 
 def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
-                 lengths, row_tables, wb, wo, kp, vp, ctx, mesh=None):
+                 lengths, row_tables, wb, wo, kp, vp, ctx, mesh=None,
+                 ksc=None, vsc=None, policy=None):
     """One pre-norm block over the flat row batch ``x: (1, N, d)``.
 
     K/V for every row are written into the pool at (wb, wo) *before* the
@@ -121,7 +124,16 @@ def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
     N = x.shape[1]
     h = L.norm_apply(bp["ln_attn"], x, cfg)
     q, k, v = _project_qkv(bp["attn"], h, cfg, positions)       # (1, N, H*, D)
-    if mesh is None:
+    if policy is not None:
+        if mesh is None:
+            out, kp, vp, ksc, vsc = quantized_paged_update_attention(
+                q[0], k[0], v[0], kp, vp, ksc, vsc, wb, wo, row_tables,
+                lengths, policy=policy)
+        else:
+            out, kp, vp, ksc, vsc = sharded_quantized_paged_update_attention(
+                q[0], k[0], v[0], kp, vp, ksc, vsc, wb, wo, row_tables,
+                lengths, policy=policy, mesh=mesh, axis="data")
+    elif mesh is None:
         out, kp, vp = paged_update_attention(
             q[0], k[0], v[0], kp, vp, wb, wo, row_tables, lengths)
     else:
@@ -142,7 +154,7 @@ def _paged_block(bp, x, cfg: ModelConfig, *, moe_layer: bool, positions,
         telem = _layer_telemetry(None, cfg.moe.num_experts)
     x = x + ffn_out
     x = shard(x, "batch", "seq", "embed")
-    return x, kp, vp, telem
+    return x, kp, vp, ksc, vsc, telem
 
 
 def _layer_telemetry(aux, num_experts: int) -> dict:
@@ -164,14 +176,20 @@ def _layer_telemetry(aux, num_experts: int) -> dict:
 
 
 def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
-                  lengths, row_tables, wb, wo, k_pools, v_pools, mesh=None):
+                  lengths, row_tables, wb, wo, k_pools, v_pools, mesh=None,
+                  k_scales=None, v_scales=None, policy=None):
     """Flat-row forward: embed -> blocks (scan or unrolled) -> logits.
 
-    Returns (float32 logits (N, V), new k_pools, new v_pools, telem) —
-    ``telem`` is the per-layer routing telemetry stack ({} for dense
-    models; see ``_layer_telemetry``).  Shared by the decode/mixed step
-    (which samples on top) and the speculative verify step (which ships
-    the logits to the host acceptance rule)."""
+    Returns (float32 logits (N, V), new k_pools, new v_pools, new
+    k_scales, new v_scales, telem) — ``telem`` is the per-layer routing
+    telemetry stack ({} for dense models; see ``_layer_telemetry``).
+    Shared by the decode/mixed step (which samples on top) and the
+    speculative verify step (which ships the logits to the host
+    acceptance rule).  ``policy`` (a quantized
+    :class:`repro.quant.KVQuantPolicy`) switches the K/V write +
+    attention to the quantized ops, with the (L, P, Hkv) scale pools
+    threading alongside the code pools; None keeps the full-precision
+    path byte-identical (the scale leaves stay None)."""
     x = L.embedding_apply(params["embed"], tokens[None], cfg)   # (1, N, d)
     pos2 = positions[None]
     if cfg.pos_embed == "learned":
@@ -181,24 +199,45 @@ def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
     x = shard(x, "batch", "seq", "embed")
 
     blocks = params["blocks"]
+    quantized = policy is not None
     if isinstance(blocks, (list, tuple)):       # unrolled (mixed layer kinds)
-        ks, vs, telems = [], [], []
+        ks, vs, kss, vss, telems = [], [], [], [], []
         for i, bp in enumerate(blocks):
-            x, kp, vp, tl = _paged_block(
+            x, kp, vp, ksc, vsc, tl = _paged_block(
                 bp, x, cfg, moe_layer=_is_moe_layer(cfg, i), positions=pos2,
                 lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
-                kp=k_pools[i], vp=v_pools[i], ctx=ctx, mesh=mesh)
+                kp=k_pools[i], vp=v_pools[i], ctx=ctx, mesh=mesh,
+                ksc=k_scales[i] if quantized else None,
+                vsc=v_scales[i] if quantized else None, policy=policy)
             ks.append(kp)
             vs.append(vp)
+            kss.append(ksc)
+            vss.append(vsc)
             telems.append(tl)
         k_pools, v_pools = jnp.stack(ks), jnp.stack(vs)
+        if quantized:
+            k_scales, v_scales = jnp.stack(kss), jnp.stack(vss)
         telem = {k: jnp.stack([t[k] for t in telems]) for k in telems[0]}
+    elif quantized:
+        moe_layer = _is_moe_layer(cfg, 0)
+
+        def qbody(h, scanned):
+            bp, kp, vp, ksc, vsc = scanned
+            h, kp, vp, ksc, vsc, tl = _paged_block(
+                bp, h, cfg, moe_layer=moe_layer, positions=pos2,
+                lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
+                kp=kp, vp=vp, ctx=ctx, mesh=mesh, ksc=ksc, vsc=vsc,
+                policy=policy)
+            return h, (kp, vp, ksc, vsc, tl)
+
+        x, (k_pools, v_pools, k_scales, v_scales, telem) = jax.lax.scan(
+            qbody, x, (blocks, k_pools, v_pools, k_scales, v_scales))
     else:
         moe_layer = _is_moe_layer(cfg, 0)
 
         def body(h, scanned):
             bp, kp, vp = scanned
-            h, kp, vp, tl = _paged_block(
+            h, kp, vp, _, _, tl = _paged_block(
                 bp, h, cfg, moe_layer=moe_layer, positions=pos2,
                 lengths=lengths, row_tables=row_tables, wb=wb, wo=wo,
                 kp=kp, vp=vp, ctx=ctx, mesh=mesh)
@@ -212,7 +251,7 @@ def _paged_logits(params, cfg: ModelConfig, tokens, ctx_ids, positions,
     x = L.norm_apply(params["final_norm"], x, cfg)
     unembed = params.get("unembed", params["embed"])
     logits = L.unembed_apply(unembed, x, cfg)[0].astype(jnp.float32)  # (N, V)
-    return logits, k_pools, v_pools, telem
+    return logits, k_pools, v_pools, k_scales, v_scales, telem
 
 
 def _row_buffers(N: int, blocks_per_slot: int, garbage_block: int):
@@ -277,7 +316,8 @@ class ContinuousEngine:
                  rules: Optional[Rules] = None,
                  draft_model: Optional[Tuple] = None,
                  check_invariants: bool = False,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 logit_tap: Optional[Callable] = None):
         if cfg.family in _PAGED_FAMILIES:
             self.mode = "paged"
             if cfg.attn_logit_softcap > 0:
@@ -303,6 +343,12 @@ class ContinuousEngine:
         self._key = jax.random.PRNGKey(seed)   # fixed base key; per-row folds
         self.steps = 0
         self.check_invariants = check_invariants
+        # debug spy on the per-step logits matrix (paged mode): called
+        # via jax.debug.callback with (logits, slots, positions, lengths)
+        # host arrays each engine step (length 0 marks a padding row) —
+        # reads, never steers (the benchmark quant sweep uses it to
+        # measure logit divergence across kv_quant policies)
+        self._logit_tap = logit_tap
         self.obs = obs if obs is not None else Observability()
         self._moe_acc = None        # device-side telemetry accumulator
         self._moe_rows = 0          # host row count backing the entropy mean
@@ -351,6 +397,10 @@ class ContinuousEngine:
             raise NotImplementedError(
                 "prefix caching needs the paged KV cache (recurrent slot "
                 "states are not content-addressable blocks)")
+        if serve.kv_quant != "none" and self.mode != "paged":
+            raise NotImplementedError(
+                "KV quantization needs the paged KV cache (recurrent slot "
+                "states are not block pools)")
         if (serve.slo is not None and serve.slo.preemption
                 and self.mode != "paged"):
             raise NotImplementedError(
@@ -359,52 +409,72 @@ class ContinuousEngine:
                 "for priority/deadline ordering alone")
 
         if self.mode == "paged":
-            if serve.mesh is not None:
-                self.cache: Optional[PagedKVCache] = ShardedPagedKVCache(
-                    cfg, serve)
-            elif serve.prefix_cache:
-                from repro.serving.prefix_cache import PrefixCachingKVCache
+            from repro.serving.kv_cache import make_kv_cache
 
-                self.cache = PrefixCachingKVCache(cfg, serve)
-            else:
-                self.cache = PagedKVCache(cfg, serve)
+            self.cache: Optional[PagedKVCache] = make_kv_cache(cfg, serve)
             self.scheduler = Scheduler(serve.max_slots, serve.max_len,
                                        self.cache, policy=serve.sched_policy,
                                        slo=serve.slo, obs=self.obs)
             temp = self.temperature
             mesh = self.mesh
+            # The quantized policy rides in the step closures (jit
+            # static); None keeps the full-precision path bit-identical
+            # — the scale args are then None pytree leaves, which add
+            # nothing to the traced computation.
+            if serve.kv_quant != "none":
+                from repro.quant import get_kv_quant
+
+                kv_policy = get_kv_quant(serve.kv_quant)
+            else:
+                kv_policy = None
+            self._kv_policy = kv_policy
+            tap = logit_tap
 
             def step_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
-                        lengths, row_tables, wb, wo, slots, key):
+                        lengths, row_tables, wb, wo, slots, key,
+                        k_scales=None, v_scales=None):
                 with use_rules(rules):
-                    logits, k_pools, v_pools, telem = _paged_logits(
+                    (logits, k_pools, v_pools, k_scales, v_scales,
+                     telem) = _paged_logits(
                         p, cfg, tokens, ctx_ids, positions, lengths,
-                        row_tables, wb, wo, k_pools, v_pools, mesh=mesh)
+                        row_tables, wb, wo, k_pools, v_pools, mesh=mesh,
+                        k_scales=k_scales, v_scales=v_scales,
+                        policy=kv_policy)
+                    if tap is not None:
+                        jax.debug.callback(tap, logits, slots, positions,
+                                           lengths)
                     tok = _sample_rows(logits, slots, positions,
                                        temperature=temp, key=key)
-                return tok, k_pools, v_pools, telem
+                return tok, k_pools, v_pools, k_scales, v_scales, telem
 
             # Static shapes only: N = max_slots (decode-only),
             # N = max_slots + data_shards * prefill_chunk (mixed), and —
             # speculative — N = max_slots * (gamma + 1) (verify); jit
-            # caches each once.
+            # caches each once.  The scale pools are donated alongside
+            # the code pools when quantized (args 12, 13).
+            donate = (1, 2, 12, 13) if kv_policy is not None else (1, 2)
             self._step_fn_raw = step_fn    # structural tests trace this
-            self._step_fn = jax.jit(step_fn, donate_argnums=(1, 2))
+            self._step_fn = jax.jit(step_fn, donate_argnums=donate)
 
             def verify_fn(p, k_pools, v_pools, tokens, ctx_ids, positions,
-                          lengths, row_tables, wb, wo):
+                          lengths, row_tables, wb, wo,
+                          k_scales=None, v_scales=None):
                 with use_rules(rules):
-                    logits, k_pools, v_pools, telem = _paged_logits(
+                    (logits, k_pools, v_pools, k_scales, v_scales,
+                     telem) = _paged_logits(
                         p, cfg, tokens, ctx_ids, positions, lengths,
-                        row_tables, wb, wo, k_pools, v_pools)
+                        row_tables, wb, wo, k_pools, v_pools,
+                        k_scales=k_scales, v_scales=v_scales,
+                        policy=kv_policy)
                 # greedy acceptance only compares token ids: ship N int32
                 # argmaxes, not the (N, V) logits matrix, to the host
                 if temp <= 0.0:
                     return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
-                            k_pools, v_pools, telem)
-                return logits, k_pools, v_pools, telem
+                            k_pools, v_pools, k_scales, v_scales, telem)
+                return logits, k_pools, v_pools, k_scales, v_scales, telem
 
-            self._verify_fn = jax.jit(verify_fn, donate_argnums=(1, 2))
+            vdonate = (1, 2, 10, 11) if kv_policy is not None else (1, 2)
+            self._verify_fn = jax.jit(verify_fn, donate_argnums=vdonate)
             # the documented compiled census: {mixed, decode-only} for
             # the step fn, plus the verify shape when speculating —
             # anything beyond this is a recompile worth flagging
@@ -477,6 +547,12 @@ class ContinuousEngine:
                 for state in ("free", "live", "cached"):
                     m.gauge("kv_blocks", state=state, shard=d).set(occ[state])
                 m.gauge("kv_reserved_blocks", shard=d).set(occ["reserved"])
+                # device footprint of the shard's whole pool (every
+                # block row incl. the garbage block, at the per-block
+                # byte cost — int8 + scales when quantized)
+                rows = occ["free"] + occ["live"] + occ["cached"] + 1
+                m.gauge("kv_pool_bytes", shard=d).set(
+                    rows * occ["block_bytes"])
             if self.serve.prefix_cache:
                 for k, v in self.cache.stats.items():
                     m.counter(f"prefix_{k}_total").set_to(v)
@@ -567,12 +643,16 @@ class ContinuousEngine:
         could not otherwise be admitted — eviction and re-admission both
         happen here, at step granularity, never mid-forward."""
         self.scheduler.maybe_preempt(clock_ms)
+        # deadline-aware shedding (slo.shed): provably-late requests are
+        # finished with Status.SHED at the door, surfaced alongside the
+        # step's completions so run()/callers see them resolve
+        shed = self.scheduler.shed_unmeetable(clock_ms)
         admitted = self.scheduler.admit(clock_ms)
         if self.mode == "recurrent":
             for st in admitted:
                 self._state = self._reset_fn(self._state, jnp.int32(st.slot))
         if not self.scheduler.running:
-            return []
+            return shed
         if self.mode == "paged":
             # speculate only in decode-only steps: mid-prefill, the mixed
             # step makes prompt progress and decode slots emit one token
@@ -585,7 +665,7 @@ class ContinuousEngine:
         self.steps += 1
         if self.check_invariants:
             self.scheduler.check_conservation()
-        return finished
+        return shed + finished
 
     def _paged_host_step(self, clock_ms: float) -> List[RequestState]:
         serve, cache, sched = self.serve, self.cache, self.scheduler
@@ -642,13 +722,27 @@ class ContinuousEngine:
         live = len(sample_rows) + (chunk if pre is not None else 0)
         if pre is not None and any(st is pre for _, st in sample_rows):
             live -= 1       # pre's sample row is one of its chunk rows
-        with self.obs.tracer.span("engine_step", kind=kind, step=self.steps,
-                                  rows=N, live_rows=live):
-            next_tok, k_pools, v_pools, telem = self._step_fn(
+        tr = self.obs.tracer
+        with tr.span("engine_step", kind=kind, step=self.steps,
+                     rows=N, live_rows=live):
+            if self.mesh is not None and tr.enabled:
+                # per-shard child spans: each shard's slice of the row
+                # batch (rows [d*per, (d+1)*per)), with its own live-row
+                # census — the mesh analogue of the step-level args
+                for d in range(D):
+                    sl = int(np.count_nonzero(
+                        b["lengths"][d * per:(d + 1) * per]))
+                    with tr.span("engine_step_shard", kind=kind,
+                                 step=self.steps, shard=d, rows=per,
+                                 live_rows=sl):
+                        pass
+            (next_tok, k_pools, v_pools, k_scales, v_scales,
+             telem) = self._step_fn(
                 self.params, cache.k_pool, cache.v_pool, b["tokens"],
                 b["ctx_ids"], b["positions"], b["lengths"], b["row_tables"],
-                b["wb"], b["wo"], b["slots"], self._key)
-            cache.update_pools(k_pools, v_pools)
+                b["wb"], b["wo"], b["slots"], self._key,
+                cache.k_scales, cache.v_scales)
+            cache.update_pools(k_pools, v_pools, k_scales, v_scales)
         self._moe_accum(telem, N)
 
         if pre is not None:
@@ -731,11 +825,12 @@ class ContinuousEngine:
         live = sum(int(d.size) + 1 for _, d, _ in per_slot.values())
         with self.obs.tracer.span("engine_step", kind="verify",
                                   step=self.steps, rows=N, live_rows=live):
-            scores, k_pools, v_pools, telem = self._verify_fn(
+            (scores, k_pools, v_pools, k_scales, v_scales,
+             telem) = self._verify_fn(
                 self.params, cache.k_pool, cache.v_pool, b["tokens"],
                 b["ctx_ids"], b["positions"], b["lengths"], b["row_tables"],
-                b["wb"], b["wo"])
-            cache.update_pools(k_pools, v_pools)
+                b["wb"], b["wo"], cache.k_scales, cache.v_scales)
+            cache.update_pools(k_pools, v_pools, k_scales, v_scales)
         self._moe_accum(telem, N)
         scores = np.asarray(scores)     # (N,) argmax ids | (N, V) logits
 
@@ -849,9 +944,11 @@ class ContinuousEngine:
                 if nxt is not None and nxt > clock:
                     clock = nxt                      # idle: jump to next arrival
             finished = self.step(clock)
-            # finished requests were still running when the step began
+            # finished requests were still running when the step began;
+            # shed requests never ran, so they don't count toward peak
+            ran = [st for st in finished if st.status is not Status.SHED]
             m.gauge("serve_peak_running").set_max(
-                len(self.scheduler.running) + len(finished))
+                len(self.scheduler.running) + len(ran))
             for st in finished:
                 done.append(st)
                 if on_finish is not None:
@@ -861,13 +958,20 @@ class ContinuousEngine:
 
         from repro.serving.trace import latency_stats, slo_class_stats
 
-        stats = latency_stats([st.latency_ms() for st in done], total_ms,
-                              sum(len(st.generated) for st in done))
+        # shed requests resolved without serving a token: excluding them
+        # from latency/goodput stats keeps "met deadline" meaning "was
+        # served by its deadline" (a shed finish beats its deadline on
+        # the clock but delivered nothing)
+        served = [st for st in done if st.status is not Status.SHED]
+        stats = latency_stats([st.latency_ms() for st in served], total_ms,
+                              sum(len(st.generated) for st in served))
         stats["steps"] = m.delta(mark, "engine_steps_total")
         stats["peak_running"] = m.get("serve_peak_running")
         # per-class percentiles + goodput: global p50/p95 hide exactly
         # the targeted degradation SLO scheduling is for
-        stats.update(slo_class_stats(done))
+        stats.update(slo_class_stats(served))
+        if self.serve.slo is not None and self.serve.slo.shed:
+            stats["requests_shed"] = m.delta(mark, "requests_shed_total")
         if sched.swap is not None:
             stats["preemptions"] = m.delta(mark, "sched_preemptions_total")
             stats["restore_tokens"] = m.delta(mark,

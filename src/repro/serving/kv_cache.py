@@ -106,6 +106,11 @@ class PagedKVCache:
     """
 
     num_shards = 1   # ShardedPagedKVCache overrides; schedulers branch on it
+    # Per-block scale pools: None for full-precision caches; the
+    # quantized variants (repro.quant.kv_cache) allocate (L, P, Hkv)
+    # float32 absmax scales indexed by the same block ids as the pools.
+    k_scales = None
+    v_scales = None
 
     def __init__(self, cfg: ModelConfig, serve: ServeConfig):
         self.cfg = cfg
@@ -114,12 +119,7 @@ class PagedKVCache:
         self.num_blocks = serve.resolved_num_blocks
         self.garbage_block = self.num_blocks          # index P-1, never allocated
         self.allocator = BlockAllocator(self.num_blocks)
-        hd = cfg.resolved_head_dim
-        pool_shape = (cfg.num_layers, self.num_blocks + 1, cfg.num_kv_heads,
-                      self.block_size, hd)
-        dtype = cfg.activation_dtype
-        self.k_pool = jnp.zeros(pool_shape, dtype)
-        self.v_pool = jnp.zeros(pool_shape, dtype)
+        self._alloc_pools(cfg, serve)
         # host-side table; unassigned entries point at the garbage block
         # (always a valid pool index, always masked by length)
         self.block_table = np.full((serve.max_slots, serve.blocks_per_slot),
@@ -127,6 +127,26 @@ class PagedKVCache:
         self._slot_blocks: Dict[int, List[int]] = {}
         self._slot_reserved: Dict[int, int] = {}      # worst-case block count
         self.reserved_total = 0
+
+    def _alloc_pools(self, cfg: ModelConfig, serve: ServeConfig) -> None:
+        """Create the device pools.  The quantized variants override
+        this with int8 code pools plus float32 scale pools."""
+        hd = cfg.resolved_head_dim
+        pool_shape = (cfg.num_layers, self.num_blocks + 1, cfg.num_kv_heads,
+                      self.block_size, hd)
+        dtype = cfg.activation_dtype
+        self.k_pool = jnp.zeros(pool_shape, dtype)
+        self.v_pool = jnp.zeros(pool_shape, dtype)
+
+    @property
+    def block_bytes(self) -> int:
+        """Device bytes one KV block costs across all layers (K + V).
+        Computed from the config (not the live pools) so detached
+        sub-caches report it too."""
+        cfg = self.cfg
+        per_entry = (cfg.num_kv_heads * self.block_size
+                     * cfg.resolved_head_dim)
+        return 2 * cfg.num_layers * per_entry * cfg.activation_dtype.itemsize
 
     def blocks_needed(self, total_len: int) -> int:
         return -(-total_len // self.block_size)
@@ -155,6 +175,7 @@ class PagedKVCache:
         which owns one stacked global pool and keeps sub-caches for host
         accounting (tables, allocators, reservations) only."""
         self.k_pool = self.v_pool = None
+        self.k_scales = self.v_scales = None
 
     def can_allocate_slot(self, total_len: int, prompt=None) -> bool:
         """Admission gate: does the pool have unreserved room for this
@@ -298,16 +319,24 @@ class PagedKVCache:
             if slot not in self._slot_blocks:
                 assert (self.block_table[slot] == self.garbage_block).all()
 
-    def update_pools(self, k_pool: jax.Array, v_pool: jax.Array) -> None:
-        """Adopt the step function's donated-output pools."""
+    def update_pools(self, k_pool: jax.Array, v_pool: jax.Array,
+                     k_scales=None, v_scales=None) -> None:
+        """Adopt the step function's donated-output pools (and scale
+        pools, when quantized)."""
         self.k_pool = k_pool
         self.v_pool = v_pool
+        if k_scales is not None:
+            self.k_scales = k_scales
+            self.v_scales = v_scales
 
     def occupancy(self) -> list:
         """Per-shard block occupancy for the metrics registry: one dict
         per shard with ``free``/``live``/``cached``/``reserved`` block
-        counts.  ``cached`` is the refcounted prefix allocator's
-        cached-LRU population (0 for the plain allocator)."""
+        counts plus ``block_bytes``, the per-block device cost (bytes
+        across all layers, K + V + scales) — counts x ``block_bytes``
+        is the pool's byte footprint.  ``cached`` is the refcounted
+        prefix allocator's cached-LRU population (0 for the plain
+        allocator)."""
         a = self.allocator
         return [{
             "free": a.free_count,
@@ -315,6 +344,7 @@ class PagedKVCache:
                      + getattr(a, "live_count", 0)),
             "cached": getattr(a, "cached_count", 0),
             "reserved": self.reserved_total,
+            "block_bytes": self.block_bytes,
         }]
 
 
@@ -367,20 +397,37 @@ class ShardedPagedKVCache:
         sub_serve = dataclasses.replace(
             serve, mesh=None, max_slots=self.slots_per_shard,
             num_blocks=self.shard_blocks)
+        quantized = getattr(serve, "kv_quant", "none") != "none"
         if serve.prefix_cache:
-            from repro.serving.prefix_cache import PrefixCachingKVCache
-            sub_cls = PrefixCachingKVCache
+            if quantized:
+                from repro.quant.kv_cache import QuantizedPrefixCachingKVCache
+                sub_cls = QuantizedPrefixCachingKVCache
+            else:
+                from repro.serving.prefix_cache import PrefixCachingKVCache
+                sub_cls = PrefixCachingKVCache
+        elif quantized:
+            from repro.quant.kv_cache import QuantizedPagedKVCache
+            sub_cls = QuantizedPagedKVCache
         else:
             sub_cls = PagedKVCache
         self.shards = [sub_cls(cfg, sub_serve) for _ in range(d)]
         for s in self.shards:
             s.detach_pools()
         hd = cfg.resolved_head_dim
-        pool_shape = (cfg.num_layers, d * (self.shard_blocks + 1),
-                      cfg.num_kv_heads, self.block_size, hd)
-        dtype = cfg.activation_dtype
-        self.k_pool = jnp.zeros(pool_shape, dtype)
-        self.v_pool = jnp.zeros(pool_shape, dtype)
+        rows = d * (self.shard_blocks + 1)
+        pool_shape = (cfg.num_layers, rows, cfg.num_kv_heads,
+                      self.block_size, hd)
+        if quantized:
+            self.k_pool = jnp.zeros(pool_shape, jnp.int8)
+            self.v_pool = jnp.zeros(pool_shape, jnp.int8)
+            self.k_scales = jnp.zeros(
+                (cfg.num_layers, rows, cfg.num_kv_heads), jnp.float32)
+            self.v_scales = jnp.zeros_like(self.k_scales)
+        else:
+            dtype = cfg.activation_dtype
+            self.k_pool = jnp.zeros(pool_shape, dtype)
+            self.v_pool = jnp.zeros(pool_shape, dtype)
+            self.k_scales = self.v_scales = None
 
     def _loc(self, slot: int) -> Tuple[int, int]:
         """(shard, shard-local slot) for a global slot id."""
@@ -500,7 +547,40 @@ class ShardedPagedKVCache:
             cached += getattr(a, "cached_count", 0)
         assert free + live + cached == self.num_blocks, (
             free, live, cached, self.num_blocks)
+        if self.k_scales is not None:
+            # scale-pool / code-pool bijection over the stacked rows:
+            # shard_map splits both along the same row axis, so every
+            # shard-local block id indexes its codes and its scale
+            assert self.k_scales.shape == self.k_pool.shape[:2] + (
+                self.k_pool.shape[2],), (self.k_scales.shape,
+                                         self.k_pool.shape)
+            assert self.v_scales.shape == self.k_scales.shape
 
-    def update_pools(self, k_pool: jax.Array, v_pool: jax.Array) -> None:
+    def update_pools(self, k_pool: jax.Array, v_pool: jax.Array,
+                     k_scales=None, v_scales=None) -> None:
         self.k_pool = k_pool
         self.v_pool = v_pool
+        if k_scales is not None:
+            self.k_scales = k_scales
+            self.v_scales = v_scales
+
+
+def make_kv_cache(cfg: ModelConfig, serve: ServeConfig):
+    """Select and build the cache variant ``serve`` asks for: the
+    sharded composition when ``serve.mesh`` is set, prefix caching when
+    ``serve.prefix_cache``, and the quantized pools when
+    ``serve.kv_quant != "none"`` — all eight combinations compose.
+    Lazy imports keep the plain paged cache importable on its own."""
+    if serve.mesh is not None:
+        return ShardedPagedKVCache(cfg, serve)
+    quantized = getattr(serve, "kv_quant", "none") != "none"
+    if serve.prefix_cache:
+        if quantized:
+            from repro.quant.kv_cache import QuantizedPrefixCachingKVCache
+            return QuantizedPrefixCachingKVCache(cfg, serve)
+        from repro.serving.prefix_cache import PrefixCachingKVCache
+        return PrefixCachingKVCache(cfg, serve)
+    if quantized:
+        from repro.quant.kv_cache import QuantizedPagedKVCache
+        return QuantizedPagedKVCache(cfg, serve)
+    return PagedKVCache(cfg, serve)

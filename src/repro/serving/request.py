@@ -36,6 +36,7 @@ class Status(enum.Enum):
     DECODE = "decode"        # one token per engine step
     PREEMPTED = "preempted"  # evicted mid-flight; KV swapped to host, requeued
     FINISHED = "finished"    # evicted; slot and blocks returned
+    SHED = "shed"            # rejected at the door: deadline provably unmeetable
 
 
 @dataclasses.dataclass

@@ -177,6 +177,11 @@ class Scheduler:
         self.running: Dict[int, RequestState] = {}     # slot -> state
         self.free_slots: List[int] = list(range(max_slots - 1, -1, -1))
         self._admit_seq = 0                            # admission-order tiebreaker
+        # Measured decode ms/token (EMA over finished requests) — the
+        # service-rate estimate deadline-aware shedding reasons with.
+        # None until the first finish measures it: shedding never fires
+        # on guesses.
+        self._decode_ms_ema: Optional[float] = None
 
     # Legacy int attributes, now views over the registry (the engine's
     # run() reads the same counters through mark()/delta()).
@@ -332,6 +337,13 @@ class Scheduler:
         # records collect the states step()/finish() hand back
         st.status = Status.FINISHED
         st.finished_ms = clock_ms
+        if st.first_token_ms is not None and len(st.generated) > 1:
+            per_tok = ((clock_ms - st.first_token_ms)
+                       / (len(st.generated) - 1))
+            if per_tok > 0:
+                ema = self._decode_ms_ema
+                self._decode_ms_ema = (per_tok if ema is None
+                                       else 0.8 * ema + 0.2 * per_tok)
         m = self.obs.metrics
         m.counter("sched_finished_total").inc()
         m.counter("generated_tokens_total").inc(len(st.generated))
@@ -420,6 +432,56 @@ class Scheduler:
             self.preempt(victim, clock_ms)
             evicted += 1
         return evicted
+
+    # -- deadline-aware admission shedding (repro.serving.slo) ---------------
+
+    def shed_unmeetable(self, clock_ms: float) -> List[RequestState]:
+        """Reject waiting requests whose effective deadline is provably
+        unmeetable, instead of queueing work that can only miss.  Gated
+        on ``slo.shed`` (off by default — a shed request gets *no*
+        tokens) and on a *measured* decode rate: until the first finish
+        establishes ms/token, nothing is shed.
+
+        The proof is the most optimistic schedule the engine could give
+        the request: admitted right now, prefill at one chunk per step,
+        then its full ``max_new_tokens`` budget at the measured ms/token
+        (an early EOS is not knowable at the door — the SLO target is
+        stated for the full budget, as ``slo_tokens_per_s`` deadlines
+        are).  If even that finishes after the deadline, the request is
+        finished with :attr:`Status.SHED` and counted in
+        ``requests_shed_total``.  Deadline-free and ``PREEMPTED``
+        requests are never shed (a preempted request holds swapped KV —
+        its sunk work is worth more than the queue slot)."""
+        if (self.slo is None or not self.slo.shed
+                or self._decode_ms_ema is None):
+            return []
+        ms_tok = self._decode_ms_ema
+        chunk = 1
+        if self.kv_cache is not None:
+            chunk = self.kv_cache.serve.prefill_chunk
+        shed: List[RequestState] = []
+        keep: List[RequestState] = []
+        for st in self.waiting:
+            r = st.request
+            d = r.effective_deadline_ms
+            if (d is None or st.status is Status.PREEMPTED
+                    or r.arrival_ms > clock_ms):
+                keep.append(st)
+                continue
+            steps = -(-r.prompt_len // chunk) + r.max_new_tokens
+            if clock_ms + ms_tok * steps > d:
+                st.status = Status.SHED
+                st.finished_ms = clock_ms
+                m = self.obs.metrics
+                m.counter("requests_shed_total").inc()
+                self.obs.tracer.instant("shed", uid=r.uid, deadline_ms=d,
+                                        needed_ms=ms_tok * steps)
+                self.obs.request_finished(r.uid)
+                shed.append(st)
+            else:
+                keep.append(st)
+        self.waiting = keep
+        return shed
 
     # -- queries ------------------------------------------------------------
 

@@ -71,10 +71,18 @@ class SwapManager:
                  metrics=None):
         self.host_blocks = int(host_blocks) if host_blocks else cache.num_blocks
         layers, _, hkv, bs, hd = cache.k_pool.shape
-        dtype = np.dtype(cache.k_pool.dtype)      # bf16 via ml_dtypes
-        shape = (self.host_blocks, layers, hkv, bs, hd)
+        dtype = np.dtype(cache.k_pool.dtype)      # bf16 via ml_dtypes;
+        shape = (self.host_blocks, layers, hkv, bs, hd)   # int8 when quantized
         self._k_host = np.zeros(shape, dtype)
         self._v_host = np.zeros(shape, dtype)
+        # Quantized caches carry per-(layer, block, head) scale rows; the
+        # host copy holds them verbatim so swap-out -> restore is a byte
+        # identity — blocks are never re-quantized in flight.
+        self._quantized = cache.k_scales is not None
+        if self._quantized:
+            self._k_scale_host = np.zeros((self.host_blocks, layers, hkv),
+                                          np.float32)
+            self._v_scale_host = np.zeros_like(self._k_scale_host)
         self.allocator = BlockAllocator(self.host_blocks)
         self.records: Dict[int, SwapRecord] = {}  # uid -> live record
         if metrics is None:
@@ -110,6 +118,13 @@ class SwapManager:
             jnp.asarray(np.moveaxis(kh, 0, 1)))
         cache.v_pool = cache.v_pool.at[:, idx].set(
             jnp.asarray(np.moveaxis(vh, 0, 1)))
+        if self._quantized:
+            ksh = np.moveaxis(np.asarray(cache.k_scales[:, idx]), 1, 0)
+            cache.k_scales = cache.k_scales.at[:, idx].set(
+                jnp.asarray(np.moveaxis(ksh, 0, 1)))
+            vsh = np.moveaxis(np.asarray(cache.v_scales[:, idx]), 1, 0)
+            cache.v_scales = cache.v_scales.at[:, idx].set(
+                jnp.asarray(np.moveaxis(vsh, 0, 1)))
 
     # -- capacity ------------------------------------------------------------
 
@@ -147,6 +162,11 @@ class SwapManager:
                 np.asarray(cache.k_pool[:, idx]), 1, 0)[:n]
             self._v_host[host_ids] = np.moveaxis(
                 np.asarray(cache.v_pool[:, idx]), 1, 0)[:n]
+            if self._quantized:
+                self._k_scale_host[host_ids] = np.moveaxis(
+                    np.asarray(cache.k_scales[:, idx]), 1, 0)[:n]
+                self._v_scale_host[host_ids] = np.moveaxis(
+                    np.asarray(cache.v_scales[:, idx]), 1, 0)[:n]
         rec = SwapRecord(uid=uid, total_len=total_len,
                          context_len=context_len, num_blocks=len(blocks),
                          skip=skip, hashes=list(hashes),
@@ -176,6 +196,13 @@ class SwapManager:
         v = jnp.asarray(np.moveaxis(self._v_host[host_ids], 0, 1))
         cache.k_pool = cache.k_pool.at[:, dev_ids].set(k)
         cache.v_pool = cache.v_pool.at[:, dev_ids].set(v)
+        if self._quantized:
+            # scale rows ride along verbatim — no re-quantization on
+            # restore, the uploaded bytes decode exactly as stored
+            ks = jnp.asarray(np.moveaxis(self._k_scale_host[host_ids], 0, 1))
+            vs = jnp.asarray(np.moveaxis(self._v_scale_host[host_ids], 0, 1))
+            cache.k_scales = cache.k_scales.at[:, dev_ids].set(ks)
+            cache.v_scales = cache.v_scales.at[:, dev_ids].set(vs)
         self.metrics.counter("swap_ins_total").inc()
         self.metrics.counter("swap_restored_blocks_total").inc(n)
 

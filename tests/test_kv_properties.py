@@ -316,19 +316,22 @@ def test_free_on_the_wrong_shard_raises():
 
 
 def check_sharded_cache_sequence(data_shards, slots_per_shard, bs,
-                                 blocks_per_shard, ops):
+                                 blocks_per_shard, ops, *, kv_quant="none"):
     """ops: (kind, slot, amount); kind 0=allocate_slot, 1=ensure_capacity,
     2=truncate_slot, 3=free_slot against a ShardedPagedKVCache.  Slot
     ``s`` lives on shard ``s // slots_per_shard``; a host model of
     per-slot (reserved_len, cur_len) decides legality *per shard* — a
     request fits iff its owning shard has reservation headroom, however
-    much room the peers have."""
+    much room the peers have.  ``kv_quant`` runs the same sequence over
+    stacked int8 + scale pools; ``check_conservation`` then also asserts
+    the scale-pool/block-table bijection after every op."""
     from repro.serving.kv_cache import ShardedPagedKVCache
 
     max_slots = data_shards * slots_per_shard
     serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
                         max_len=max(blocks_per_shard * bs, 2),
                         num_blocks=data_shards * blocks_per_shard,
+                        kv_quant=kv_quant,
                         mesh=(("data", data_shards), ("expert", 1)))
     cache = ShardedPagedKVCache(_cfg(), serve)
     assert cache.num_shards == data_shards

@@ -200,7 +200,8 @@ def test_eviction_under_pressure_unpublishes():
 # Operation-sequence checker (randomised by test_kv_properties.py)
 # ---------------------------------------------------------------------------
 
-def check_prefix_sequence(max_slots, bs, num_blocks, ops):
+def check_prefix_sequence(max_slots, bs, num_blocks, ops, *,
+                          cache_cls=PrefixCachingKVCache, kv_quant="none"):
     """ops: (kind, slot, amount); kind 0=admit-with-prompt,
     1=grow+commit, 2=truncate (then diverge the unwritten tail),
     3=free_slot.  Prompts come from three tenant templates sharing a
@@ -213,11 +214,15 @@ def check_prefix_sequence(max_slots, bs, num_blocks, ops):
     and asserts the two safety properties sharing must never break: a
     matched prefix always holds exactly the requesting prompt's tokens,
     and a write coordinate never lands in a bound block, a refcount>1
-    block, or a published block."""
+    block, or a published block.  ``cache_cls``/``kv_quant`` run the
+    same sequence over a quantized variant — its extended
+    ``check_conservation`` asserts the scale-pool/block-table bijection
+    after every op."""
     serve = ServeConfig(max_slots=max_slots, kv_block_size=bs,
                         max_len=max(num_blocks * bs, 4),
-                        num_blocks=num_blocks, prefix_cache=True)
-    cache = PrefixCachingKVCache(_cfg(), serve)
+                        num_blocks=num_blocks, prefix_cache=True,
+                        kv_quant=kv_quant)
+    cache = cache_cls(_cfg(), serve)
     L = serve.max_len
     common = (np.arange(2 * bs, dtype=np.int64) * 7 % 61).astype(np.int32)
     templates = [

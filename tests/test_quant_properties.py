@@ -1,0 +1,148 @@
+"""Hypothesis property tests for the quantized KV-cache subsystem
+(repro.quant): the error-bound law of the quantize/dequantize round
+trip, the in-pool bound under interleaved partial-block rewrites, and
+the scale-pool/block-table bijection under the same randomised
+operation sequences test_kv_properties.py drives over the
+full-precision caches.
+
+Laws (see repro/quant/policy.py):
+
+* round trip — one quantize/dequantize pass is elementwise within
+  ``policy.error_bound(scale)`` of the input (scale/2 for int8: the
+  worst case is half a code step);
+* pool residency — a block's rows accrue one extra ``error_bound`` per
+  *scale growth* (rescaling re-rounds old codes), so after any write
+  sequence every resident row is within ``block_size * error_bound``;
+  a rewrite that does NOT grow the scale is a lossless bit identity;
+* bijection — every code-pool row has exactly one scale row under the
+  same (layer, block, kv_head) key, through admission / growth /
+  truncation / COW / eviction / free, per shard and stacked.
+
+Deterministic goldens and the engine-level identity matrix live in
+test_kv_quant.py; this module only adds the randomised search (plain
+``check_*`` helpers keep the invariants runnable without hypothesis).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.quant import check_quant_roundtrip, get_kv_quant
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+POLICIES = ["int8", "fp8"]
+
+finite = st.floats(min_value=-1e4, max_value=1e4,
+                   allow_nan=False, allow_infinity=False, width=32)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip error bound
+# ---------------------------------------------------------------------------
+
+@st.composite
+def arrays(draw):
+    n = draw(st.integers(1, 24))
+    vals = draw(st.lists(finite, min_size=n, max_size=n))
+    return np.asarray(vals, np.float32)
+
+
+@given(arrays(), st.sampled_from(POLICIES))
+@settings(**SETTINGS)
+def test_roundtrip_error_bound(x, name):
+    policy = get_kv_quant(name)
+    deq, scale, max_err = check_quant_roundtrip(x, policy)
+    assert deq.shape == x.shape
+    # absmax scaling: the largest-magnitude element maps to +-qmax, so
+    # its round trip is exact up to the bound; zeros stay zero exactly
+    assert float(jnp.abs(deq[x == 0]).max(initial=0.0)) == 0.0
+
+
+@given(st.sampled_from(POLICIES))
+@settings(**SETTINGS)
+def test_roundtrip_all_zero(name):
+    policy = get_kv_quant(name)
+    deq, scale, max_err = check_quant_roundtrip(np.zeros(8, np.float32), policy)
+    assert scale == 0.0 and max_err == 0.0
+
+
+# ---------------------------------------------------------------------------
+# quant_write_kv: in-pool error bound under interleaved partial writes
+# (the checker lives in test_kv_quant.py with the deterministic goldens
+# so it stays runnable without the hypothesis dependency)
+# ---------------------------------------------------------------------------
+
+from test_kv_quant import check_quant_write_sequence
+
+
+@st.composite
+def write_cases(draw):
+    bs = draw(st.sampled_from([2, 4]))
+    hkv, hd = 2, 2
+    name = draw(st.sampled_from(POLICIES))
+    n = draw(st.integers(1, 16))
+    writes = []
+    for _ in range(n):
+        blk = draw(st.integers(0, 3))
+        off = draw(st.integers(0, bs - 1))
+        vals = draw(st.lists(finite, min_size=hkv * hd, max_size=hkv * hd))
+        writes.append((blk, off, vals))
+    return bs, hkv, hd, name, writes
+
+
+@given(write_cases())
+@settings(**SETTINGS)
+def test_quant_write_interleavings(case):
+    check_quant_write_sequence(*case)
+
+
+# ---------------------------------------------------------------------------
+# Scale-pool / block-table bijection under the cache drivers
+# ---------------------------------------------------------------------------
+
+from test_kv_properties import check_sharded_cache_sequence
+from test_prefix_cache import check_prefix_sequence
+
+
+@st.composite
+def prefix_cases(draw):
+    max_slots = draw(st.integers(1, 4))
+    bs = draw(st.sampled_from([2, 4]))
+    num_blocks = draw(st.integers(2, 24))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(0, 512)),
+        max_size=50))
+    return max_slots, bs, num_blocks, ops
+
+
+@given(prefix_cases(), st.sampled_from(POLICIES))
+@settings(**SETTINGS)
+def test_quantized_prefix_interleavings(case, name):
+    from repro.quant.kv_cache import QuantizedPrefixCachingKVCache
+
+    max_slots, bs, num_blocks, ops = case
+    check_prefix_sequence(max_slots, bs, num_blocks, ops,
+                          cache_cls=QuantizedPrefixCachingKVCache,
+                          kv_quant=name)
+
+
+@st.composite
+def sharded_cases(draw):
+    data_shards = draw(st.sampled_from([1, 2]))
+    slots_per_shard = draw(st.integers(1, 2))
+    bs = draw(st.sampled_from([1, 4]))
+    blocks_per_shard = draw(st.integers(1, 12))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 7), st.integers(0, 256)),
+        max_size=40))
+    return data_shards, slots_per_shard, bs, blocks_per_shard, ops
+
+
+@given(sharded_cases())
+@settings(**SETTINGS)
+def test_quantized_sharded_interleavings(case):
+    check_sharded_cache_sequence(*case, kv_quant="int8")
